@@ -1,0 +1,41 @@
+"""Shared setup for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core.tasks import cnn_task, lm_task, mlp_task
+from repro.data.synthetic import federated_dataset
+
+# Synthetic stand-ins for the paper's dataset/model pairs (see DESIGN.md:
+# the container is offline; tasks are sized so relative comparisons hold).
+TASKS = {
+    "mlp_vector": ("vector", lambda: mlp_task(32, 10)),
+    "cnn_image": ("image", lambda: cnn_task(10, 1, 10, width=8)),
+    "lm_markov": ("lm", lambda: lm_task(64, d=32, seq=16)),
+}
+
+
+def make_setup(task_name: str, num_workers: int, seed: int = 0,
+               n_per_worker: int = 150):
+    kind, mk = TASKS[task_name]
+    rng = np.random.default_rng(seed)
+    kw = {"hw": 10, "n_per_worker": 100} if kind == "image" else         {"n_per_worker": n_per_worker}
+    data = federated_dataset(kind, num_workers, rng, **kw)
+    task = mk()
+    cfg = DeFTAConfig(num_workers=num_workers, avg_peers=4, num_sampled=2,
+                      local_epochs=5, seed=seed)
+    train = TrainConfig(learning_rate=0.05 if task_name != "lm_markov"
+                        else 0.1, batch_size=32)
+    return data, task, cfg, train
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

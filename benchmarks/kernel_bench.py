@@ -1,0 +1,61 @@
+"""Kernel micro-bench: us_per_call of the Pallas kernels (interpret mode on
+CPU — regression numbers, not TPU latencies) vs their jnp oracles."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention, gossip_mix, moe_router_topk
+from repro.kernels.ref import (flash_attention_ref, gossip_mix_ref,
+                               moe_router_topk_ref)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                       # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    P = jax.nn.softmax(jax.random.normal(key, (20, 20)), -1)
+    w = jax.random.normal(key, (20, 1 << 16))
+    rows.append(("gossip_mix_20x65k", _time(gossip_mix, P, w),
+                 _time(gossip_mix_ref, P, w)))
+
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    rows.append(("flash_attention_512", _time(flash_attention, q, q, q),
+                 _time(flash_attention_ref, q, q, q)))
+
+    logits = jax.random.normal(key, (2048, 64))
+    rows.append(("moe_router_2048x64",
+                 _time(lambda x: moe_router_topk(x, 6), logits),
+                 _time(lambda x: moe_router_topk_ref(x, 6), logits)))
+
+    from repro.kernels.ops import ssd_chunk
+    from repro.kernels.ref import ssd_chunk_ref
+    g, h, t, n, p2 = 4, 4, 128, 64, 64
+    C = jax.random.normal(key, (g, t, n))
+    B2 = jax.random.normal(jax.random.fold_in(key, 1), (g, t, n))
+    ac = -jnp.abs(jax.random.normal(key, (g, h, t))).cumsum(-1)
+    dt = jax.nn.softplus(jax.random.normal(key, (g, h, t)))
+    xx = jax.random.normal(key, (g, h, t, p2))
+    rows.append(("ssd_chunk_4x4x128",
+                 _time(ssd_chunk, C, B2, ac, dt, xx),
+                 _time(ssd_chunk_ref, C, B2, ac, dt, xx)))
+
+    for name, us, ref_us in rows:
+        print(f"kernel {name}: {us:.0f}us (ref {ref_us:.0f}us)")
+    return [dict(name=n, us_per_call=u, ref_us=r) for n, u, r in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Render §Dry-run and §Roofline tables for EXPERIMENTS.md from the
+dry-run JSONs (run after the sweep; idempotent)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir="experiments/dryrun", variants=False):
+    rows = {}
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("_")
+        is_variant = not base.endswith(("_single", "_multi"))
+        if is_variant != variants:
+            continue
+        with open(p) as f:
+            rows[base] = json.load(f)
+    return rows
+
+
+def render(out_dir="experiments/dryrun"):
+    rows = load(out_dir)
+    lines = []
+    hdr = ("| arch | shape | mesh | params(B) | opt | mb | peak GiB/dev | "
+           "t_comp | t_mem | t_coll | bneck | useful | gossip GB/chip |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 13)
+    def key(item):
+        r = item[1]
+        return (r["arch"], ORDER_SHAPES.index(r["shape"])
+                if r["shape"] in ORDER_SHAPES else 9,
+                r.get("mesh", ""))
+    for name, r in sorted(rows.items(), key=key):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"— | — | — | — | — | — | SKIP (see DESIGN.md) | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh')} | "
+                         f"FAILED | | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        g = r.get("gossip")
+        gossip = f"{g['collective_gbytes_per_chip']:.2f}" if g else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['params_b']:.1f} | {r['optimizer'][:4]} | "
+            f"{r.get('microbatches', 1)} | "
+            f"{r['memory']['peak_per_device_gb']:.2f} | "
+            f"{rf['t_compute']*1e3:.0f}ms | {rf['t_memory']*1e3:.0f}ms | "
+            f"{rf['t_collective']*1e3:.0f}ms | {rf['bottleneck'][:4]} | "
+            f"{rf['useful_ratio']:.2f} | {gossip} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render())

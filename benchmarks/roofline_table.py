@@ -1,0 +1,55 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (one row per
+arch × shape × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = "experiments/dryrun"
+
+
+def load(out_dir: str = OUT_DIR):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def markdown(rows):
+    hdr = ("| arch | shape | mesh | status | peak GiB/dev | t_comp ms | "
+           "t_mem ms | t_coll ms | bottleneck | useful |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{r.get('mesh','?')} | {r.get('status')} | "
+                         f"— | — | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['memory']['peak_per_device_gb']:.2f} | "
+            f"{rf['t_compute']*1e3:.1f} | {rf['t_memory']*1e3:.1f} | "
+            f"{rf['t_collective']*1e3:.1f} | {rf['bottleneck']} | "
+            f"{rf['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(out_dir: str = OUT_DIR):
+    rows = load(out_dir)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    failed = [r for r in rows if r.get("status") not in ("ok", "skipped")]
+    print(f"roofline_table: {len(ok)} ok, {len(skipped)} skipped, "
+          f"{len(failed)} failed")
+    for r in failed:
+        print("  FAILED:", r["arch"], r["shape"], r.get("error", ""))
+    print(markdown(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Benchmark aggregator — one function per paper table + the roofline and
+kernel benches. Prints ``name,us_per_call,derived`` CSV rows per the
+harness contract, plus the human-readable tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast|--full]
+
+--fast  : tiny epoch counts (CI smoke, ~2 min)
+default : moderate (≈15–30 min CPU)
+--full  : paper-scale epochs (hours)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="experiments/benchmarks.json")
+    args = ap.parse_args()
+    epochs = 8 if args.fast else (100 if args.full else 40)
+    # the CNN task is ~8x the CPU cost of the MLP: give it a smaller epoch
+    # budget at default settings (1-core container); --full restores parity
+    cnn_epochs = 8 if args.fast else (100 if args.full else 15)
+    worlds = (8,) if args.fast else (8, 14, 20)
+    ks = (1, 3) if args.fast else (1, 3, 5, 10, 20, 40)
+    tasks = ("mlp_vector",) if args.fast else ("mlp_vector",)
+
+    from benchmarks import (bias_analysis, kernel_bench, roofline_table,
+                            table2_performance, table3_robustness,
+                            table4_async)
+
+    results = {}
+    csv_rows = []
+
+    t0 = time.time()
+    results["bias"] = bias_analysis.run(worlds=(8, 14, 20, 40, 60))
+    csv_rows.append(("bias_analysis", (time.time() - t0) * 1e6,
+                     results["bias"][-1]["reduction"]))
+
+    t0 = time.time()
+    results["kernels"] = kernel_bench.run()
+    for r in results["kernels"]:
+        csv_rows.append((r["name"], r["us_per_call"], r["ref_us"]))
+
+    t0 = time.time()
+    results["table2"] = table2_performance.run(epochs=epochs, worlds=worlds,
+                                               tasks=tasks)
+    if not args.fast:  # one CNN world-size cell (task-difficulty effect)
+        results["table2_cnn"] = table2_performance.run(
+            epochs=epochs, worlds=(20,), tasks=("cnn_image",))
+    gap = sum(r["cfl_s"] - r["defta"] for r in results["table2"]) / \
+        len(results["table2"])
+    csv_rows.append(("table2_performance", (time.time() - t0) * 1e6, gap))
+
+    t0 = time.time()
+    results["table3"] = table3_robustness.run(
+        epochs=epochs, ks=ks, task_name="mlp_vector")
+    worst = min(r["acc"] for r in results["table3"]
+                if r["method"] == "defta")
+    csv_rows.append(("table3_robustness", (time.time() - t0) * 1e6, worst))
+
+    t0 = time.time()
+    results["table4"] = table4_async.run(epochs=epochs)
+    csv_rows.append(("table4_async", (time.time() - t0) * 1e6,
+                     results["table4"][2]["acc"] -
+                     results["table4"][0]["acc"]))
+
+    if os.path.isdir("experiments/dryrun"):
+        results["roofline"] = roofline_table.run()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 2: accuracy of CFL-F / CFL-S / DeFTA / DeFL across world
+sizes (8, 14, 20 workers). Claim validated: DeFTA ≈ CFL-S > DeFL, with the
+gap growing with world size (non-iid-ness)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import Timer, make_setup
+from repro.core.defta import evaluate, run_defta
+from repro.core.fedavg import evaluate_server, run_fedavg
+
+
+def run(epochs: int = 50, worlds=(8, 14, 20), tasks=("mlp_vector",
+                                                     "cnn_image")):
+    rows = []
+    for task_name in tasks:
+        for w in worlds:
+            data, task, cfg, train = make_setup(task_name, w)
+            key = jax.random.PRNGKey(0)
+            tx, ty = data["test_x"], data["test_y"]
+
+            with Timer() as t:
+                st = run_fedavg(key, task, cfg, train, data, epochs=epochs)
+                cfl_f = evaluate_server(task, st, tx, ty)
+                st = run_fedavg(key, task, cfg, train, data, epochs=epochs,
+                                sample_workers=2)
+                cfl_s = evaluate_server(task, st, tx, ty)
+                st, _, mal, _ = run_defta(key, task, cfg, train, data,
+                                          epochs=epochs)
+                defta_m, defta_s, _ = evaluate(task, st, tx, ty, mal)
+                cfg_defl = dataclasses.replace(cfg, aggregation="defl",
+                                               use_dts=False)
+                st, _, mal, _ = run_defta(key, task, cfg_defl, train, data,
+                                          epochs=epochs)
+                defl_m, defl_s, _ = evaluate(task, st, tx, ty, mal)
+            row = dict(task=task_name, workers=w, cfl_f=cfl_f, cfl_s=cfl_s,
+                       defta=defta_m, defta_std=defta_s, defl=defl_m,
+                       defl_std=defl_s, seconds=round(t.s, 1))
+            rows.append(row)
+            print(f"table2 {task_name} W={w}: CFL-F={cfl_f:.3f} "
+                  f"CFL-S={cfl_s:.3f} DeFTA={defta_m:.3f}±{defta_s:.2f} "
+                  f"DeFL={defl_m:.3f}±{defl_s:.2f} ({t.s:.0f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

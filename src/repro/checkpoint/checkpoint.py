@@ -1,0 +1,66 @@
+"""Pytree checkpointing: npz payload + json manifest (no orbax dependency).
+
+Layout:  <dir>/step_<n>/manifest.json + arrays.npz
+The manifest stores the flattened key paths so arbitrary nested dict/list
+pytrees round-trip exactly. Worker-stacked FL states and model params both
+go through the same path.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int) -> str:
+    d = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    keys, vals, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(np.asarray(v).dtype) for v in vals],
+        "shapes": [list(np.asarray(v).shape) for v in vals],
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return d
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(path)
+             if n.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, like: Any, step: int | None = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    keys, vals, treedef = _flatten_with_paths(like)
+    if keys != manifest["keys"]:
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{set(manifest['keys']) ^ set(keys)}")
+    restored = [data[f"a{i}"] for i in range(len(keys))]
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest["step"]

@@ -1,0 +1,15 @@
+"""DeFTA core — the paper's primary contribution.
+
+aggregation: outdegree-corrected mixing matrices + Markov/bias analysis
+dts:         decentralized trust system (confidence, cRELU, time machine)
+defta:       synchronous multi-worker engine (Algorithm 1)
+async_defta: asynchronous variant (§3.4)
+fedavg:      CFL-F / CFL-S centralized baselines
+topology:    directed p2p graphs
+gossip:      the P @ params mixing op (einsum | pallas backends)
+"""
+from repro.core import aggregation, dts, topology  # noqa: F401
+from repro.core.defta import run_defta, evaluate, init_state  # noqa: F401
+from repro.core.fedavg import run_fedavg, evaluate_server  # noqa: F401
+from repro.core.async_defta import run_async_defta  # noqa: F401
+from repro.core import secagg, peer_selection  # noqa: F401

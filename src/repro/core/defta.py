@@ -1,0 +1,255 @@
+"""Synchronous DeFTA engine (Algorithm 1) — simulation mode.
+
+All W workers are carried as stacked pytrees (leading axis W) and advanced
+by one jitted super-step per global epoch:
+
+    sample peers (DTS θ) → aggregate (outdegree-corrected P) → time-machine
+    check → local SGD epochs → DTS confidence update → backup
+
+Malicious workers broadcast ``aggregate + noise`` (the paper's attack
+model); they occupy slots in the stacked arrays but their training is
+irrelevant — only what they *send* matters.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core import dts as dts_mod
+from repro.core.aggregation import mixing_matrix
+from repro.core.gossip import mix_pytree
+from repro.core.tasks import Task
+from repro.core.topology import make_topology
+
+
+def tree_select(flag, a, b):
+    """Per-worker select: flag [W] bool; a/b stacked pytrees."""
+    def sel(x, y):
+        f = flag.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(f, x.astype(y.dtype), y)
+    return jax.tree.map(sel, a, b)
+
+
+def local_train_fn(task: Task, train: TrainConfig, local_epochs: int,
+                   dp_clip: float = 0.0, dp_sigma: float = 0.0):
+    """Returns f(key, params, x, y, mask) -> (params, mean_loss) running
+    ``local_epochs`` epochs of minibatch SGD. With ``dp_clip>0`` runs
+    DP-SGD (clip the minibatch gradient, add N(0, σ·clip/bs) noise) — the
+    paper's compatibility claim: DP composes with DeFTA untouched."""
+    bs = train.batch_size
+
+    def one_step(params, batch):
+        x, y, m, skey = batch
+        loss, g = jax.value_and_grad(task.loss)(params, x, y, m)
+        if dp_clip > 0:
+            gnorm = jnp.sqrt(sum(jnp.vdot(v, v).real
+                                 for v in jax.tree.leaves(g)) + 1e-12)
+            scale = jnp.minimum(1.0, dp_clip / gnorm)
+            leaves, tdef = jax.tree.flatten(g)
+            nkeys = jax.random.split(skey, len(leaves))
+            g = jax.tree.unflatten(tdef, [
+                v * scale + dp_sigma * dp_clip *
+                jax.random.normal(k, v.shape, v.dtype) / bs
+                for k, v in zip(nkeys, leaves)])
+        params = jax.tree.map(lambda p, gg: p - train.learning_rate * gg,
+                              params, g)
+        return params, loss
+
+    def run(key, params, x, y, mask):
+        n = x.shape[0]
+        steps_per_epoch = max(n // bs, 1)
+
+        def epoch(carry, ekey):
+            params = carry
+            pkey, nkey = jax.random.split(ekey)
+            perm = jax.random.permutation(pkey, n)
+            xs = x[perm][:steps_per_epoch * bs].reshape(
+                steps_per_epoch, bs, *x.shape[1:])
+            ys = y[perm][:steps_per_epoch * bs].reshape(steps_per_epoch, bs)
+            ms = mask[perm][:steps_per_epoch * bs].reshape(
+                steps_per_epoch, bs)
+            skeys = jax.random.split(nkey, steps_per_epoch)
+            params, losses = jax.lax.scan(
+                lambda p, b: one_step(p, b), params, (xs, ys, ms, skeys))
+            return params, losses.mean()
+
+        params, losses = jax.lax.scan(epoch, params,
+                                      jax.random.split(key, local_epochs))
+        return params, losses.mean()
+
+    return run
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DeFTAState:
+    params: Any                  # stacked [W, ...]
+    backup: Any                  # stacked [W, ...]
+    conf: jnp.ndarray            # [W, W]
+    best_loss: jnp.ndarray       # [W]
+    last_loss: jnp.ndarray       # [W]
+    key: jnp.ndarray
+    epoch: jnp.ndarray           # [W] per-worker epoch counters
+
+
+def init_state(key, task: Task, num_workers: int) -> DeFTAState:
+    keys = jax.random.split(key, num_workers + 1)
+    params = jax.vmap(task.init)(keys[:num_workers])
+    return DeFTAState(
+        params=params,
+        backup=params,
+        conf=jnp.zeros((num_workers, num_workers)),
+        best_loss=jnp.full((num_workers,), jnp.inf),
+        last_loss=jnp.zeros((num_workers,)),
+        key=keys[-1],
+        epoch=jnp.zeros((num_workers,), jnp.int32),
+    )
+
+
+def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                adj: np.ndarray, sizes: np.ndarray,
+                malicious: np.ndarray, *, gossip_backend: str = "einsum",
+                noise_scale: float = 200.0):
+    """Returns a jitted round(state, data) -> state super-step."""
+    w = adj.shape[0]
+    adj_j = jnp.asarray(adj)
+    sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
+    adj_self = adj | np.eye(w, dtype=bool)
+    outdeg = jnp.asarray(adj_self.sum(axis=0).astype(np.float32))
+    malicious_j = jnp.asarray(malicious)
+    ltrain = local_train_fn(task, train, cfg.local_epochs,
+                            dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
+
+    if cfg.aggregation == "defta":
+        col_w = sizes_j / outdeg
+    elif cfg.aggregation == "defl":
+        col_w = sizes_j
+    else:  # uniform gossip
+        col_w = jnp.ones_like(sizes_j)
+
+    @jax.jit
+    def round(state: DeFTAState, data):
+        key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
+
+        # ---- 1. peer sampling via DTS weights -------------------------
+        if cfg.use_dts:
+            theta = dts_mod.sample_weights(state.conf, adj_j,
+                                           cfg.crelu_slope)        # [W,W]
+        else:
+            theta = adj_j / jnp.maximum(adj_j.sum(1, keepdims=True), 1)
+        skeys = jax.random.split(k_sample, w)
+        sampled = jax.vmap(
+            lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
+        )(skeys, theta)                                            # [W,W]
+
+        # ---- 2. aggregation with outdegree-corrected weights ----------
+        mask = (sampled & adj_j) | jnp.eye(w, dtype=bool)
+        P = mask * col_w[None, :]
+        P = P / P.sum(axis=1, keepdims=True)
+        agg = mix_pytree(P, state.params, backend=gossip_backend)
+
+        # ---- 3. time machine: damage check on aggregated model --------
+        loss_agg = jax.vmap(task.loss)(agg, data["x"], data["y"],
+                                       data["mask"])
+        damaged = dts_mod.is_damaged(loss_agg, state.best_loss)
+        start = tree_select(damaged, state.backup, agg)
+
+        # ---- 4. local training (the compensation step included) -------
+        tkeys = jax.random.split(k_train, w)
+        trained, train_loss = jax.vmap(
+            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
+        )(tkeys, start, data["x"], data["y"], data["mask"])
+
+        # ---- 5. malicious workers emit aggregate + noise --------------
+        leaves, treedef = jax.tree.flatten(agg)
+        nkeys = jax.random.split(k_noise, len(leaves))
+        noise = jax.tree.unflatten(treedef, [
+            noise_scale * jax.random.normal(k, x.shape, x.dtype)
+            for k, x in zip(nkeys, leaves)])
+        poisoned = jax.tree.map(lambda a, n: a + n, agg, noise)
+        trained = tree_select(malicious_j, poisoned, trained)
+
+        # ---- 6. DTS confidence update (Algorithm 3) --------------------
+        loss_trust = jnp.where(damaged, dts_mod.DAMAGE_PENALTY,
+                               loss_agg - state.last_loss)
+        conf = state.conf - sampled * P * loss_trust[:, None]
+
+        improved = (loss_agg < state.best_loss) & ~damaged
+        backup = tree_select(improved, trained, state.backup)
+        best_loss = jnp.where(improved, loss_agg, state.best_loss)
+        last_loss = jnp.where(damaged, state.last_loss, loss_agg)
+
+        return DeFTAState(params=trained, backup=backup, conf=conf,
+                          best_loss=best_loss, last_loss=last_loss,
+                          key=key, epoch=state.epoch + 1)
+
+    return round
+
+
+def evaluate(task: Task, state: DeFTAState, test_x, test_y,
+             malicious: np.ndarray):
+    """Mean/std test accuracy across vanilla (non-malicious) workers."""
+    w = state.conf.shape[0]
+    accs = jax.vmap(lambda p: task.accuracy(
+        p, test_x, test_y, jnp.ones(test_x.shape[0])))(state.params)
+    accs = np.asarray(accs)[~malicious]
+    return float(accs.mean()), float(accs.std()), accs
+
+
+def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
+              *, epochs: int, num_malicious: int = 0,
+              gossip_backend: str = "einsum", eval_every: int = 0,
+              test_x=None, test_y=None):
+    """End-to-end driver. Malicious workers are appended after the vanilla
+    ones (paper §4.3: normal workers fixed, attackers newly joined)."""
+    w = cfg.num_workers + num_malicious
+    adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
+    malicious = np.zeros(w, bool)
+    malicious[cfg.num_workers:] = True
+    sizes = np.concatenate([
+        np.asarray(data["sizes"]),
+        np.full(num_malicious, int(np.mean(data["sizes"])))])
+
+    # malicious workers need data slots (unused) — pad stacked data
+    if num_malicious:
+        pad = lambda a: np.concatenate(
+            [a, np.repeat(a[-1:], num_malicious, 0)], 0)
+        data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
+                "mask": pad(data["mask"])}
+
+    state = init_state(key, task, w)
+    rnd = build_round(task, cfg, train, adj, sizes, malicious,
+                      gossip_backend=gossip_backend)
+    jdata = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("x", "y", "mask")}
+    history = []
+    for e in range(epochs):
+        state = rnd(state, jdata)
+        if eval_every and (e + 1) % eval_every == 0 and test_x is not None:
+            m, s, _ = evaluate(task, state, test_x, test_y, malicious)
+            history.append((e + 1, m, s))
+    return state, adj, malicious, history
+
+
+def global_model(state: DeFTAState, sizes, sample: int = 0, key=None):
+    """Paper §5.3: obtain the stable global model from a decentralized
+    cluster — connect to (a sample of) workers and average their models
+    with dataset-size weights  Σ_k (n_k / Σn) w_k."""
+    sizes = jnp.asarray(np.asarray(sizes, np.float32))
+    w = sizes.shape[0]
+    if sample and key is not None:
+        idx = jax.random.choice(key, w, (min(sample, w),), replace=False)
+        mask = jnp.zeros((w,)).at[idx].set(1.0)
+    else:
+        mask = jnp.ones((w,))
+    weights = mask * sizes
+    weights = weights / weights.sum()
+    return jax.tree.map(
+        lambda x: jnp.einsum("i,i...->...", weights.astype(x.dtype), x),
+        state.params)

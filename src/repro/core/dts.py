@@ -1,0 +1,93 @@
+"""Decentralized Trust System (paper §3.3, Algorithm 3).
+
+Every worker i keeps a confidence score c_{i→j} per peer j (init 0 =
+neutral). After each round it observes loss_trust = loss^t − loss_last
+(its OWN training-loss delta after aggregating the sampled peers' models)
+and updates
+
+    c_i ← c_i − m_i ∘ p_i · loss_trust          (Algorithm 3, line 12)
+
+where m_i is the 0-1 sampled mask and p_i the aggregation weights: peers
+whose inclusion made the loss go up lose confidence proportionally to how
+much of the aggregate they contributed. Sampling weights are
+
+    θ_i = softmax(cRELU(c_i))   with  cRELU(x) = x (x≤0), 0.2x (x>0)
+
+so bad peers are penalized steeply (constraint 1), good peers climb slowly
+together (constraint 2) and reliable peers stay near-equiprobable
+(constraint 3).
+
+The **time machine** (lines 1–4): back up the best-loss model; if a round
+yields a damaged model (non-finite loss or an explosion), restore the
+backup, run one compensation training step, and push loss_trust = +inf so
+every sampled peer of that round is maximally penalized (we clamp to a
+large finite value for numerics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DAMAGE_PENALTY = 1e3       # finite stand-in for the paper's +inf loss_trust
+EXPLOSION_FACTOR = 10.0    # loss > factor * best  => damaged
+
+
+def crelu(x, slope: float = 0.2):
+    """Paper Eq. 13 (piecewise: identity for x<=0, gentle slope above)."""
+    return jnp.where(x <= 0, x, slope * x)
+
+
+def sample_weights(conf, peer_mask, slope: float = 0.2):
+    """θ_i = softmax(cRELU(c_i)) over actual peers. conf: [...,W]; mask:
+    [...,W] bool. Non-peers get 0."""
+    z = crelu(conf, slope)
+    z = jnp.where(peer_mask, z, -jnp.inf)
+    return jax.nn.softmax(z, axis=-1)
+
+
+def sample_peers(key, theta, num_sampled: int):
+    """Gumbel top-k sample without replacement by weights θ. theta: [W];
+    returns boolean mask [W] with ≤ num_sampled True entries (fewer only if
+    the peer set itself is smaller)."""
+    g = jax.random.gumbel(key, theta.shape)
+    score = jnp.where(theta > 0, jnp.log(theta + 1e-20) + g, -jnp.inf)
+    k = min(num_sampled, theta.shape[-1])
+    thresh = jax.lax.top_k(score, k)[0][..., -1]
+    return (score >= thresh) & (theta > 0)
+
+
+def is_damaged(loss, best_loss):
+    return ~jnp.isfinite(loss) | (loss > EXPLOSION_FACTOR *
+                                  jnp.maximum(best_loss, 1e-8) + 10.0)
+
+
+def update_confidence(conf, sampled_mask, agg_weights, loss_trust):
+    """Algorithm 3 line 12: c ← c − m ∘ p · loss_trust."""
+    return conf - sampled_mask * agg_weights * loss_trust
+
+
+def dts_step(state, loss, sampled_mask, agg_weights, slope: float = 0.2):
+    """One φ(·) evaluation for a single worker.
+
+    state: dict(conf [W], best_loss [], last_loss [])
+    Returns (new_state, theta [W], damaged bool, loss_trust).
+    """
+    damaged = is_damaged(loss, state["best_loss"])
+    loss_trust = jnp.where(damaged, DAMAGE_PENALTY, loss - state["last_loss"])
+    conf = update_confidence(state["conf"], sampled_mask, agg_weights,
+                             loss_trust)
+    new_state = {
+        "conf": conf,
+        "best_loss": jnp.where(damaged, state["best_loss"],
+                               jnp.minimum(state["best_loss"], loss)),
+        "last_loss": jnp.where(damaged, state["last_loss"], loss),
+    }
+    return new_state, damaged, loss_trust
+
+
+def init_dts_state(num_workers: int):
+    return {
+        "conf": jnp.zeros((num_workers,)),
+        "best_loss": jnp.asarray(jnp.inf),
+        "last_loss": jnp.asarray(0.0),
+    }

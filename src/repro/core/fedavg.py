@@ -1,0 +1,129 @@
+"""Centralized FL baselines: CFL-F (FedAvg over all workers) and CFL-S
+(FedAvg over a sampled subset), plus an optional FedAdam server optimizer
+(Reddi et al.) — demonstrating DeFTA's "compatible with FedAvg algorithms"
+claim at the baseline level.
+
+No defense mechanism: a single malicious worker (sending server+noise)
+collapses training, as in paper Table 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core.defta import local_train_fn, tree_select
+from repro.core.tasks import Task
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FedAvgState:
+    server: Any
+    opt: Any                    # FedAdam moments (or None)
+    key: jnp.ndarray
+
+
+def init_state(key, task: Task, server_opt: str = "none") -> FedAvgState:
+    k1, k2 = jax.random.split(key)
+    server = task.init(k1)
+    opt = None
+    if server_opt == "fedadam":
+        opt = {"m": jax.tree.map(jnp.zeros_like, server),
+               "v": jax.tree.map(jnp.zeros_like, server)}
+    return FedAvgState(server=server, opt=opt, key=k2)
+
+
+def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                sizes: np.ndarray, malicious: np.ndarray, *,
+                sample_workers: int = 0, server_opt: str = "none",
+                server_lr: float = 1.0, noise_scale: float = 200.0):
+    """sample_workers=0 -> CFL-F; >0 -> CFL-S with that many sampled."""
+    w = len(sizes)
+    sizes_j = jnp.asarray(sizes, jnp.float32)
+    malicious_j = jnp.asarray(malicious)
+    ltrain = local_train_fn(task, train, cfg.local_epochs)
+
+    @jax.jit
+    def round(state: FedAvgState, data):
+        key, k_sel, k_train, k_noise = jax.random.split(state.key, 4)
+        bcast = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (w,) + x.shape), state.server)
+
+        tkeys = jax.random.split(k_train, w)
+        trained, _ = jax.vmap(
+            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
+        )(tkeys, bcast, data["x"], data["y"], data["mask"])
+
+        # malicious: send server + noise
+        leaves, treedef = jax.tree.flatten(bcast)
+        nkeys = jax.random.split(k_noise, len(leaves))
+        poisoned = jax.tree.unflatten(treedef, [
+            x + noise_scale * jax.random.normal(k, x.shape, x.dtype)
+            for k, x in zip(nkeys, leaves)])
+        trained = tree_select(malicious_j, poisoned, trained)
+
+        # aggregation weights
+        if sample_workers:
+            sel = jax.random.choice(k_sel, w, (sample_workers,),
+                                    replace=False)
+            wmask = jnp.zeros((w,)).at[sel].set(1.0)
+        else:
+            wmask = jnp.ones((w,))
+        aw = wmask * sizes_j
+        aw = aw / aw.sum()
+        new_server = jax.tree.map(
+            lambda x: jnp.einsum("i,i...->...", aw.astype(x.dtype), x),
+            trained)
+
+        if server_opt == "fedadam":
+            b1, b2, eps = 0.9, 0.99, 1e-3
+            delta = jax.tree.map(lambda n, s: n - s, new_server,
+                                 state.server)
+            m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d,
+                             state.opt["m"], delta)
+            v = jax.tree.map(lambda vv, d: b2 * vv + (1 - b2) * d * d,
+                             state.opt["v"], delta)
+            new_server = jax.tree.map(
+                lambda s, mm, vv: s + server_lr * mm / (jnp.sqrt(vv) + eps),
+                state.server, m, v)
+            return FedAvgState(server=new_server, opt={"m": m, "v": v},
+                               key=key)
+        return FedAvgState(server=new_server, opt=state.opt, key=key)
+
+    return round
+
+
+def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
+               *, epochs: int, num_malicious: int = 0,
+               sample_workers: int = 0, server_opt: str = "none"):
+    w = cfg.num_workers + num_malicious
+    malicious = np.zeros(w, bool)
+    malicious[cfg.num_workers:] = True
+    sizes = np.concatenate([
+        np.asarray(data["sizes"]),
+        np.full(num_malicious, int(np.mean(data["sizes"])))])
+    if num_malicious:
+        pad = lambda a: np.concatenate(
+            [a, np.repeat(a[-1:], num_malicious, 0)], 0)
+        data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
+                "mask": pad(data["mask"])}
+    state = init_state(key, task, server_opt)
+    rnd = build_round(task, cfg, train, sizes, malicious,
+                      sample_workers=sample_workers, server_opt=server_opt)
+    jdata = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("x", "y", "mask")}
+    for _ in range(epochs):
+        state = rnd(state, jdata)
+    return state
+
+
+def evaluate_server(task: Task, state: FedAvgState, test_x, test_y):
+    acc = task.accuracy(state.server, jnp.asarray(test_x),
+                        jnp.asarray(test_y),
+                        jnp.ones(test_x.shape[0]))
+    return float(acc)

@@ -1,0 +1,54 @@
+"""Secure aggregation (Bonawitz et al.) composed with DeFTA — the paper's
+compatibility claim (§1: "fully compatible with all previous algorithms for
+FedAvg (i.e., DP, SecAgg)").
+
+Pairwise additive masking: for every directed peer pair (i, j) sharing an
+edge, both derive a common mask M_ij from a shared seed; sender i transmits
+w_i + Σ_j s_ij·M_ij with s_ij = +1 if i<j else −1. Masks cancel in any
+aggregation that includes both endpoints with equal weight — and for
+weighted gossip we use the receiver-side unmask variant: the receiver knows
+the pair seed and subtracts the mask before weighting, so the *wire* never
+carries a raw model, yet aggregation is exact.
+
+This is the simulation-fidelity version (seeds exchanged out of band =
+the Connect step); the cryptographic key agreement is out of scope, the
+*system* property — masked models on the wire, exact aggregates — is what
+composes with DeFTA and what we test.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pair_seed(i: int, j: int, round_: int, salt: int = 0x5eca) -> int:
+    a, b = (i, j) if i < j else (j, i)
+    return (a * 1_000_003 + b * 7919 + round_ * 104_729 + salt) % (2**31)
+
+
+def mask_for(shape_tree, i: int, j: int, round_: int):
+    """Deterministic pairwise mask pytree (same for both endpoints)."""
+    key = jax.random.PRNGKey(pair_seed(i, j, round_))
+    leaves, treedef = jax.tree.flatten(shape_tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        jax.random.normal(k, x.shape, x.dtype) for k, x in zip(keys, leaves)])
+
+
+def mask_model(params, sender: int, receiver: int, round_: int):
+    """What ``sender`` puts on the wire toward ``receiver``."""
+    m = mask_for(params, sender, receiver, round_)
+    return jax.tree.map(jnp.add, params, m)
+
+
+def unmask_model(wire, sender: int, receiver: int, round_: int):
+    """Receiver-side exact unmask (shared pair seed)."""
+    m = mask_for(wire, sender, receiver, round_)
+    return jax.tree.map(jnp.subtract, wire, m)
+
+
+def secure_roundtrip(params, sender: int, receiver: int, round_: int):
+    """mask → wire → unmask; returns (wire, recovered)."""
+    wire = mask_model(params, sender, receiver, round_)
+    return wire, unmask_model(wire, sender, receiver, round_)

@@ -1,0 +1,5 @@
+from repro.data.partition import dirichlet_partition, shard_partition  # noqa
+from repro.data.synthetic import (  # noqa
+    make_classification, make_image_classification, make_lm_stream,
+    federated_dataset,
+)

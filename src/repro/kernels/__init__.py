@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel ships three surfaces:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrappers with padding/layout glue
+  ref.py    — pure-jnp oracles (tests assert allclose, interpret=True)
+"""
+from repro.kernels.ops import (  # noqa: F401
+    gossip_mix, flash_attention, moe_router_topk, ssd_chunk,
+)

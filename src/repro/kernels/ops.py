@@ -1,0 +1,72 @@
+"""jit'd public wrappers around the Pallas kernels: shape padding, layout
+glue, and CPU-interpret defaults (TPU is the target; this container
+validates via interpret=True).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+from repro.kernels.gossip_mix import gossip_mix_pallas
+from repro.kernels.moe_router import moe_router_pallas
+
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def gossip_mix(P, w, *, block_f: int = 2048, interpret: bool = True):
+    """P: [W, W]; w: [W, F] (any F — padded internally)."""
+    wp, pad = _pad_to(w, 1, block_f)
+    out = gossip_mix_pallas(P, wp, block_f=block_f, interpret=interpret)
+    return out[:, :w.shape[1]] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q,k,v: [B, H, S, D]. Pads S to a block multiple; padded kv rows are
+    masked out by the causal mask (they sit after every real query)."""
+    b, h, s, d = q.shape
+    bq = min(block_q, max(16, 1 << (s - 1).bit_length() if s < block_q else block_q))
+    bk = min(block_k, bq)
+    flat = lambda x: x.reshape(b * h, s, d)
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    qf, pad = _pad_to(qf, 1, bq)
+    kf, _ = _pad_to(kf, 1, bq)
+    vf, _ = _pad_to(vf, 1, bq)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 block_q=bq, block_k=bk,
+                                 interpret=interpret)
+    out = out[:, :s] if pad else out
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def moe_router_topk(logits, k: int, *, block_t: int = 256,
+                    interpret: bool = True):
+    """logits: [T, E] -> (gates [T, k] fp32, idx [T, k] int32)."""
+    lp, pad = _pad_to(logits, 0, block_t)
+    gates, idx = moe_router_pallas(lp, k=k, block_t=block_t,
+                                   interpret=interpret)
+    if pad:
+        gates, idx = gates[:logits.shape[0]], idx[:logits.shape[0]]
+    return gates, idx
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(C, B, acum, dt, x, *, interpret: bool = True):
+    """Fused SSD intra-chunk op. See ssd_chunk.py for shapes."""
+    return ssd_chunk_pallas(C, B, acum, dt, x, interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(P, w):
+    """P: [W, W] row-stochastic mixing; w: [W, F] stacked flat params."""
+    return jnp.einsum("ij,jf->if", P, w)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: [B, H, S, D] (same S). Full-matrix reference attention."""
+    b, h, s, d = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def moe_router_topk_ref(logits, k: int):
+    """logits: [T, E]. Returns (gates [T,k] fp32 normalized, idx [T,k])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    gates = vals / (vals.sum(-1, keepdims=True) + 1e-9)
+    return gates, idx
+
+
+def ssd_chunk_ref(C, B, acum, dt, x):
+    """C,B: [G,T,N]; acum,dt: [G,H,T]; x: [G,H,T,P] -> y [G,H,T,P].
+    Intra-chunk SSD term (models/ssm.py y_diag, chunk-local view)."""
+    scores = jnp.einsum("gqn,gkn->gqk", C.astype(jnp.float32),
+                        B.astype(jnp.float32))
+    decay = jnp.exp(acum[..., :, None] - acum[..., None, :])  # [G,H,T,T]
+    t = C.shape[1]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    w = jnp.where(mask[None, None], scores[:, None] * decay *
+                  dt[..., None, :], 0.0)
+    return jnp.einsum("ghqk,ghkp->ghqp", w,
+                      x.astype(jnp.float32)).astype(x.dtype)

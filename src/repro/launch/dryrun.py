@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent by lowering
+and compiling every (architecture × input shape × mesh) combination on the
+production mesh, with ShapeDtypeStruct inputs (no allocation), and dump
+memory/cost/roofline data for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES, ModelConfig, ShapeConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding_rules import base_rules
+from repro.launch.steps import (abstract_state, build_decode_step,
+                                build_fl_train_step, build_prefill_step,
+                                build_train_step, input_specs)
+from repro.sharding import logical_rules
+
+# shapes skipped per DESIGN.md (noted, not silent)
+SKIPS = {
+    ("whisper-tiny", "long_500k"):
+        "decoder capped at 448 learned positions; 512k-token whisper decode "
+        "is not a meaningful computation (DESIGN.md §shape-skips)",
+}
+
+# archs needing the sliding-window variant for long_500k (full-attention
+# families; window makes decode memory/compute linear)
+SLIDING_WINDOW_FOR_LONG = 4096
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm")
+
+
+def pick_optimizer(cfg: ModelConfig) -> str:
+    # Adafactor above ~25B params: Adam moments would not fit HBM.
+    return "adafactor" if cfg.param_count() > 25e9 else "adam"
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      fl_pods: int) -> int:
+    """Grad-accumulation depth: big models need it to bound per-step
+    activation memory (EXPERIMENTS.md §Dry-run notes the policy)."""
+    if shape.mode != "train":
+        return 1
+    if cfg.param_count() < 10e9:
+        return 1
+    b_pod = shape.global_batch // max(fl_pods, 1)
+    return max(1, min(8, b_pod // 16))
+
+
+def pick_moe_strategy(cfg: ModelConfig, variant: str = "baseline") -> str:
+    # expert-parallel shard_map whenever the model has routed experts
+    if cfg.moe is None:
+        return "grouped"
+    return "eplocal_fp8" if "fp8" in variant else "eplocal"
+
+
+def effective_config(arch: str, shape: ShapeConfig,
+                     variant: str = "baseline") -> ModelConfig:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and cfg.family in FULL_ATTENTION_FAMILIES:
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_FOR_LONG)
+    if "noremat" in variant:
+        cfg = dataclasses.replace(cfg, remat=False)
+    return cfg
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               variant: str = "baseline", optimizer: str = "",
+               accum_dtype: str = "float32", fl: bool = True,
+               verbose: bool = True):
+    """Lower + compile one (arch, shape, mesh). Returns result dict.
+
+    ``fl=False`` with multi_pod lowers the FedAvg-across-pods baseline:
+    params replicated over pods, per-step gradient all-reduce crossing the
+    pod boundary (the centralized comparison point for §Perf)."""
+    shape = SHAPES[shape_name]
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+    cfg = effective_config(arch, shape, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = base_rules(multi_pod, variant=variant)
+    opt_name = optimizer or pick_optimizer(cfg)
+    fl_pods = mesh.shape.get("pod", 0) if (multi_pod and fl and
+                                           shape.mode == "train") else 0
+    if fl_pods:
+        # inside the vmap(spmd_axis_name="pod") body, constraints must not
+        # mention the pod axis — vmap supplies it for the batched dims.
+        rules = {**rules, "batch": ("data",)}
+
+    moe_strategy = pick_moe_strategy(cfg, variant)
+    microbatches = pick_microbatches(cfg, shape, fl_pods)
+    if "mb16" in variant:
+        microbatches = max(microbatches, 16)
+
+    t0 = time.time()
+    with mesh, logical_rules(mesh, rules):
+        specs = input_specs(cfg, shape, mesh, rules, fl_pods=fl_pods)
+        if shape.mode == "train":
+            params_sds, opt_sds, opt = abstract_state(
+                cfg, opt_name, mesh=mesh, rules=rules, fl_pods=fl_pods)
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            adt = jnp.dtype(accum_dtype)
+            if fl_pods:
+                step_fn = build_fl_train_step(
+                    cfg, opt, moe_strategy=moe_strategy,
+                    microbatches=microbatches, spmd_axis_name="pod",
+                    accum_dtype=adt)
+            else:
+                step_fn = build_train_step(cfg, opt,
+                                           moe_strategy=moe_strategy,
+                                           microbatches=microbatches,
+                                           accum_dtype=adt)
+            lowered = jax.jit(step_fn, donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, step_sds, specs)
+        elif shape.mode == "prefill":
+            params_sds, _, _ = abstract_state(cfg, "sgd", mesh=mesh,
+                                              rules=rules)
+            step_fn = build_prefill_step(cfg, moe_strategy=moe_strategy)
+            lowered = jax.jit(step_fn).lower(params_sds, specs)
+        else:  # decode
+            params_sds, _, _ = abstract_state(cfg, "sgd", mesh=mesh,
+                                              rules=rules)
+            dec_strategy = moe_strategy if cfg.moe is not None else "dense"
+            step_fn = build_decode_step(cfg, moe_strategy=dec_strategy)
+            args = [params_sds, specs["tokens"], specs["cache"],
+                    specs["pos"]]
+            kw = {}
+            if cfg.is_encoder_decoder:
+                kw["enc_out"] = specs["enc_out"]
+            lowered = jax.jit(step_fn, donate_argnums=(2,)).lower(*args, **kw)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # DeFTA gossip step (the paper's cross-pod aggregation): lower+compile
+    # separately — it runs every K train steps, not inside train_step.
+    gossip_info = None
+    if fl_pods:
+        from repro.launch.steps import build_gossip_step
+        from repro.launch.roofline import collective_bytes as _cb
+        with mesh, logical_rules(mesh, rules):
+            mix_sds = jax.ShapeDtypeStruct((fl_pods, fl_pods), jnp.float32)
+            g_lowered = jax.jit(build_gossip_step(cfg),
+                                donate_argnums=(0,)).lower(params_sds,
+                                                           mix_sds)
+            g_compiled = g_lowered.compile()
+        g_cost = g_compiled.cost_analysis()
+        if isinstance(g_cost, (list, tuple)):
+            g_cost = g_cost[0]
+        g_coll = _cb(g_compiled.as_text())
+        gossip_info = {
+            "collective_gbytes_per_chip": sum(g_coll.values()) / 1e9,
+            "collective_breakdown": {k: v / 1e9 for k, v in g_coll.items()},
+            "t_collective_s": sum(g_coll.values()) / rf.ICI_BW,
+            "flops_dev": float(g_cost.get("flops", 0.0)),
+        }
+
+    mem = compiled.memory_analysis()
+    # scan-aware correction: XLA counts while bodies once (see costing.py)
+    from repro.launch.costing import corrected_cost, train_cost
+    # FL steps are pod-independent: cost them on the single-pod submesh
+    # (the 512-dev mesh with an unsharded pod axis makes GSPMD replicate).
+    cost_mesh = make_production_mesh(multi_pod=False) if fl_pods else mesh
+    with cost_mesh, logical_rules(cost_mesh, rules):
+        if shape.mode == "train":
+            flops_dev, bytes_dev, coll_dev = train_cost(
+                cfg, shape, cost_mesh, rules, optimizer=opt_name,
+                microbatches=microbatches, fl_pods=fl_pods,
+                moe_strategy=moe_strategy)
+        else:
+            flops_dev, bytes_dev, coll_dev = corrected_cost(
+                compiled, cfg, shape, mesh, rules, fl_pods=fl_pods,
+                moe_strategy=moe_strategy if cfg.moe else "grouped")
+    peak_bytes = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0) + \
+        getattr(mem, "output_size_in_bytes", 0) - \
+        getattr(mem, "alias_size_in_bytes", 0)
+    roof = rf.analyze(arch, shape_name, "multi" if multi_pod else "single",
+                      chips, {"flops": flops_dev, "bytes accessed": bytes_dev},
+                      "", rf.model_flops_estimate(cfg, shape),
+                      peak_bytes, coll_override=coll_dev)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips, "optimizer": opt_name,
+        "variant": variant,
+        "accum_dtype": accum_dtype,
+        "params_b": cfg.param_count() / 1e9,
+        "microbatches": microbatches,
+        "moe_strategy": moe_strategy,
+        "active_params_b": cfg.param_count(active_only=True) / 1e9,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "arg_gb": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+            "out_gb": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+            "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 2**30,
+            "peak_per_device_gb": peak_bytes / 2**30,
+        },
+        "roofline": roof.to_dict(),
+        "gossip": gossip_info,
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × "
+              f"{'multi' if multi_pod else 'single'}] "
+              f"compile={t_compile:.0f}s "
+              f"peak/dev={peak_bytes / 2**30:.2f}GiB "
+              f"flops/dev={flops_dev / 1e12:.2f}T "
+              f"bottleneck={roof.bottleneck} "
+              f"(c={roof.t_compute*1e3:.1f}ms m={roof.t_memory*1e3:.1f}ms "
+              f"x={roof.t_collective*1e3:.1f}ms)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--fedavg-baseline", action="store_true",
+                    help="multi-pod without the FL pod axis (params "
+                    "replicated across pods; grad AR crosses pods)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            if a == "paper-small":
+                continue
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        pairs.append((args.arch, args.shape))
+
+    for arch, shape in pairs:
+        tag = f"{arch}_{shape}_{'multi' if args.multi_pod else 'single'}"
+        if args.fedavg_baseline:
+            tag += "_fedavg"
+        if args.variant != "baseline":
+            tag += f"_{args.variant}"
+        out_path = os.path.join(args.out, tag + ".json")
+        try:
+            res = run_dryrun(arch, shape, multi_pod=args.multi_pod,
+                             variant=args.variant,
+                             optimizer=args.optimizer,
+                             accum_dtype=args.accum_dtype,
+                             fl=not args.fedavg_baseline)
+        except Exception as e:  # record failures; they are bugs to fix
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+Single-pod: (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod:  (pod=2, data=16, model=16)     = 512 chips (2 pods)
+
+The ``pod`` axis is DeFTA's worker axis: each pod is one federated worker
+holding its own model replica; cross-pod traffic happens only in the gossip
+step (sampled peers, outdegree-corrected weights), never inside train_step.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 512 if multi_pod else 256
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, have {len(devices)} — "
+            "run via launch/dryrun.py (it sets "
+            "--xla_force_host_platform_device_count=512 before jax init)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Tiny mesh for CPU tests (requires xla_force_host_platform_device_count
+    set by the test session)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,141 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch × shape × mesh), per training/serving step:
+
+    compute    = HLO_FLOPs_total   / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_total   / (chips × 819e9  B/s HBM)
+    collective = collective_bytes  / (chips × 50e9   B/s ICI link)
+
+``cost_analysis()`` supplies flops / bytes of the SPMD-partitioned
+per-device module (multiplied back to cluster totals); collective bytes are
+parsed from the partitioned HLO text — the sum of result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict
+
+# v5e-class hardware constants (from the assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like ``bf16[16,512,128]``."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) summed over the module.
+
+    Matches lines like
+      ``%ag = bf16[8,128]{1,0} all-gather(...)``
+      ``%ar = (f32[8], f32[8]) all-reduce(...)``
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(?:-start|-done)?\(", rhs):
+                kind = c
+                break
+        if kind is None or f"{kind}-done(" in rhs:
+            continue  # count starts once, not their dones
+        # result type is everything before the op name
+        type_part = rhs.split(kind)[0]
+        bytes_ = sum(shape_bytes(s) for s in
+                     re.findall(r"[a-z0-9]+\[[\d,]*\]", type_part))
+        out[kind] += bytes_
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops_total: float          # cluster-total
+    hlo_gbytes_total: float
+    collective_gbytes_per_chip: float
+    collective_breakdown: Dict[str, float]
+    t_compute: float                 # seconds
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_gflops: float              # 6·N·D (or 2·N·D serving)
+    useful_ratio: float              # model_flops / hlo_flops
+    bytes_per_device: float          # peak memory from memory_analysis
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(arch, shape, mesh_name, chips, cost, hlo_text, model_flops,
+            peak_bytes, coll_override=None):
+    """cost: compiled.cost_analysis() dict (per-device module)."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    flops_total = flops_dev * chips
+    bytes_total = bytes_dev * chips
+    coll = coll_override if coll_override is not None \
+        else collective_bytes(hlo_text)
+    coll_dev = float(sum(coll.values()))
+
+    t_comp = flops_total / (chips * PEAK_FLOPS)
+    t_mem = bytes_total / (chips * HBM_BW)
+    t_coll = coll_dev / ICI_BW          # per-chip link bytes / link bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops_total=flops_total / 1e9,
+        hlo_gbytes_total=bytes_total / 1e9,
+        collective_gbytes_per_chip=coll_dev / 1e9,
+        collective_breakdown={k: v / 1e9 for k, v in coll.items()},
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_gflops=model_flops / 1e9,
+        useful_ratio=(model_flops / flops_total) if flops_total else 0.0,
+        bytes_per_device=peak_bytes,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for prefill, 2·N_active·B for decode
+    (N_active = top-k expert params for MoE; attention cache reads are
+    captured by the memory term, not counted as useful FLOPs here)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch   # decode: one token

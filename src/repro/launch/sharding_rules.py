@@ -1,0 +1,103 @@
+"""Logical-axis -> mesh-axis rules per architecture family and execution
+mode, and helpers to resolve full param/cache/input sharding trees.
+
+Baseline (paper-faithful) rules. The hillclimbed variants live in
+EXPERIMENTS.md §Perf and are selected with ``variant=``.
+
+Notes on the fallback chain: ``resolve_spec`` demotes any dim whose size is
+not divisible by its mesh axes, and skips mesh axes already used by an
+earlier dim. Listing both ``kv_heads -> model`` and ``head_dim -> model``
+therefore gives GQA models with few kv heads an automatic fallback to
+head-dim (contraction) sharding — e.g. kimi (kv=8 < model=16, head_dim=112
+divides 16) shards attention over head_dim; deepseek (kv=16) shards over
+kv_heads and leaves head_dim whole.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.sharding import logical_rules, resolve_spec
+
+
+def base_rules(multi_pod: bool, *, variant: str = "baseline") -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    rules = {
+        # activations
+        "batch": batch,
+        "act_seq": "model",        # Megatron-SP style sequence sharding
+        "seq": None,
+        # params
+        "vocab": "model",
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": "model",       # fallback when kv_heads indivisible
+        "experts": "data",         # expert parallelism
+        "experts_r": None,
+        "expert_mlp": "model",
+        "d_inner": "model",
+        "layers": None,            # scan axis stays unsharded
+        "worker": "pod",           # FL worker stacking (multi-pod)
+    }
+    if "no_seqshard" in variant:
+        rules["act_seq"] = None
+    if "expert_model" in variant:
+        rules["experts"] = "model"
+        rules["expert_mlp"] = None
+    if "pure_dp" in variant:
+        # beyond-paper lever for small archs: tensor parallelism at TP=16
+        # drowns a <1B model in collectives; run 256-way pure data parallel
+        # instead (batch over BOTH mesh axes, params fully replicated).
+        for k in ("vocab", "mlp", "heads", "kv_heads", "head_dim",
+                  "d_inner", "expert_mlp"):
+            rules[k] = None
+        rules["batch"] = batch + ("model",)
+        rules["act_seq"] = None
+    # ZeRO-1: optimizer moments sharded over the data axis on their first
+    # replicated dim (hillclimb lever for the memory term).
+    rules["zero"] = "data" if "zero1" in variant else None
+    return rules
+
+
+def zero1_axes(axes_tree, sds_tree, rules):
+    """Rewrite opt-state axes: the first dim that resolves to NO mesh axis
+    under ``rules`` (and is divisible by the zero axis) becomes 'zero'
+    (ZeRO-1 optimizer-state sharding)."""
+    def unresolved(name):
+        return name is None or rules.get(name) is None
+
+    def one(a, s):
+        a = list(a)
+        for i, name in enumerate(a):
+            if unresolved(name) and s.shape[i] > 1:
+                a[i] = "zero"
+                break
+        return tuple(a)
+    return jax.tree.map(one, axes_tree, sds_tree,
+                        is_leaf=lambda v: isinstance(v, tuple) and all(
+                            isinstance(x, (str, type(None))) for x in v))
+
+
+def sharding_tree(mesh, rules, axes_tree, shape_tree):
+    """Resolve a tree of logical-axis tuples into NamedShardings, demoting
+    indivisible dims (shape-aware)."""
+    def one(axes, sds):
+        with logical_rules(mesh, rules):
+            spec = resolve_spec(axes, sds.shape)
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda v: isinstance(v, tuple) and all(
+                            isinstance(x, (str, type(None))) for x in v))
+
+
+def with_sharding(sds_tree, shard_tree):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shard_tree)

@@ -1,0 +1,134 @@
+"""Production training driver.
+
+Two modes:
+* single-pod:  standard data+tensor-parallel training of one model.
+* multi-pod (``--fl``): DeFTA across pods — each pod is a federated worker
+  with its own model replica and data stream; every ``--gossip-every``
+  steps the pods exchange params via the outdegree-corrected gossip step
+  and update DTS confidence scores from their own loss deltas.
+
+On this CPU container use tiny configs (e.g. --arch paper-small --debug-mesh)
+— the full meshes are exercised by dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-small")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--fl", action="store_true",
+                    help="DeFTA-across-pods mode")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--gossip-every", type=int, default=4)
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="2x2(x pods) host-device mesh for CPU")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    args = ap.parse_args()
+
+    if args.debug_mesh:
+        import os
+        n = 4 * (args.pods if args.fl else 1)
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.config import ShapeConfig, reduced
+    from repro.configs import get_config
+    from repro.core.aggregation import mixing_matrix
+    from repro.core.topology import make_topology
+    from repro.data.loader import TokenBatcher
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.sharding_rules import base_rules
+    from repro.launch.steps import (build_fl_train_step, build_gossip_step,
+                                    build_train_step, input_specs)
+    from repro.models import model as model_mod
+    from repro.optim import make_optimizer
+    from repro.sharding import logical_rules
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    opt = make_optimizer(args.optimizer, args.lr)
+    pods = args.pods if args.fl else 0
+
+    mesh = make_debug_mesh(pods=pods if args.fl else 0) if args.debug_mesh \
+        else None
+    rules = base_rules(multi_pod=bool(pods)) if mesh else {}
+    batcher = TokenBatcher(cfg.vocab_size, args.seq, args.batch)
+
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(key, cfg)
+    opt_state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+
+    ctx = logical_rules(mesh, rules) if mesh else _nullcontext()
+    with (mesh if mesh else _nullcontext()), ctx:
+        if args.fl:
+            stack = lambda t: jax.tree.map(
+                lambda x: jnp.stack([x] * pods), t)
+            params, opt_state = stack(params), stack(opt_state)
+            fl_step = jax.jit(build_fl_train_step(cfg, opt),
+                              donate_argnums=(0, 1))
+            gossip = jax.jit(build_gossip_step(cfg))
+            adj = make_topology("dense", pods, pods - 1)
+            sizes = np.full(pods, args.batch)
+            P = jnp.asarray(mixing_matrix(adj, sizes, "defta"),
+                            jnp.float32)
+            for i in range(args.steps):
+                b = batcher.batch_at(i)
+                batch = {k: jnp.asarray(v).reshape(
+                    pods, args.batch // pods, -1) for k, v in b.items()}
+                t0 = time.time()
+                params, opt_state, step, losses = fl_step(
+                    params, opt_state, step, batch)
+                if (i + 1) % args.gossip_every == 0:
+                    params = gossip(params, P)
+                print(f"step {i:4d} losses="
+                      f"{[round(float(x), 4) for x in losses]} "
+                      f"({time.time() - t0:.2f}s)"
+                      + ("  [gossip]" if (i + 1) % args.gossip_every == 0
+                         else ""))
+        else:
+            tstep = jax.jit(build_train_step(cfg, opt),
+                            donate_argnums=(0, 1))
+            for i in range(args.steps):
+                b = batcher.batch_at(i)
+                batch = {k: jnp.asarray(v) for k, v in b.items()}
+                t0 = time.time()
+                params, opt_state, step, loss = tstep(params, opt_state,
+                                                      step, batch)
+                print(f"step {i:4d} loss={float(loss):.4f} "
+                      f"({time.time() - t0:.2f}s)")
+
+    if args.checkpoint_dir:
+        from repro.checkpoint import save_checkpoint
+        path = save_checkpoint(args.checkpoint_dir,
+                               {"params": params, "opt": opt_state},
+                               int(step))
+        print("checkpoint saved:", path)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

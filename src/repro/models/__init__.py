@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    init_params, param_axes, forward, loss_fn, init_cache, decode_step,
+)

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k router with
+load-balance auxiliary loss.
+
+Two dispatch strategies:
+
+* ``dense``   — every token through every expert (exact; oracle + tiny smoke).
+* ``grouped`` — GShard-style capacity dispatch WITHOUT the [T,E,C] one-hot:
+                tokens are scatter-packed into an [E, C, D] buffer by
+                (expert, rank-within-expert), batch-matmul'd against the
+                expert stack, and gathered back. FLOPs scale with
+                k·T·capacity_factor instead of E·T, and the buffer shards
+                cleanly (E over the expert-parallel axis, D/F over model).
+                Overflow tokens are dropped (standard), underflow slots are
+                zero. Fully differentiable (scatter/gather transpose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Builder
+from repro.sharding import constrain
+
+
+def init_moe(b: Builder, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_expert, m.num_experts
+    b.normal("router", (d, e), ("embed", "experts_r"))
+    b.normal("wi", (e, d, f), ("experts", "embed", "expert_mlp"))
+    b.normal("wg", (e, d, f), ("experts", "embed", "expert_mlp"))
+    b.normal("wo", (e, f, d), ("experts", "expert_mlp", "embed"))
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        b.normal("shared_wi", (d, fs), ("embed", "mlp"))
+        b.normal("shared_wg", (d, fs), ("embed", "mlp"))
+        b.normal("shared_wo", (fs, d), ("mlp", "embed"))
+
+
+def router_probs(params, x):
+    """x: [T, D] -> router probabilities [T, E] (fp32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def load_balance_loss(probs, expert_index, num_experts):
+    """Switch-transformer aux loss: E * sum_e f_e * P_e."""
+    t = probs.shape[0]
+    onehot = jax.nn.one_hot(expert_index, num_experts, dtype=jnp.float32)
+    f = onehot.sum(axis=(0, 1)) / t            # fraction routed per expert
+    p = probs.mean(axis=0)                     # mean router prob per expert
+    return num_experts * jnp.sum(f * p)
+
+
+def _shared(params, x):
+    h = jnp.einsum("td,df->tf", x, params["shared_wi"])
+    g = jnp.einsum("td,df->tf", x, params["shared_wg"])
+    return jnp.einsum("tf,fd->td", jax.nn.silu(g) * h, params["shared_wo"])
+
+
+def moe_dense(params, cfg: ModelConfig, x):
+    """Exact all-experts formulation. x: [T, D] -> ([T, D], aux_loss)."""
+    m = cfg.moe
+    probs, _ = router_probs(params, x)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)          # [T,k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    h = jnp.einsum("td,edf->tef", x, params["wi"])
+    g = jnp.einsum("td,edf->tef", x, params["wg"])
+    y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, params["wo"])
+    combine = jnp.zeros(probs.shape, x.dtype)
+    combine = combine.at[jnp.arange(x.shape[0])[:, None], gate_idx].set(
+        gate_vals.astype(x.dtype))
+    y = jnp.einsum("te,ted->td", combine, y_all)
+    if m.num_shared_experts:
+        y = y + _shared(params, x)
+    return y, load_balance_loss(probs, gate_idx, m.num_experts)
+
+
+def moe_grouped(params, cfg: ModelConfig, x, capacity_factor: float = 1.25):
+    """Capacity-packed dispatch. x: [T, D] -> ([T, D], aux_loss)."""
+    m = cfg.moe
+    t, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = max(int(capacity_factor * k * t / e), 1)
+    # round capacity to a lane-friendly multiple of 8
+    cap = (cap + 7) // 8 * 8
+
+    probs, _ = router_probs(params, x)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                # [T,k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    aux = load_balance_loss(probs, gate_idx, e)
+
+    # rank of each (token, k) within its expert, via one-hot-free cumsum:
+    flat_e = gate_idx.reshape(-1)                                # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # [T*k, E]
+    rank = jnp.cumsum(onehot, axis=0) - 1                        # pos in expert
+    rank = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                            # drop -> pad
+
+    # scatter-pack tokens into [E, cap+1, D] (last slot is the trash bin)
+    tok = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].add(x[tok])
+    buf = buf[:, :cap]
+    buf = constrain(buf, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, "experts", None, "expert_mlp")
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    y_buf = constrain(y_buf, "experts", None, None)
+
+    # gather back and combine with gate weights (dropped tokens get 0)
+    y_tok = y_buf[flat_e, jnp.minimum(slot, cap - 1)]            # [T*k, D]
+    w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok].add(y_tok * w[:, None])
+    if m.num_shared_experts:
+        y = y + _shared(params, x)
+    return y, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x, strategy: str = "grouped"):
+    """x: [B, S, D] -> ([B, S, D], aux_loss).
+
+    strategies: dense (exact oracle) | grouped (single-device capacity
+    dispatch) | eplocal (shard_map expert parallelism — production)."""
+    if strategy.startswith("eplocal"):
+        from repro.models.moe_eplocal import moe_eplocal
+        return moe_eplocal(params, cfg, x,
+                           a2a_fp8=strategy.endswith("fp8"))
+    b_, s, d = x.shape
+    flat = x.reshape(b_ * s, d)
+    if strategy == "dense":
+        y, aux = moe_dense(params, cfg, flat)
+    else:
+        y, aux = moe_grouped(params, cfg, flat)
+    return y.reshape(b_, s, d), aux

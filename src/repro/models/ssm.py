@@ -1,0 +1,202 @@
+"""Mamba2 block via SSD (state-space duality), chunked scan [arXiv:2405.21060].
+
+TPU adaptation: the SSD formulation is exactly the one that maps to the MXU —
+intra-chunk work is dense batched matmuls over (chunk x chunk) and
+(chunk x d_state) tiles, and the only sequential piece is a cheap
+inter-chunk state recurrence (lax.scan over S/chunk steps). This replaces
+the CUDA selective-scan kernel of Mamba-1 with matmul-dominated compute.
+
+Layout: x [B, S, D] -> in_proj -> z (gate), xBC (conv'd), dt.
+Heads: H = d_inner / head_dim; single B/C group (n_groups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Builder, rms_norm
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(b: Builder, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    d_proj = 2 * d_inner + 2 * s.d_state + n_heads   # z, xBC, dt
+    b.normal("in_proj", (d, d_proj), ("embed", "d_inner"))
+    b.normal("conv_w", (s.d_conv, conv_dim), (None, "d_inner"), scale=0.1)
+    b.zeros("conv_b", (conv_dim,), ("d_inner",))
+    b.const("A_log", jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+            ("heads",))
+    b.zeros("D", (n_heads,), ("heads",))
+    b.zeros("dt_bias", (n_heads,), ("heads",))
+    b.ones("norm", (d_inner,), ("d_inner",))
+    b.normal("out_proj", (d_inner, d), ("d_inner", "embed"))
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * s.d_state],
+                           axis=-1)
+    return z, xBC, dt
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD. x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B,C: [b,S,N]; D: [H].
+    Returns y: [b,S,H,P] and final state [b,H,P,N].
+    """
+    b_, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b_, nc, chunk, h, p)
+    dtc = dt.reshape(b_, nc, chunk, h)
+    Bc = B.reshape(b_, nc, chunk, n)
+    Cc = C.reshape(b_, nc, chunk, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]          # [b,nc,q,h] (<0)
+    dA = jnp.moveaxis(dA, -1, 2)                           # [b,nc,h,q]
+    dA_cumsum = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks): quadratic attention-like term
+    L = jnp.exp(_segsum(dA))                               # [b,nc,h,q,q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)         # [b,nc,q,k]
+    y_diag = jnp.einsum("bcqk,bchqk,bckh,bckhp->bcqhp", scores, L, dtc, xc)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(dA_cumsum[..., -1:] - dA_cumsum)  # [b,nc,h,q]
+    states = jnp.einsum("bckn,bchk,bckh,bckhp->bchpn",
+                        Bc, decay_states, dtc, xc)           # [b,nc,h,p,n]
+
+    # 3. inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(dA_cumsum[..., -1])                # [b,nc,h]
+
+    def step(carry, inp):
+        st, dec = inp                                        # [b,h,p,n],[b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit prev state
+
+    init = jnp.zeros((b_, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,h,p,n]
+
+    # 4. inter-chunk output: y_off = C · (decay_in * prev_state)
+    state_decay_in = jnp.exp(dA_cumsum)                      # [b,nc,h,q]
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                       Cc, state_decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b_, s, h, p)
+    y = y + x * D[None, None, :, None]
+    return y, final
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d. xBC: [B,S,C]; conv_w: [K,C].
+    If conv_state [B,K-1,C] given (decode), prepend it; else left-pad zeros.
+    Returns (out [B,S,C], new_state [B,K-1,C])."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state
+    full = jnp.concatenate([pad, xBC], axis=1)               # [B,S+K-1,C]
+    out = sum(full[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(k))
+    out = jax.nn.silu(out + conv_b)
+    new_state = full[:, -(k - 1):] if k > 1 else pad
+    return out, new_state
+
+
+def ssm_block(params, cfg: ModelConfig, x):
+    """Training/prefill forward. x: [B,S,D] -> [B,S,D]."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xs = xs.reshape(*xs.shape[:2], n_heads, s_cfg.head_dim)
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    # pad seq to a chunk multiple (padded tokens have dt>0 but their outputs
+    # are sliced away and, being at the tail, never influence real tokens)
+    s_len = xs.shape[1]
+    chunk = min(s_cfg.chunk_size, s_len)
+    pad = (-s_len) % chunk
+    if pad:
+        padw = [(0, 0), (0, pad)]
+        xs = jnp.pad(xs, padw + [(0, 0), (0, 0)])
+        dt = jnp.pad(dt, padw + [(0, 0)])
+        B = jnp.pad(B, padw + [(0, 0)])
+        C = jnp.pad(C, padw + [(0, 0)])
+    y, _ = ssd_scan(xs.astype(jnp.float32), dt,
+                    params["A_log"].astype(jnp.float32),
+                    B.astype(jnp.float32), C.astype(jnp.float32),
+                    params["D"].astype(jnp.float32), chunk)
+    y = y[:, :s_len]
+    y = y.reshape(*y.shape[:2], d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dt),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def ssm_cache_axes():
+    return {"conv": ("batch", None, "d_inner"),
+            "ssm": ("batch", "heads", None, None)}
+
+
+def ssm_decode_step(params, cfg: ModelConfig, x, cache):
+    """x: [B,1,D] -> ([B,1,D], new_cache). Exact recurrent SSD update."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 cache["conv"])
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,1,H]
+    xs = xs.reshape(xs.shape[0], n_heads, s_cfg.head_dim)             # [B,H,P]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # [H]
+    dA = jnp.exp(dt[:, 0, :] * A[None, :])                            # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0, :], B[:, 0].astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    state = cache["ssm"] * dA[..., None, None] + dBx                  # [B,H,P,N]
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": state}

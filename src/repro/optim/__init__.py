@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    make_optimizer, sgd, adam, adafactor, OptState,
+)
+from repro.optim.schedules import cosine_schedule, warmup_linear  # noqa: F401

@@ -1,0 +1,141 @@
+"""Optimizers (no optax dependency): SGD(+momentum), AdamW, and Adafactor
+(factored second moments — the only optimizer whose state fits for the
+1T-param dry-runs; see EXPERIMENTS.md §Roofline memory terms).
+
+API:
+    opt = make_optimizer("adam", lr=1e-3)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+OptState = Any
+
+
+def _tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0):
+    def init(params):
+        if momentum:
+            return {"mu": _tree_map(jnp.zeros_like, params)}
+        return {}
+
+    def update(params, grads, state, step):
+        del step
+        if weight_decay:
+            grads = _tree_map(lambda g, p: g + weight_decay * p, grads,
+                              params)
+        if momentum:
+            mu = _tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+            params = _tree_map(lambda p, m: p - lr * m, params, mu)
+            return params, {"mu": mu}
+        params = _tree_map(lambda p, g: (p - lr * g).astype(p.dtype),
+                           params, grads)
+        return params, state
+
+    return Optimizer("sgd", init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    """AdamW. Moments in fp32 regardless of param dtype (production
+    convention; dominates optimizer memory in the roofline)."""
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": _tree_map(f32, params), "v": _tree_map(f32, params),
+                }
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = _tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                      state["m"], grads)
+        v = _tree_map(lambda v_, g: b2 * v_ +
+                      (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+
+        def upd(p, m_, v_):
+            step_ = m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        params = _tree_map(upd, params, m, v)
+        return params, {"m": m, "v": v}
+
+    return Optimizer("adam", init, update)
+
+
+def adafactor(lr: float, eps: float = 1e-30, decay: float = 0.8):
+    """Factored second-moment estimator (Shazeer & Stern). For matrices+
+    the state is one row vector + one col vector instead of the full
+    matrix — O(n+m) vs O(nm); essential for the kimi-k2 1T dry-run."""
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vc.mean(axis=-1)[..., None, None],
+                                       eps))
+                upd_ = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd_ = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS<=1) for stability
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return params, {"f": new_state}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

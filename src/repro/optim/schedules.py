@@ -1,0 +1,25 @@
+"""LR schedules as pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_linear(base_lr: float, warmup: int, total: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        wu = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        decay = jnp.maximum(0.0, 1.0 - step / jnp.maximum(total, 1))
+        return base_lr * wu * decay
+    return f
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        wu = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * wu * cos
+    return f

@@ -1,0 +1,92 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a rules table maps logical names to mesh axes. Outside a mesh context the
+annotations are no-ops, so the same model code runs in CPU smoke tests and
+in the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "rules"):
+        _state.rules = None
+        _state.mesh = None
+    return _state
+
+
+@contextlib.contextmanager
+def logical_rules(mesh: Optional[Mesh], rules: dict):
+    """Install a mesh + logical->mesh-axis rules for ``constrain``/``spec``.
+
+    ``rules`` maps logical axis name -> mesh axis name, tuple of mesh axis
+    names, or None (replicated).
+    """
+    s = _ctx()
+    prev = (s.rules, s.mesh)
+    s.rules, s.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        s.rules, s.mesh = prev
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def resolve_spec(logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Tuple[int, ...]] = None) -> Optional[P]:
+    """Resolve logical axes -> PartitionSpec under the current rules.
+
+    If ``shape`` is given, any dim not divisible by its mesh-axis product is
+    demoted to replicated (GSPMD requires even sharding for our purposes and
+    uneven shards would silently pad).
+    """
+    s = _ctx()
+    if s.rules is None or s.mesh is None:
+        return None
+    spec = []
+    used = set()
+    for i, name in enumerate(logical_axes):
+        axis = s.rules.get(name) if name is not None else None
+        if axis is not None:
+            key = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+            if used & set(key):
+                axis = None  # a mesh axis may appear only once in a spec
+            elif shape is not None and shape[i] % _mesh_axis_size(s.mesh, axis):
+                axis = None
+            else:
+                used |= set(key)
+        spec.append(tuple(axis) if isinstance(axis, list) else axis)
+    return P(*spec)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical names; no-op without rules."""
+    spec = resolve_spec(logical_axes, x.shape)
+    if spec is None:
+        return x
+    s = _ctx()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(s.mesh, spec))
+
+
+def named_sharding(logical_axes, shape=None) -> Optional[NamedSharding]:
+    spec = resolve_spec(logical_axes, shape)
+    if spec is None:
+        return None
+    return NamedSharding(_ctx().mesh, spec)

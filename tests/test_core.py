@@ -1,0 +1,160 @@
+"""Unit tests for the paper's core: aggregation formula (Theorem 3.3),
+DTS (Algorithm 3), topology properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import dts, topology
+
+
+def _setup(n=12, k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    adj = topology.make_topology("random_kout", n, k, seed)
+    sizes = rng.integers(50, 400, size=n)
+    return adj, sizes
+
+
+# ---------------------------------------------------------------------------
+# Aggregation / Markov (paper §3.2)
+# ---------------------------------------------------------------------------
+
+def test_mixing_matrix_row_stochastic():
+    adj, sizes = _setup()
+    for scheme in ("defta", "defl", "uniform"):
+        P = agg.mixing_matrix(adj, sizes, scheme)
+        np.testing.assert_allclose(P.sum(1), 1.0, atol=1e-12)
+        assert (P >= 0).all()
+
+
+def test_defta_less_biased_than_defl():
+    """Corollary 3.3.1/3.3.2: outdegree correction shrinks the stationary
+    bias vs FedAvg's dataset-proportional average."""
+    wins = 0
+    for seed in range(10):
+        adj, sizes = _setup(seed=seed)
+        b_defta = agg.aggregation_bias(adj, sizes, "defta")
+        b_defl = agg.aggregation_bias(adj, sizes, "defl")
+        wins += b_defta < b_defl
+    assert wins >= 8, wins
+
+
+def test_theorem_3_3_residual_zero_when_weights_exact():
+    """On a REGULAR graph (equal outdegrees) with equal sizes, defta weights
+    satisfy the unbiasedness condition exactly."""
+    n = 10
+    adj = topology.ring(n, 3)
+    sizes = np.full(n, 100)
+    resid = agg.theorem_3_3_residual(adj, sizes, "defta")
+    np.testing.assert_allclose(resid, 0.0, atol=1e-9)
+
+
+def test_ring_uniform_stationary():
+    n = 8
+    adj = topology.ring(n, 2)
+    sizes = np.full(n, 64)
+    P = agg.mixing_matrix(adj, sizes, "defta")
+    pi = agg.stationary(P)
+    np.testing.assert_allclose(pi, 1.0 / n, atol=1e-8)
+
+
+def test_stationary_converges_to_fedavg_weights_in_expectation():
+    """Average the per-instance stationary distribution over many random
+    topologies: defta's mean bias → ~0 (the paper's in-expectation claim)."""
+    n = 12
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(50, 400, size=n)
+    pi_target = agg.fedavg_pi(sizes)
+    rows = []
+    for seed in range(40):
+        adj = topology.make_topology("random_kout", n, 4, seed)
+        P = agg.mixing_matrix(adj, sizes, "defta")
+        rows.append(agg.stationary(P)[0])
+    mean_bias_defta = np.abs(np.mean(rows, 0) - pi_target).max()
+    rows_defl = []
+    for seed in range(40):
+        adj = topology.make_topology("random_kout", n, 4, seed)
+        P = agg.mixing_matrix(adj, sizes, "defl")
+        rows_defl.append(agg.stationary(P)[0])
+    mean_bias_defl = np.abs(np.mean(rows_defl, 0) - pi_target).max()
+    assert mean_bias_defta < mean_bias_defl
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+def test_topologies_shape_and_degree():
+    for kind in ("ring", "dense", "random_kout", "erdos"):
+        adj = topology.make_topology(kind, 15, 4, seed=1)
+        assert adj.shape == (15, 15)
+        assert not adj.diagonal().any()
+        assert (adj.sum(1) >= 1).all()
+
+
+def test_ring_strongly_connected():
+    assert topology.is_strongly_connected(topology.ring(9, 1))
+    # a graph with an absorbing node is not strongly connected
+    adj = topology.ring(9, 1)
+    adj[:, 0] = False            # nobody receives from 0... 0 unreachable
+    assert not topology.is_strongly_connected(adj)
+
+
+def test_outdegrees_count_receivers():
+    adj = np.zeros((4, 4), bool)
+    adj[1, 0] = adj[2, 0] = adj[3, 0] = True   # everyone receives from 0
+    d = topology.outdegrees(adj)
+    assert d[0] == 3 and d[1] == 1  # clamped min 1
+
+
+# ---------------------------------------------------------------------------
+# DTS (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def test_crelu_piecewise():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    y = dts.crelu(x, 0.2)
+    np.testing.assert_allclose(y, [-2.0, -0.5, 0.0, 0.1, 0.4], atol=1e-7)
+
+
+def test_sample_weights_constraints():
+    """The three θ constraints: bad peers suppressed, good peers roughly
+    equal, non-peers zero."""
+    conf = jnp.asarray([0.0, -5.0, 3.0, 3.5, 0.0])
+    mask = jnp.asarray([True, True, True, True, False])
+    theta = dts.sample_weights(conf, mask)
+    assert theta[4] == 0.0
+    assert theta[1] < 0.01                      # constraint 1
+    ratio = theta[3] / theta[2]
+    assert ratio < 1.2                          # constraint 3 (≈ equal)
+    np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-6)
+
+
+def test_sample_peers_respects_weights():
+    theta = jnp.asarray([0.5, 0.5, 0.0, 0.0])
+    counts = np.zeros(4)
+    for i in range(50):
+        m = dts.sample_peers(jax.random.PRNGKey(i), theta, 1)
+        counts += np.asarray(m)
+    assert counts[2] == 0 and counts[3] == 0
+    assert counts[0] > 10 and counts[1] > 10
+
+
+def test_damage_detection():
+    assert bool(dts.is_damaged(jnp.asarray(jnp.nan), jnp.asarray(1.0)))
+    assert bool(dts.is_damaged(jnp.asarray(jnp.inf), jnp.asarray(1.0)))
+    assert bool(dts.is_damaged(jnp.asarray(1e9), jnp.asarray(1.0)))
+    assert not bool(dts.is_damaged(jnp.asarray(1.5), jnp.asarray(1.0)))
+
+
+def test_confidence_update_direction():
+    conf = jnp.zeros(3)
+    sampled = jnp.asarray([1.0, 1.0, 0.0])
+    weights = jnp.asarray([0.5, 0.5, 0.0])
+    worse = dts.update_confidence(conf, sampled, weights, 2.0)   # loss rose
+    better = dts.update_confidence(conf, sampled, weights, -2.0)
+    assert (worse[:2] < 0).all() and worse[2] == 0
+    assert (better[:2] > 0).all()

@@ -1,0 +1,104 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:           # hypothesis is optional in this container
+    HAVE_HYP = False
+
+from repro.core import aggregation as agg
+from repro.core import dts, topology
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+if HAVE_HYP:
+    world = st.integers(min_value=3, max_value=24)
+    seeds = st.integers(min_value=0, max_value=10_000)
+
+    @given(world, seeds, st.sampled_from(["ring", "random_kout", "erdos",
+                                          "dense"]))
+    @settings(max_examples=40, deadline=None)
+    def test_mixing_matrix_always_row_stochastic(n, seed, kind):
+        rng = np.random.default_rng(seed)
+        adj = topology.make_topology(kind, n, min(4, n - 1), seed)
+        sizes = rng.integers(1, 1000, size=n)
+        for scheme in ("defta", "defl", "uniform"):
+            P = agg.mixing_matrix(adj, sizes, scheme)
+            assert np.allclose(P.sum(1), 1.0, atol=1e-9)
+            assert (P >= -1e-12).all()
+            # zero where no edge (and no self):
+            mask = adj | np.eye(n, dtype=bool)
+            assert (P[~mask] == 0).all()
+
+    @given(world, seeds)
+    @settings(max_examples=30, deadline=None)
+    def test_gossip_preserves_weighted_mean(n, seed):
+        """π-weighted mean of worker params is invariant under W <- P W when
+        π is P's stationary distribution — the conservation law behind
+        Theorem 3.3."""
+        rng = np.random.default_rng(seed)
+        adj = topology.make_topology("random_kout", n, min(3, n - 1), seed)
+        sizes = rng.integers(1, 100, size=n)
+        P = agg.mixing_matrix(adj, sizes, "defta")
+        pi = agg.stationary(P)[0]          # left eigvec (row of lim P^t)
+        w = rng.normal(size=(n, 7))
+        w2 = P @ w
+        np.testing.assert_allclose(pi @ w2, pi @ w, atol=1e-8)
+
+    @given(st.lists(st.floats(min_value=-50, max_value=50), min_size=2,
+                    max_size=32), st.floats(min_value=0.05, max_value=0.9))
+    @settings(max_examples=50, deadline=None)
+    def test_crelu_monotone_and_continuous(xs, slope):
+        x = jnp.asarray(xs, jnp.float32)
+        y = dts.crelu(x, slope)
+        order = jnp.argsort(x)
+        assert bool(jnp.all(jnp.diff(y[order]) >= -1e-6))   # monotone
+        assert float(jnp.abs(dts.crelu(jnp.asarray(0.0), slope))) == 0.0
+
+    @given(world, seeds, st.integers(min_value=1, max_value=5))
+    @settings(max_examples=30, deadline=None)
+    def test_sample_peers_cardinality_and_support(n, seed, k):
+        rng = np.random.default_rng(seed)
+        mask = rng.random(n) < 0.7
+        if not mask.any():
+            mask[0] = True
+        conf = jnp.asarray(rng.normal(size=n))
+        theta = dts.sample_weights(conf, jnp.asarray(mask))
+        m = dts.sample_peers(jax.random.PRNGKey(seed), theta, k)
+        m = np.asarray(m)
+        assert m.sum() <= max(k, int(mask.sum()))
+        assert not m[~mask].any()           # never samples non-peers
+
+    @given(seeds)
+    @settings(max_examples=20, deadline=None)
+    def test_checkpoint_roundtrip(seed):
+        import tempfile
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        rng = np.random.default_rng(seed)
+        tree = {"a": rng.normal(size=(3, 4)).astype(np.float32),
+                "b": {"c": rng.integers(0, 9, size=(5,)),
+                      "d": [rng.normal(size=(2,)), rng.normal(size=())]}}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, tree, step=7)
+            restored, step = load_checkpoint(d, tree)
+            assert step == 7
+            for a, b in zip(jax.tree.leaves(tree),
+                            jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(a, b)
+
+    @given(st.integers(min_value=2, max_value=6),
+           st.integers(min_value=8, max_value=64), seeds)
+    @settings(max_examples=20, deadline=None)
+    def test_gossip_mix_matches_einsum(n, f, seed):
+        from repro.kernels import gossip_mix
+        from repro.kernels.ref import gossip_mix_ref
+        key = jax.random.PRNGKey(seed)
+        P = jax.nn.softmax(jax.random.normal(key, (n, n)), -1)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n, f))
+        np.testing.assert_allclose(np.asarray(gossip_mix(P, w)),
+                                   np.asarray(gossip_mix_ref(P, w)),
+                                   atol=1e-5)
