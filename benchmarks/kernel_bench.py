@@ -1,25 +1,128 @@
 """Kernel micro-bench: us_per_call of the Pallas kernels (interpret mode on
-CPU — regression numbers, not TPU latencies) vs their jnp oracles."""
+CPU — regression numbers, not TPU latencies) vs their jnp oracles.
+
+Also emits ``BENCH_gossip.json``: the dense-vs-sparse-vs-einsum gossip
+trajectory over (world size, topology density), plus the super-step driver
+check (dispatch count and per-epoch-driver loss agreement)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import flash_attention, gossip_mix, moe_router_topk
+from repro.kernels import (flash_attention, gossip_mix, gossip_mix_sparse,
+                           moe_router_topk)
 from repro.kernels.ref import (flash_attention_ref, gossip_mix_ref,
                                moe_router_topk_ref)
 
 
 def _time(fn, *args, iters=5):
+    """Best-of-iters µs — min is the robust microbench estimator on a
+    shared/noisy CPU (mean folds in scheduler hiccups)."""
     fn(*args)                       # compile
     jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    best = float("inf")
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
+    """Dense Pallas vs padded-CSR sparse Pallas vs jnp einsum across world
+    sizes and topology densities. Density 1.0 = fully connected (sparse
+    kernel degenerates to K=W); DeFTA's regime is the 0.05 column.
+
+    Both kernels run single-tile (block_f=f): interpret mode pays a large
+    fixed cost per grid step that would otherwise swamp the compute
+    difference being measured (on TPU the streaming grid is free)."""
+    import functools
+
+    from repro.core.gossip import sparse_weights
+
+    dense_fn = functools.partial(gossip_mix, block_f=f)
+    sparse_fn = functools.partial(gossip_mix_sparse, block_f=f)
+
+    rows = []
+    for w in (20, 100, 500):
+        for density in (0.05, 0.3, 1.0):
+            rng = np.random.default_rng(w)
+            k_peers = max(1, round(density * w) - 1)
+            adj = np.zeros((w, w), bool)
+            for i in range(w):
+                peers = rng.choice([j for j in range(w) if j != i],
+                                   size=min(k_peers, w - 1), replace=False)
+                adj[i, peers] = True
+            P = (adj | np.eye(w, dtype=bool)).astype(np.float32)
+            P /= P.sum(1, keepdims=True)
+            P_j = jnp.asarray(P)
+            idx_j, val_j = sparse_weights(P_j, adj)
+            stack = jax.random.normal(jax.random.PRNGKey(w), (w, f))
+
+            dense_us = _time(dense_fn, P_j, stack)
+            sparse_us = _time(sparse_fn, idx_j, val_j, stack)
+            einsum_us = _time(jax.jit(gossip_mix_ref), P_j, stack)
+            err = float(jnp.abs(
+                sparse_fn(idx_j, val_j, stack)
+                - gossip_mix_ref(P_j, stack)).max())
+            rows.append(dict(W=w, density=density, K=int(idx_j.shape[1]),
+                             dense_us=dense_us, sparse_us=sparse_us,
+                             einsum_us=einsum_us, max_err=err))
+            print(f"gossip W={w:4d} density={density:.2f} K={idx_j.shape[1]:3d}"
+                  f" dense={dense_us:9.0f}us sparse={sparse_us:9.0f}us"
+                  f" einsum={einsum_us:9.0f}us err={err:.2e}")
+
+    superstep = bench_superstep()
+    payload = dict(feature_dim=f, rows=rows, superstep=superstep)
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(out_path)}")
+    return payload
+
+
+def bench_superstep(epochs: int = 200, eval_every: int = 50):
+    """The fused-driver contract: a 200-epoch run is ceil(epochs /
+    eval_every) XLA dispatches and its losses match the per-epoch driver."""
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 4
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=1,
+                      local_epochs=1)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    key = jax.random.PRNGKey(0)
+
+    stats = {}
+    t0 = time.time()
+    st_fused, _, _, _ = run_defta(
+        key, task, cfg, train, data, epochs=epochs, eval_every=eval_every,
+        test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+    fused_s = time.time() - t0
+    t0 = time.time()
+    st_loop, _, _, _ = run_defta(
+        key, task, cfg, train, data, epochs=epochs, eval_every=eval_every,
+        test_x=data["test_x"], test_y=data["test_y"], superstep=False)
+    loop_s = time.time() - t0
+    delta = float(jnp.abs(st_fused.last_loss - st_loop.last_loss).max())
+    budget = -(-epochs // eval_every)
+    print(f"superstep {epochs} epochs: {stats['dispatches']} dispatches "
+          f"(budget {budget}), {fused_s:.1f}s fused vs {loop_s:.1f}s "
+          f"per-epoch, max loss delta {delta:.2e}")
+    assert stats["dispatches"] <= budget, stats
+    assert delta < 1e-4, delta
+    return dict(epochs=epochs, eval_every=eval_every,
+                dispatches=stats["dispatches"], dispatch_budget=budget,
+                fused_s=fused_s, per_epoch_s=loop_s, max_loss_delta=delta)
 
 
 def run():
@@ -59,3 +162,4 @@ def run():
 
 if __name__ == "__main__":
     run()
+    bench_gossip()

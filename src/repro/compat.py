@@ -1,0 +1,19 @@
+"""Version-compat shims for the pinned JAX.
+
+``jax.shard_map`` (with its ``check_vma`` kwarg) only exists on newer JAX;
+the pinned build ships it as ``jax.experimental.shard_map.shard_map`` with
+the older ``check_rep`` spelling. Call sites use this wrapper so they read
+like the modern API either way.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

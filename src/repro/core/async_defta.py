@@ -18,8 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import functools
+
 from repro.config import DeFTAConfig, TrainConfig
-from repro.core.defta import (DeFTAState, build_round, init_state,
+from repro.core.defta import (DeFTAState, build_round_fn, init_state,
                               tree_select)
 from repro.core.tasks import Task
 from repro.core.topology import make_topology
@@ -27,9 +29,15 @@ from repro.core.topology import make_topology
 
 def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     data, *, ticks: int, num_malicious: int = 0,
-                    speed_range=(0.3, 1.0), target_epochs: int = 0):
+                    speed_range=(0.3, 1.0), target_epochs: int = 0,
+                    check_every: int = 0):
     """Run until every vanilla worker reaches ``target_epochs`` (if >0) or
-    for ``ticks`` ticks. Returns (state, adj, malicious, speeds)."""
+    for ``ticks`` ticks. Returns (state, adj, malicious, speeds).
+
+    Ticks advance inside ``jax.lax.scan`` chunks with donated state
+    buffers; host round-trips happen only at ``check_every`` boundaries
+    (the target_epochs early-exit check — default 8 ticks when a target is
+    set, the whole run otherwise, so an untargeted run is one dispatch)."""
     w = cfg.num_workers + num_malicious
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
     malicious = np.zeros(w, bool)
@@ -47,14 +55,13 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     speeds = jnp.asarray(rng.uniform(*speed_range, size=w))
 
     state = init_state(key, task, w)
-    rnd = build_round(task, cfg, train, adj, sizes, malicious)
+    rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
 
-    @jax.jit
     def tick(state: DeFTAState, tkey):
         fired = jax.random.uniform(tkey, (w,)) < speeds
-        nxt = rnd(state, jdata)
+        nxt = rnd_fn(state, jdata)
         # merge: fired workers take the new state, others keep the old.
         params = tree_select(fired, nxt.params, state.params)
         backup = tree_select(fired, nxt.backup, state.backup)
@@ -64,11 +71,18 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
             best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
             last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
             key=nxt.key,
-            epoch=state.epoch + fired.astype(jnp.int32))
+            epoch=state.epoch + fired.astype(jnp.int32)), None
 
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_ticks(st, tkeys):
+        return jax.lax.scan(tick, st, tkeys)[0]
+
+    if not check_every:
+        check_every = min(8, ticks) if target_epochs else ticks
+    check_every = max(1, check_every)      # ticks=0 stays a clean no-op
     tkeys = jax.random.split(jax.random.fold_in(key, 99), ticks)
-    for t in range(ticks):
-        state = tick(state, tkeys[t])
+    for t0 in range(0, ticks, check_every):
+        state = run_ticks(state, tkeys[t0:t0 + check_every])
         if target_epochs and bool(
                 (np.asarray(state.epoch)[~malicious]
                  >= target_epochs).all()):

@@ -103,7 +103,9 @@ def init_state(key, task: Task, num_workers: int) -> DeFTAState:
     params = jax.vmap(task.init)(keys[:num_workers])
     return DeFTAState(
         params=params,
-        backup=params,
+        # distinct buffers: superstep drivers donate the whole state, and
+        # XLA rejects donating one buffer through two arguments
+        backup=jax.tree.map(jnp.copy, params),
         conf=jnp.zeros((num_workers, num_workers)),
         best_loss=jnp.full((num_workers,), jnp.inf),
         last_loss=jnp.zeros((num_workers,)),
@@ -112,11 +114,14 @@ def init_state(key, task: Task, num_workers: int) -> DeFTAState:
     )
 
 
-def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
-                adj: np.ndarray, sizes: np.ndarray,
-                malicious: np.ndarray, *, gossip_backend: str = "einsum",
-                noise_scale: float = 200.0):
-    """Returns a jitted round(state, data) -> state super-step."""
+def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                   adj: np.ndarray, sizes: np.ndarray,
+                   malicious: np.ndarray, *,
+                   gossip_backend: str = "einsum",
+                   noise_scale: float = 200.0):
+    """Returns an UN-jitted round(state, data) -> state body — scannable,
+    so drivers can fuse many rounds into one XLA dispatch (and jittable
+    as-is for single-round use; see ``build_round``)."""
     w = adj.shape[0]
     adj_j = jnp.asarray(adj)
     sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
@@ -133,7 +138,9 @@ def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     else:  # uniform gossip
         col_w = jnp.ones_like(sizes_j)
 
-    @jax.jit
+    wire = None if cfg.gossip_dtype in ("float32", "fp32") \
+        else cfg.gossip_dtype
+
     def round(state: DeFTAState, data):
         key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
 
@@ -152,7 +159,8 @@ def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         mask = (sampled & adj_j) | jnp.eye(w, dtype=bool)
         P = mask * col_w[None, :]
         P = P / P.sum(axis=1, keepdims=True)
-        agg = mix_pytree(P, state.params, backend=gossip_backend)
+        agg = mix_pytree(P, state.params, backend=gossip_backend,
+                         adjacency=adj, wire_dtype=wire)
 
         # ---- 3. time machine: damage check on aggregated model --------
         loss_agg = jax.vmap(task.loss)(agg, data["x"], data["y"],
@@ -192,6 +200,11 @@ def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     return round
 
 
+def build_round(*args, **kwargs):
+    """Returns a jitted round(state, data) -> state super-step."""
+    return jax.jit(build_round_fn(*args, **kwargs))
+
+
 def evaluate(task: Task, state: DeFTAState, test_x, test_y,
              malicious: np.ndarray):
     """Mean/std test accuracy across vanilla (non-malicious) workers."""
@@ -205,9 +218,19 @@ def evaluate(task: Task, state: DeFTAState, test_x, test_y,
 def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
               *, epochs: int, num_malicious: int = 0,
               gossip_backend: str = "einsum", eval_every: int = 0,
-              test_x=None, test_y=None):
+              test_x=None, test_y=None, superstep: bool = True,
+              stats: Optional[dict] = None):
     """End-to-end driver. Malicious workers are appended after the vanilla
-    ones (paper §4.3: normal workers fixed, attackers newly joined)."""
+    ones (paper §4.3: normal workers fixed, attackers newly joined).
+
+    With ``superstep`` (default) epochs advance inside ``jax.lax.scan``
+    chunks bounded by eval points: a run is ceil(epochs / eval_every) XLA
+    dispatches (one, if eval_every=0) instead of one per epoch, and the
+    state buffers are donated across chunks so params/backup are not
+    double-buffered between dispatches. ``superstep=False`` keeps the
+    per-epoch dispatch loop (the reference the fused path is tested
+    against). Pass ``stats={}`` to get ``{"dispatches": n, ...}`` back.
+    """
     w = cfg.num_workers + num_malicious
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
     malicious = np.zeros(w, bool)
@@ -224,16 +247,48 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
                 "mask": pad(data["mask"])}
 
     state = init_state(key, task, w)
-    rnd = build_round(task, cfg, train, adj, sizes, malicious,
-                      gossip_backend=gossip_backend)
+    rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
+                            gossip_backend=gossip_backend)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
     history = []
-    for e in range(epochs):
-        state = rnd(state, jdata)
-        if eval_every and (e + 1) % eval_every == 0 and test_x is not None:
-            m, s, _ = evaluate(task, state, test_x, test_y, malicious)
-            history.append((e + 1, m, s))
+    dispatches = 0
+
+    if not superstep:                       # per-epoch reference driver
+        rnd = jax.jit(rnd_fn)
+        for e in range(epochs):
+            state = rnd(state, jdata)
+            dispatches += 1
+            if eval_every and (e + 1) % eval_every == 0 \
+                    and test_x is not None:
+                m, s, _ = evaluate(task, state, test_x, test_y, malicious)
+                history.append((e + 1, m, s))
+    else:
+        @functools.partial(jax.jit, static_argnames=("length",),
+                           donate_argnums=(0,))
+        def run_chunk(st, jd, *, length):
+            def body(s, _):
+                return rnd_fn(s, jd), None
+            return jax.lax.scan(body, st, None, length=length)[0]
+
+        done = 0
+        # eval boundaries only matter when there is something to eval —
+        # otherwise the whole run is a single dispatch
+        chunk = eval_every if (eval_every and test_x is not None) \
+            else epochs
+        while done < epochs:
+            n = min(chunk, epochs - done)
+            state = run_chunk(state, jdata, length=n)
+            dispatches += 1
+            done += n
+            if eval_every and done % eval_every == 0 \
+                    and test_x is not None:
+                m, s, _ = evaluate(task, state, test_x, test_y, malicious)
+                history.append((done, m, s))
+
+    if stats is not None:
+        stats["dispatches"] = dispatches
+        stats["epochs"] = epochs
     return state, adj, malicious, history
 
 

@@ -2,27 +2,115 @@
 
 Backends:
 * ``einsum`` — jnp reference (always available, differentiable).
-* ``pallas`` — the TPU ``gossip_mix`` kernel (repro.kernels), tiled over the
-  flattened parameter axis; validated against einsum in tests.
+* ``pallas`` — the dense TPU ``gossip_mix`` kernel (repro.kernels), tiled
+  over the flattened parameter axis; the oracle the sparse kernel is
+  validated against.
+* ``sparse`` — the padded-CSR ``gossip_mix_sparse`` kernel: HBM+compute
+  scale O(nnz·F) instead of O(W²·F). Requires the static ``adjacency``
+  support (the topology); the traced P supplies the per-round weights.
+* ``auto``  — picks ``sparse`` when an adjacency is given and its density
+  (self-loops included) is below ``SPARSE_DENSITY_THRESHOLD``, else the
+  dense pallas kernel. DeFTA topologies (avg_peers ≪ W) land on sparse.
+
+``wire_dtype`` emulates a reduced-precision wire format (paper workers
+exchange serialized models): the stack is cast to it before mixing, the
+kernels accumulate in fp32, and the result is cast back to the parameter
+dtype. ``None``/fp32 is a no-op.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def mix_pytree(P, stacked, backend: str = "einsum"):
-    """P: [W, W] row-stochastic; stacked: pytree with leading axis W."""
+SPARSE_DENSITY_THRESHOLD = 0.25
+
+
+def sparse_support(adjacency) -> tuple[np.ndarray, np.ndarray]:
+    """Padded-CSR support of a topology: ``adjacency[i, j]`` = i receives
+    from j. Self-loops are always added (worker i keeps its own model).
+    Returns (idx [W, K] int32, valid [W, K] bool) with K = max row degree;
+    padding slots repeat the row's own index and are masked by ``valid``."""
+    a = np.asarray(adjacency, bool) | np.eye(adjacency.shape[0], dtype=bool)
+    w = a.shape[0]
+    k = int(a.sum(axis=1).max())
+    idx = np.tile(np.arange(w, dtype=np.int32)[:, None], (1, k))
+    valid = np.zeros((w, k), bool)
+    for i in range(w):
+        peers = np.flatnonzero(a[i]).astype(np.int32)
+        idx[i, :peers.size] = peers
+        valid[i, :peers.size] = True
+    return idx, valid
+
+
+def sparse_weights(P, adjacency):
+    """Padded-CSR form of a (possibly traced) mixing matrix P over a static
+    topology: returns (idx [W, K] int32 jnp, val [W, K] f32 jnp) with
+    padding slots zero-weighted. The single place the padding convention
+    lives — kernels, benchmarks, and tests all go through it."""
+    idx, valid = sparse_support(adjacency)
+    idx_j = jnp.asarray(idx)
+    val = jnp.take_along_axis(P.astype(jnp.float32), idx_j, axis=1)
+    return idx_j, val * jnp.asarray(valid, jnp.float32)
+
+
+def _resolve_backend(backend, adjacency, w):
+    if backend != "auto":
+        return backend
+    if adjacency is None:
+        return "pallas"
+    a = np.asarray(adjacency, bool) | np.eye(w, dtype=bool)
+    return "sparse" if a.mean() <= SPARSE_DENSITY_THRESHOLD else "pallas"
+
+
+def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
+               wire_dtype=None):
+    """P: [W, W] row-stochastic; stacked: pytree with leading axis W.
+
+    ``adjacency``: static bool [W, W] support of P (required for the
+    ``sparse`` backend, enables it under ``auto``). P's nonzeros must lie
+    within adjacency ∪ self-loops — DeFTA's sampled mixing matrices do by
+    construction (sampled ⊆ topology edges).
+    """
+    w = P.shape[0]
+    backend = _resolve_backend(backend, adjacency, w)
+    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else None
+
+    def on_wire(x):
+        return x.astype(wire) if wire is not None else x
+
     if backend == "einsum":
-        return jax.tree.map(
-            lambda x: jnp.einsum("ij,j...->i...", P.astype(x.dtype), x),
-            stacked)
+        def leaf(x):
+            xw = on_wire(x)
+            out = jnp.einsum("ij,j...->i...", P.astype(jnp.float32),
+                             xw.astype(jnp.float32))
+            return out.astype(x.dtype)
+        return jax.tree.map(leaf, stacked)
+
     if backend == "pallas":
         from repro.kernels.ops import gossip_mix
+
         def leaf(x):
-            flat = x.reshape(x.shape[0], -1)
-            return gossip_mix(P.astype(x.dtype), flat).reshape(x.shape)
+            flat = on_wire(x).reshape(x.shape[0], -1)
+            out = gossip_mix(P.astype(jnp.float32), flat)
+            return out.reshape(x.shape).astype(x.dtype)
         return jax.tree.map(leaf, stacked)
+
+    if backend == "sparse":
+        if adjacency is None:
+            raise ValueError(
+                "gossip backend 'sparse' needs the static topology: pass "
+                "adjacency=<bool [W, W]> (or use backend='pallas')")
+        from repro.kernels.ops import gossip_mix_sparse
+        idx_j, val = sparse_weights(P, adjacency)
+
+        def leaf(x):
+            flat = on_wire(x).reshape(x.shape[0], -1)
+            out = gossip_mix_sparse(idx_j, val, flat)
+            return out.reshape(x.shape).astype(x.dtype)
+        return jax.tree.map(leaf, stacked)
+
     raise ValueError(f"unknown gossip backend {backend!r}")
 
 
@@ -36,24 +124,27 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     carries edge (i-o -> i) and is skipped entirely when no worker uses it
     (column of nonzero P at that circular offset is empty).
 
+    The schedule is static, so sparsity must come from the static
+    ``adjacency`` (bool [W, W], i receives from j — self-loops implied).
+    Without it the full dense rotation runs: all W offsets, correct for any
+    P, but wire traffic no longer shrinks with topology sparsity. Pass the
+    topology whenever you have it.
+
     stacked: pytree with leading worker axis sharded on ``axis``.
     Traffic per chip per used offset = local param bytes — so total gossip
     wire bytes scale with the number of DISTINCT offsets in the topology,
     not with world size (the paper's sparse-peers economy, made explicit).
     """
-    import numpy as np
     from jax.sharding import PartitionSpec as Ps
 
+    from repro.compat import shard_map
+
     w = P.shape[0]
-    if adjacency is not None:               # static sparsity (preferred)
+    if adjacency is not None:               # static sparsity
         a = np.asarray(adjacency) | np.eye(w, dtype=bool)
         used_offsets = [o for o in range(w)
                         if np.any(a[np.arange(w), (np.arange(w) - o) % w])]
-    elif not isinstance(P, jax.core.Tracer):
-        Pn = np.asarray(P)
-        used_offsets = [o for o in range(w) if np.any(
-            Pn[np.arange(w), (np.arange(w) - o) % w] > 0)]
-    else:                                   # no static info: dense schedule
+    else:                                   # documented dense fallback
         used_offsets = list(range(w))
 
     def body(p_local, *leaves_local):
@@ -77,7 +168,7 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
 
     leaves, treedef = jax.tree.flatten(stacked)
     specs = tuple(Ps(axis) for _ in leaves)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(Ps(axis, None),) + specs,
         out_specs=specs, check_vma=False)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 from repro.kernels.gossip_mix import gossip_mix_pallas
+from repro.kernels.gossip_mix_sparse import gossip_mix_sparse_pallas
 from repro.kernels.moe_router import moe_router_pallas
 
 
@@ -24,11 +25,32 @@ def _pad_to(x, axis: int, mult: int):
     return jnp.pad(x, widths), pad
 
 
+def _pow2_block(n: int, block: int) -> int:
+    """Block length for a length-``n`` axis: the smallest power of two >= n,
+    clamped to [16, block] with ``block`` itself rounded DOWN to a power of
+    two — every returned value is MXU/lane aligned, even for a non-pow2
+    ``block`` request or n >= block (both previously skipped the clamp)."""
+    cap = 1 << (block.bit_length() - 1)            # largest pow2 <= block
+    want = 1 << max(n - 1, 1).bit_length()         # smallest pow2 >= n
+    return max(16, min(cap, want))
+
+
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
 def gossip_mix(P, w, *, block_f: int = 2048, interpret: bool = True):
     """P: [W, W]; w: [W, F] (any F — padded internally)."""
     wp, pad = _pad_to(w, 1, block_f)
     out = gossip_mix_pallas(P, wp, block_f=block_f, interpret=interpret)
+    return out[:, :w.shape[1]] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def gossip_mix_sparse(idx, val, w, *, block_f: int = 2048,
+                      interpret: bool = True):
+    """Padded-CSR gossip: idx/val [W, K]; w [W, F] (any F — padded
+    internally). out[i] = sum_k val[i,k] * w[idx[i,k]]."""
+    wp, pad = _pad_to(w, 1, block_f)
+    out = gossip_mix_sparse_pallas(idx, val, wp, block_f=block_f,
+                                   interpret=interpret)
     return out[:, :w.shape[1]] if pad else out
 
 
@@ -40,8 +62,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """q,k,v: [B, H, S, D]. Pads S to a block multiple; padded kv rows are
     masked out by the causal mask (they sit after every real query)."""
     b, h, s, d = q.shape
-    bq = min(block_q, max(16, 1 << (s - 1).bit_length() if s < block_q else block_q))
-    bk = min(block_k, bq)
+    bq = _pow2_block(s, block_q)
+    bk = min(_pow2_block(s, block_k), bq)
     flat = lambda x: x.reshape(b * h, s, d)
     qf, kf, vf = flat(q), flat(k), flat(v)
     qf, pad = _pad_to(qf, 1, bq)

@@ -10,6 +10,14 @@ def gossip_mix_ref(P, w):
     return jnp.einsum("ij,jf->if", P, w)
 
 
+def gossip_mix_sparse_ref(idx, val, w):
+    """Padded-CSR gossip: idx [W, K] int32, val [W, K] (0 on padding),
+    w [W, F]. out[i] = sum_k val[i, k] * w[idx[i, k]]."""
+    gathered = w.astype(jnp.float32)[idx]                    # [W, K, F]
+    return jnp.einsum("wk,wkf->wf", val.astype(jnp.float32),
+                      gathered).astype(w.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q,k,v: [B, H, S, D] (same S). Full-matrix reference attention."""
     b, h, s, d = q.shape

@@ -1,0 +1,229 @@
+"""Sparse gossip kernel + fused super-step drivers (ISSUE 1).
+
+Contracts:
+* padded-CSR sparse kernel == einsum oracle on real topologies
+* every mixing path preserves row-stochastic weighting (all-ones fixed
+  point)
+* super-stepped run_defta == per-epoch driver, in ceil(epochs/eval_every)
+  dispatches
+* flash-attention block sizing stays power-of-two on shape edge cases
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import mixing_matrix
+from repro.core.gossip import mix_pytree, sparse_support, sparse_weights
+from repro.core.topology import make_topology
+from repro.kernels import gossip_mix_sparse
+from repro.kernels.ref import gossip_mix_ref, gossip_mix_sparse_ref
+
+
+def _tree(key, w):
+    return {"a": jax.random.normal(jax.random.fold_in(key, 0), (w, 37)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (w, 3, 11))}
+
+
+# ---------------------------------------------------------------------------
+# sparse kernel vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["ring", "random_kout", "dense"])
+@pytest.mark.parametrize("w", [8, 20, 33])
+def test_sparse_kernel_matches_einsum_on_topologies(topology, w):
+    adj = make_topology(topology, w, 4, seed=w)
+    sizes = np.arange(1, w + 1) * 10
+    P = jnp.asarray(mixing_matrix(adj, sizes, "defta"), jnp.float32)
+    idx, val = sparse_weights(P, adj)
+    stack = jax.random.normal(jax.random.PRNGKey(w), (w, 777))
+    out = gossip_mix_sparse(idx, val, stack)
+    ref = gossip_mix_ref(P, stack)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_kernel_matches_csr_ref_random(dtype):
+    rng = np.random.default_rng(3)
+    w, k, f = 24, 5, 300
+    idx = jnp.asarray(rng.integers(0, w, (w, k)).astype(np.int32))
+    val = jnp.asarray(rng.random((w, k)).astype(np.float32))
+    val = val.at[:, -1].set(0.0)          # a padding slot
+    stack = jnp.asarray(rng.standard_normal((w, f))).astype(dtype)
+    out = gossip_mix_sparse(idx, val, stack)
+    ref = gossip_mix_sparse_ref(idx, val, stack)
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_sparse_support_shape_and_padding():
+    adj = make_topology("ring", 10, 2, seed=0)
+    idx, valid = sparse_support(adj)
+    assert idx.shape == valid.shape == (10, 3)    # 2 peers + self
+    assert valid.all()                            # ring: uniform degree
+    # every row contains its own index (self-loop)
+    assert all(i in idx[i] for i in range(10))
+
+
+# ---------------------------------------------------------------------------
+# mix_pytree paths
+# ---------------------------------------------------------------------------
+
+def _backends(adj):
+    return [("einsum", {}), ("pallas", {}),
+            ("sparse", dict(adjacency=adj)), ("auto", dict(adjacency=adj))]
+
+
+@pytest.mark.parametrize("wire", [None, "bfloat16"])
+def test_mix_pytree_backends_agree(wire):
+    w = 16
+    adj = make_topology("random_kout", w, 3, seed=1)
+    P = jnp.asarray(mixing_matrix(adj, np.ones(w), "defta"), jnp.float32)
+    stacked = _tree(jax.random.PRNGKey(0), w)
+    ref = mix_pytree(P, stacked)
+    atol = 1e-5 if wire is None else 3e-2
+    for backend, kw in _backends(adj):
+        out = mix_pytree(P, stacked, backend=backend, wire_dtype=wire, **kw)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            assert a.dtype == b.dtype     # wire cast never leaks out
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=atol, err_msg=backend)
+
+
+def test_every_mixing_path_preserves_row_stochastic_weighting():
+    """Mixing an all-ones stack through a row-stochastic P is the identity
+    — the invariant DeFTA aggregation rests on (Lemma 3.2)."""
+    w = 12
+    adj = make_topology("random_kout", w, 4, seed=2)
+    P = jnp.asarray(mixing_matrix(adj, np.arange(1, w + 1), "defta"),
+                    jnp.float32)
+    ones = {"a": jnp.ones((w, 65)), "b": jnp.ones((w, 2, 9))}
+    for backend, kw in _backends(adj):
+        out = mix_pytree(P, ones, backend=backend, **kw)
+        for leaf in jax.tree.leaves(out):
+            np.testing.assert_allclose(np.asarray(leaf), 1.0, rtol=1e-5,
+                                       err_msg=backend)
+
+
+def test_sparse_backend_requires_adjacency():
+    P = jnp.eye(4)
+    with pytest.raises(ValueError, match="adjacency"):
+        mix_pytree(P, {"a": jnp.ones((4, 8))}, backend="sparse")
+
+
+def test_auto_backend_selects_by_density():
+    from repro.core.gossip import _resolve_backend
+    sparse_adj = make_topology("ring", 40, 2, seed=0)
+    assert _resolve_backend("auto", sparse_adj, 40) == "sparse"
+    assert _resolve_backend("auto", make_topology("dense", 40, 0), 40) \
+        == "pallas"
+    assert _resolve_backend("auto", None, 40) == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# fused super-step driver
+# ---------------------------------------------------------------------------
+
+def test_superstep_matches_per_epoch_driver_in_budgeted_dispatches():
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w, epochs, eval_every = 6, 6, 2
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                      local_epochs=2)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    key = jax.random.PRNGKey(0)
+    kw = dict(epochs=epochs, eval_every=eval_every,
+              test_x=data["test_x"], test_y=data["test_y"])
+
+    stats = {}
+    st_fused, _, _, h_fused = run_defta(key, task, cfg, train, data,
+                                        stats=stats, **kw)
+    st_loop, _, _, h_loop = run_defta(key, task, cfg, train, data,
+                                      superstep=False, **kw)
+    assert stats["dispatches"] == -(-epochs // eval_every)
+    for a, b in zip(jax.tree.leaves(st_fused.params),
+                    jax.tree.leaves(st_loop.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_fused.last_loss),
+                               np.asarray(st_loop.last_loss), atol=1e-5)
+    # same eval boundaries; accuracies to the same tolerance as the params
+    # (exact equality would flake across differently-compiled programs)
+    assert [h[0] for h in h_fused] == [h[0] for h in h_loop]
+    np.testing.assert_allclose([h[1:] for h in h_fused],
+                               [h[1:] for h in h_loop], atol=1e-5)
+
+
+def test_superstep_single_dispatch_without_eval():
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 4
+    data = federated_dataset("vector", w, np.random.default_rng(1),
+                             n_per_worker=48, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=1,
+                      local_epochs=1)
+    train = TrainConfig(learning_rate=0.05, batch_size=16)
+    stats = {}
+    st, _, _, _ = run_defta(jax.random.PRNGKey(1), task, cfg, train, data,
+                            epochs=5, stats=stats)
+    assert stats["dispatches"] == 1
+    assert int(st.epoch[0]) == 5
+
+
+def test_superstep_with_sparse_gossip_and_bf16_wire_learns():
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import evaluate, run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 6
+    data = federated_dataset("vector", w, np.random.default_rng(2),
+                             n_per_worker=96, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=2,
+                      local_epochs=3, gossip_dtype="bfloat16")
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    st, _, mal, _ = run_defta(jax.random.PRNGKey(2), task, cfg, train,
+                              data, epochs=8, gossip_backend="auto")
+    m, _, _ = evaluate(task, st, data["test_x"], data["test_y"], mal)
+    assert m > 0.3, m
+
+
+# ---------------------------------------------------------------------------
+# flash-attention block sizing edge cases (ops.py bq fix)
+# ---------------------------------------------------------------------------
+
+def test_pow2_block_always_aligned():
+    from repro.kernels.ops import _pow2_block
+    for s in (1, 2, 15, 16, 17, 100, 128, 129, 300, 4096):
+        for block in (16, 100, 128, 256):
+            b = _pow2_block(s, block)
+            assert b & (b - 1) == 0, (s, block, b)       # power of two
+            assert 16 <= b <= max(16, block), (s, block, b)
+
+
+@pytest.mark.parametrize("s,block_q", [(1, 128), (17, 128), (100, 100),
+                                       (129, 128), (300, 100)])
+def test_flash_attention_shape_edge_cases(s, block_q):
+    """Odd sequence lengths and non-pow2 block requests still match the
+    reference (previously s >= block_q bypassed the pow2 clamp)."""
+    from repro.kernels import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    key = jax.random.PRNGKey(s)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, 2, s, 32))
+               for i in range(3))
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_q)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
