@@ -1,0 +1,110 @@
+"""CI regression guard for ``BENCH_gossip.json``.
+
+Compares a freshly-emitted bench file against the committed baseline and
+fails (exit 1) when the headline wins regress:
+
+* the sparse-vs-dense kernel win at W=500 / density=0.05 (DeFTA's regime)
+  may not shrink by more than ``--tolerance`` (relative, default 25%);
+* the fused int8 quant kernel must stay within ``--tolerance`` of the fp32
+  sparse kernel's time in the same cell (the dequant fusion is supposed to
+  be free);
+* the int8 wire must stay ≤ 0.3× fp32 bytes (structural — catches payload
+  accounting regressions);
+* the quantized-convergence parity check must be present and passing.
+
+Interpret-mode timings are noisy; the guard compares RATIOS within one run
+(dense/sparse from the same process share the noise), not absolute times
+across runs. Ratios still vary ACROSS machines — observed committed
+baselines span ~1.26x (CI-class runner) to ~2.6x (dev box) for the same
+cell — so the baseline win is capped at ``CROSS_MACHINE_WIN_FLOOR`` before
+the relative tolerance is applied: a regression gate must never fail just
+because the baseline was produced on faster hardware, but it must always
+catch the sparse kernel losing its win outright.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HEADLINE_W, HEADLINE_D = 500, 0.05
+
+# weakest sparse-vs-dense win observed across machine classes for the
+# headline cell; baselines above this are treated as machine-specific
+CROSS_MACHINE_WIN_FLOOR = 1.25
+
+
+def headline_row(payload):
+    for row in payload["rows"]:
+        if row["W"] == HEADLINE_W and row["density"] == HEADLINE_D:
+            return row
+    raise SystemExit(
+        f"no W={HEADLINE_W}/density={HEADLINE_D} row in bench payload")
+
+
+def check(baseline, fresh, tolerance):
+    failures = []
+    base, new = headline_row(baseline), headline_row(fresh)
+
+    base_win = base["dense_us"] / base["sparse_us"]
+    new_win = new["dense_us"] / new["sparse_us"]
+    gate_win = min(base_win, CROSS_MACHINE_WIN_FLOOR)
+    print(f"sparse-vs-dense win @ W={HEADLINE_W}/d={HEADLINE_D}: "
+          f"baseline {base_win:.2f}x (gate {gate_win:.2f}x), "
+          f"fresh {new_win:.2f}x")
+    if new_win < gate_win * (1 - tolerance):
+        failures.append(
+            f"sparse win regressed >{tolerance:.0%} below the "
+            f"{gate_win:.2f}x gate: baseline {base_win:.2f}x -> "
+            f"fresh {new_win:.2f}x")
+
+    if "quant_us" in new:
+        slowdown = new["quant_us"] / new["sparse_us"]
+        print(f"int8 quant kernel vs fp32 sparse: {slowdown:.2f}x time")
+        if slowdown > 1 + tolerance:
+            failures.append(
+                f"fused int8 kernel slower than fp32 sparse by "
+                f"{slowdown:.2f}x (tolerance {1 + tolerance:.2f}x)")
+        ratio = new["int8_fp32_byte_ratio"]
+        print(f"int8 wire bytes: {ratio:.3f}x fp32")
+        if ratio > 0.3:
+            failures.append(f"int8 wire bytes {ratio:.3f}x fp32 (> 0.3x)")
+    else:
+        failures.append("fresh bench has no quant sweep (quant_us missing)")
+
+    conv = fresh.get("quant_convergence")
+    if not conv:
+        failures.append("fresh bench has no quant_convergence entry")
+    elif conv["rel_delta"] >= conv["tolerance"]:
+        failures.append(
+            f"quantized run diverged: rel_delta={conv['rel_delta']:.3%} "
+            f">= {conv['tolerance']:.0%}")
+    else:
+        print(f"quant convergence: int8+EF within "
+              f"{conv['rel_delta']:.3%} of fp32 final loss")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures = check(baseline, fresh, args.tolerance)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("bench guard: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -214,9 +214,17 @@ class DeFTAConfig:
     crelu_slope: float = 0.2         # paper Eq. 13
     local_epochs: int = 10           # paper: 10 local epochs per round
     gossip_every: int = 1            # production: gossip every K steps
-    gossip_dtype: str = "float32"    # wire format for the mixed stack
-                                     # ("bfloat16" halves gossip bytes;
-                                     # kernels accumulate in fp32)
+    gossip_dtype: str = "float32"    # wire format for the gossip payload:
+                                     # "float32" | "bfloat16" | "int8"
+                                     # (bf16 halves gossip bytes, int8
+                                     # quarters them; kernels accumulate
+                                     # in fp32 — see core/gossip.py)
+    gossip_error_feedback: bool = True
+                                     # EF21 residual compensation for lossy
+                                     # wire formats (no-op at float32):
+                                     # quantization error is fed back into
+                                     # next round's payload instead of
+                                     # compounding
     # differential privacy (the paper's FedAvg-algorithm-compatibility
     # claim: DP-SGD slots into local training unchanged)
     dp_clip: float = 0.0             # per-example L2 clip (0 = off)

@@ -30,14 +30,17 @@ from repro.core.topology import make_topology
 def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     data, *, ticks: int, num_malicious: int = 0,
                     speed_range=(0.3, 1.0), target_epochs: int = 0,
-                    check_every: int = 0):
+                    check_every: int = 0, host_exit: bool = False):
     """Run until every vanilla worker reaches ``target_epochs`` (if >0) or
     for ``ticks`` ticks. Returns (state, adj, malicious, speeds).
 
     Ticks advance inside ``jax.lax.scan`` chunks with donated state
-    buffers; host round-trips happen only at ``check_every`` boundaries
-    (the target_epochs early-exit check — default 8 ticks when a target is
-    set, the whole run otherwise, so an untargeted run is one dispatch)."""
+    buffers. The target_epochs early-exit predicate is evaluated DEVICE-SIDE
+    by default: a ``lax.while_loop`` over scan chunks of ``check_every``
+    ticks (default 8) checks ``all(epoch >= target_epochs)`` between chunks,
+    so the whole targeted run is ONE dispatch with zero host round-trips.
+    ``host_exit=True`` keeps the PR-1 reference path: host syncs at every
+    ``check_every`` boundary. Untargeted runs are a single scan either way."""
     w = cfg.num_workers + num_malicious
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
     malicious = np.zeros(w, bool)
@@ -54,37 +57,91 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     rng = np.random.default_rng(cfg.seed + 17)
     speeds = jnp.asarray(rng.uniform(*speed_range, size=w))
 
-    state = init_state(key, task, w)
+    from repro.core.gossip import uses_error_feedback
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
 
-    def tick(state: DeFTAState, tkey):
-        fired = jax.random.uniform(tkey, (w,)) < speeds
-        nxt = rnd_fn(state, jdata)
-        # merge: fired workers take the new state, others keep the old.
-        params = tree_select(fired, nxt.params, state.params)
-        backup = tree_select(fired, nxt.backup, state.backup)
-        conf = jnp.where(fired[:, None], nxt.conf, state.conf)
-        return DeFTAState(
-            params=params, backup=backup, conf=conf,
-            best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
-            last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
-            key=nxt.key,
-            epoch=state.epoch + fired.astype(jnp.int32)), None
+    def tick(state: DeFTAState, inp):
+        tkey, live = inp
+
+        def run(state):
+            fired = jax.random.uniform(tkey, (w,)) < speeds
+            nxt = rnd_fn(state, jdata)
+            # merge: fired workers take the new state, others keep the
+            # old. wire_err rides along — a worker that did not fire did
+            # not send, so its EF residual must not advance either.
+            params = tree_select(fired, nxt.params, state.params)
+            backup = tree_select(fired, nxt.backup, state.backup)
+            wire_err = tree_select(fired, nxt.wire_err, state.wire_err)
+            conf = jnp.where(fired[:, None], nxt.conf, state.conf)
+            return DeFTAState(
+                params=params, backup=backup, conf=conf,
+                best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
+                last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
+                key=nxt.key,
+                epoch=state.epoch + fired.astype(jnp.int32),
+                wire_err=wire_err)
+
+        # dead (chunk-padding) ticks are skipped ENTIRELY — no round
+        # compute and no key advance, so the device-exit path returns a
+        # state bit-identical to the host-exit reference.
+        return jax.lax.cond(live, run, lambda s: s, state), None
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def run_ticks(st, tkeys):
-        return jax.lax.scan(tick, st, tkeys)[0]
+        live = jnp.ones((tkeys.shape[0],), bool)
+        return jax.lax.scan(tick, st, (tkeys, live))[0]
 
     if not check_every:
         check_every = min(8, ticks) if target_epochs else ticks
     check_every = max(1, check_every)      # ticks=0 stays a clean no-op
-    tkeys = jax.random.split(jax.random.fold_in(key, 99), ticks)
-    for t0 in range(0, ticks, check_every):
-        state = run_ticks(state, tkeys[t0:t0 + check_every])
-        if target_epochs and bool(
-                (np.asarray(state.epoch)[~malicious]
-                 >= target_epochs).all()):
-            break
+    tkeys = jax.random.split(jax.random.fold_in(key, 99), max(ticks, 1))
+    tkeys = tkeys[:ticks]
+
+    if not target_epochs or not ticks:     # no predicate: one plain scan
+        if ticks:
+            state = run_ticks(state, tkeys)
+        return state, adj, malicious, np.asarray(speeds)
+
+    if host_exit:                          # reference path (PR 1)
+        for t0 in range(0, ticks, check_every):
+            state = run_ticks(state, tkeys[t0:t0 + check_every])
+            if bool((np.asarray(state.epoch)[~malicious]
+                     >= target_epochs).all()):
+                break
+        return state, adj, malicious, np.asarray(speeds)
+
+    # device-side early exit: while_loop over scan chunks, zero round-trips.
+    # Ticks are padded up to a whole number of chunks; padded slots carry
+    # live=False so they never fire (parity with the host path, which
+    # simply stops at ``ticks``).
+    nchunks = -(-ticks // check_every)
+    padded = nchunks * check_every
+    if padded > ticks:
+        tkeys = jnp.concatenate(
+            [tkeys, jnp.zeros((padded - ticks,) + tkeys.shape[1:],
+                              tkeys.dtype)])
+    tkeys = tkeys.reshape(nchunks, check_every, *tkeys.shape[1:])
+    live = (jnp.arange(padded) < ticks).reshape(nchunks, check_every)
+    vanilla = jnp.asarray(~malicious)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_until(st, tkeys, live):
+        def not_done(carry):
+            st, c = carry
+            reached = jnp.all(jnp.where(vanilla,
+                                        st.epoch >= target_epochs, True))
+            return (c < nchunks) & ~reached
+
+        def chunk(carry):
+            st, c = carry
+            st = jax.lax.scan(tick, st, (tkeys[c], live[c]))[0]
+            return st, c + 1
+
+        return jax.lax.while_loop(not_done, chunk,
+                                  (st, jnp.zeros((), jnp.int32)))[0]
+
+    state = run_until(state, tkeys, live)
     return state, adj, malicious, np.asarray(speeds)

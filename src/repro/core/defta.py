@@ -96,9 +96,13 @@ class DeFTAState:
     last_loss: jnp.ndarray       # [W]
     key: jnp.ndarray
     epoch: jnp.ndarray           # [W] per-worker epoch counters
+    wire_err: Any = None         # EF21 quantization residuals (stacked
+                                 # like params; None when wire is lossless
+                                 # or error feedback is off)
 
 
-def init_state(key, task: Task, num_workers: int) -> DeFTAState:
+def init_state(key, task: Task, num_workers: int, *,
+               wire_error: bool = False) -> DeFTAState:
     keys = jax.random.split(key, num_workers + 1)
     params = jax.vmap(task.init)(keys[:num_workers])
     return DeFTAState(
@@ -111,6 +115,9 @@ def init_state(key, task: Task, num_workers: int) -> DeFTAState:
         last_loss=jnp.zeros((num_workers,)),
         key=keys[-1],
         epoch=jnp.zeros((num_workers,), jnp.int32),
+        wire_err=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if wire_error else None,
     )
 
 
@@ -138,8 +145,9 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     else:  # uniform gossip
         col_w = jnp.ones_like(sizes_j)
 
-    wire = None if cfg.gossip_dtype in ("float32", "fp32") \
-        else cfg.gossip_dtype
+    from repro.core.gossip import normalize_wire, uses_error_feedback
+    wire = normalize_wire(cfg.gossip_dtype)
+    use_ef = uses_error_feedback(cfg)
 
     def round(state: DeFTAState, data):
         key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
@@ -159,8 +167,20 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         mask = (sampled & adj_j) | jnp.eye(w, dtype=bool)
         P = mask * col_w[None, :]
         P = P / P.sum(axis=1, keepdims=True)
-        agg = mix_pytree(P, state.params, backend=gossip_backend,
-                         adjacency=adj, wire_dtype=wire)
+        if use_ef:
+            if state.wire_err is None:
+                raise ValueError(
+                    "cfg enables gossip error feedback on a lossy wire "
+                    "but the state carries no residual buffers — build "
+                    "it with init_state(..., wire_error=True)")
+            agg, wire_err = mix_pytree(P, state.params,
+                                       backend=gossip_backend,
+                                       adjacency=adj, wire=wire,
+                                       residual=state.wire_err)
+        else:
+            agg = mix_pytree(P, state.params, backend=gossip_backend,
+                             adjacency=adj, wire=wire)
+            wire_err = state.wire_err
 
         # ---- 3. time machine: damage check on aggregated model --------
         loss_agg = jax.vmap(task.loss)(agg, data["x"], data["y"],
@@ -195,7 +215,8 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
         return DeFTAState(params=trained, backup=backup, conf=conf,
                           best_loss=best_loss, last_loss=last_loss,
-                          key=key, epoch=state.epoch + 1)
+                          key=key, epoch=state.epoch + 1,
+                          wire_err=wire_err)
 
     return round
 
@@ -246,7 +267,8 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
         data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
                 "mask": pad(data["mask"])}
 
-    state = init_state(key, task, w)
+    from repro.core.gossip import uses_error_feedback
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             gossip_backend=gossip_backend)
     jdata = {k: jnp.asarray(v) for k, v in data.items()

@@ -12,10 +12,39 @@ Backends:
   (self-loops included) is below ``SPARSE_DENSITY_THRESHOLD``, else the
   dense pallas kernel. DeFTA topologies (avg_peers ≪ W) land on sparse.
 
-``wire_dtype`` emulates a reduced-precision wire format (paper workers
-exchange serialized models): the stack is cast to it before mixing, the
-kernels accumulate in fp32, and the result is cast back to the parameter
-dtype. ``None``/fp32 is a no-op.
+Wire format + error feedback contract
+-------------------------------------
+In DeFTA every worker serializes and ships its model to its outbound peers
+each round, so WIRE BYTES dominate the decentralized hot path at scale.
+``wire`` selects what actually crosses the wire:
+
+* ``None``   — fp32 payload (4 B/param, lossless).
+* ``"bf16"`` — bf16 cast (2 B/param); kernels accumulate in fp32.
+* ``"int8"`` — per-row symmetric quantization (1 B/param + one fp32 scale
+  per worker row): ``scale_i = max|row_i| / 127``, ``q_i = round(row_i /
+  scale_i)``. The ``sparse`` backend mixes the int8 payload directly with
+  the fused ``gossip_mix_quant`` kernel (dequant folded into the CSR
+  weights — no materialized fp32 stack); ``einsum``/``pallas`` fold the
+  scales into P's columns (``P·diag(scale)``) so they never materialize a
+  dequantized stack either.
+
+Lossy wires compose with EF21-style error feedback: pass ``residual`` (a
+pytree like ``stacked``, zeros at round 0) and the mix returns
+``(mixed, new_residual)`` where each worker encoded ``row + residual`` and
+``new_residual = (row + residual) - dequant(payload)`` — the quantization
+error is compensated NEXT round instead of compounding, which keeps
+decentralized averaging convergent under lossy exchange (DeceFL). Without
+``residual`` the cast is fire-and-forget (simulation-only, PR 1 behavior).
+
+Backend auto-selection: ``auto`` + sparse topology → fused quant kernel on
+the int8 wire; ``auto`` + dense/absent adjacency → dense kernel with the
+scales folded into P. Byte-savings scope: the in-jit backends reproduce
+the wire's NUMERICS (encode→mix fuses into one XLA program, so any GSPMD
+collectives they emit still move fp32); the realized cross-pod byte cut
+is the ``mix_pytree_ppermute`` path, which permutes the int8 payload +
+per-row scale instead of fp32 leaves — ~4× fewer bytes on the same ring
+schedule. Wire bytes per payload are accounted by ``WIRE_BYTES`` /
+``launch.roofline.gossip_wire_bytes``.
 """
 from __future__ import annotations
 
@@ -26,13 +55,76 @@ import numpy as np
 
 SPARSE_DENSITY_THRESHOLD = 0.25
 
+# bytes per parameter on the wire, by format (int8 adds 4 B/row of scales,
+# accounted in launch.roofline.gossip_wire_bytes)
+WIRE_BYTES = {None: 4, "fp32": 4, "bf16": 2, "int8": 1}
+
+_WIRE_ALIASES = {
+    None: None, "fp32": None, "float32": None,
+    "bf16": "bf16", "bfloat16": "bf16",
+    "int8": "int8",
+}
+
+
+def normalize_wire(wire):
+    """Canonicalize a wire-format name to None | "bf16" | "int8"."""
+    key = wire
+    if not isinstance(key, str) and key is not None:
+        key = jnp.dtype(key).name                 # accept dtype-likes
+    if key not in _WIRE_ALIASES:
+        raise ValueError(f"unknown gossip wire format {wire!r} "
+                         f"(expected one of {sorted(_WIRE_ALIASES, key=str)})")
+    return _WIRE_ALIASES[key]
+
+
+def uses_error_feedback(cfg) -> bool:
+    """Single place the engines decide whether a DeFTAConfig runs EF21
+    error feedback: a lossy wire format with feedback enabled."""
+    return bool(cfg.gossip_error_feedback) \
+        and normalize_wire(cfg.gossip_dtype) is not None
+
+
+def quantize_rows_int8(flat):
+    """Per-row symmetric int8 quantization of a [W, F] stack.
+    Returns (q [W, F] int8, scale [W] f32) with q = round(flat / scale)
+    clipped to ±127 and scale = max|row| / 127 (never zero)."""
+    flat = flat.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(flat), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows_int8(q, scale):
+    """Inverse of ``quantize_rows_int8`` (fp32)."""
+    return q.astype(jnp.float32) * scale.reshape(-1, 1)
+
+
+# sparse_support is memoized on the adjacency bytes: the O(W²) Python loop
+# otherwise re-runs on every mix_pytree trace (per leaf, per jit). Bounded
+# LRU — a long-lived topology sweep must not grow it without limit.
+_SUPPORT_CACHE: dict = {}
+_SUPPORT_CACHE_MAX = 64
+SUPPORT_CACHE_STATS = {"hits": 0, "misses": 0}
+
 
 def sparse_support(adjacency) -> tuple[np.ndarray, np.ndarray]:
     """Padded-CSR support of a topology: ``adjacency[i, j]`` = i receives
     from j. Self-loops are always added (worker i keeps its own model).
     Returns (idx [W, K] int32, valid [W, K] bool) with K = max row degree;
-    padding slots repeat the row's own index and are masked by ``valid``."""
-    a = np.asarray(adjacency, bool) | np.eye(adjacency.shape[0], dtype=bool)
+    padding slots repeat the row's own index and are masked by ``valid``.
+    Memoized on the adjacency bytes — callers must not mutate the result."""
+    a0 = np.asarray(adjacency, bool)
+    key = (a0.shape, a0.tobytes())
+    cached = _SUPPORT_CACHE.get(key)
+    if cached is not None:
+        SUPPORT_CACHE_STATS["hits"] += 1
+        _SUPPORT_CACHE[key] = _SUPPORT_CACHE.pop(key)   # LRU refresh
+        return cached
+    SUPPORT_CACHE_STATS["misses"] += 1
+    while len(_SUPPORT_CACHE) >= _SUPPORT_CACHE_MAX:
+        _SUPPORT_CACHE.pop(next(iter(_SUPPORT_CACHE)))
+    a = a0 | np.eye(a0.shape[0], dtype=bool)
     w = a.shape[0]
     k = int(a.sum(axis=1).max())
     idx = np.tile(np.arange(w, dtype=np.int32)[:, None], (1, k))
@@ -41,6 +133,9 @@ def sparse_support(adjacency) -> tuple[np.ndarray, np.ndarray]:
         peers = np.flatnonzero(a[i]).astype(np.int32)
         idx[i, :peers.size] = peers
         valid[i, :peers.size] = True
+    idx.setflags(write=False)
+    valid.setflags(write=False)
+    _SUPPORT_CACHE[key] = (idx, valid)
     return idx, valid
 
 
@@ -64,58 +159,97 @@ def _resolve_backend(backend, adjacency, w):
     return "sparse" if a.mean() <= SPARSE_DENSITY_THRESHOLD else "pallas"
 
 
+def _encode_rows(flat, r_flat, wire):
+    """Encode one worker-stacked [W, F] leaf for the wire. Returns
+    (payload, scale_or_None, new_residual_or_None): with ``r_flat`` (EF21)
+    the encoded row is ``flat + r_flat`` and the residual is what the
+    decode loses; without it the cast is fire-and-forget."""
+    send = flat.astype(jnp.float32)
+    if r_flat is not None:
+        send = send + r_flat.astype(jnp.float32)
+    if wire == "bf16":
+        payload, scale = send.astype(jnp.bfloat16), None
+        deq = payload.astype(jnp.float32)
+    else:                                         # int8
+        payload, scale = quantize_rows_int8(send)
+        deq = dequantize_rows_int8(payload, scale)
+    new_r = (send - deq) if r_flat is not None else None
+    return payload, scale, new_r
+
+
 def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
-               wire_dtype=None):
+               wire=None, wire_dtype=None, residual=None):
     """P: [W, W] row-stochastic; stacked: pytree with leading axis W.
 
     ``adjacency``: static bool [W, W] support of P (required for the
     ``sparse`` backend, enables it under ``auto``). P's nonzeros must lie
     within adjacency ∪ self-loops — DeFTA's sampled mixing matrices do by
     construction (sampled ⊆ topology edges).
+
+    ``wire``: None | "bf16" | "int8" — what crosses the wire (module
+    docstring). ``wire_dtype`` is the PR-1 spelling, kept as an alias.
+    ``residual``: EF21 error-feedback buffers (pytree like ``stacked``);
+    when given the return value is ``(mixed, new_residual)``.
     """
     w = P.shape[0]
     backend = _resolve_backend(backend, adjacency, w)
-    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else None
-
-    def on_wire(x):
-        return x.astype(wire) if wire is not None else x
-
-    if backend == "einsum":
-        def leaf(x):
-            xw = on_wire(x)
-            out = jnp.einsum("ij,j...->i...", P.astype(jnp.float32),
-                             xw.astype(jnp.float32))
-            return out.astype(x.dtype)
-        return jax.tree.map(leaf, stacked)
-
-    if backend == "pallas":
-        from repro.kernels.ops import gossip_mix
-
-        def leaf(x):
-            flat = on_wire(x).reshape(x.shape[0], -1)
-            out = gossip_mix(P.astype(jnp.float32), flat)
-            return out.reshape(x.shape).astype(x.dtype)
-        return jax.tree.map(leaf, stacked)
+    wire = normalize_wire(wire if wire is not None else wire_dtype)
+    if residual is not None and wire is None:
+        raise ValueError("error-feedback residual needs a lossy wire "
+                         "(wire='bf16'|'int8')")
 
     if backend == "sparse":
         if adjacency is None:
             raise ValueError(
                 "gossip backend 'sparse' needs the static topology: pass "
                 "adjacency=<bool [W, W]> (or use backend='pallas')")
-        from repro.kernels.ops import gossip_mix_sparse
         idx_j, val = sparse_weights(P, adjacency)
+    Pf = P.astype(jnp.float32)
 
-        def leaf(x):
-            flat = on_wire(x).reshape(x.shape[0], -1)
-            out = gossip_mix_sparse(idx_j, val, flat)
-            return out.reshape(x.shape).astype(x.dtype)
-        return jax.tree.map(leaf, stacked)
+    def mix_flat(payload, scale):
+        """[W, F] mixed rows in fp32 (dequant fused, no fp32 stack)."""
+        if backend == "einsum":
+            Pw = Pf * scale[None, :] if scale is not None else Pf
+            return jnp.einsum("ij,jf->if", Pw,
+                              payload.astype(jnp.float32))
+        if backend == "pallas":
+            from repro.kernels.ops import gossip_mix
+            Pw = Pf * scale[None, :] if scale is not None else Pf
+            return gossip_mix(Pw, payload, out_dtype=jnp.float32)
+        if backend == "sparse":
+            if scale is not None:
+                from repro.kernels.ops import gossip_mix_quant
+                return gossip_mix_quant(idx_j, val, scale, payload,
+                                        out_dtype=jnp.float32)
+            from repro.kernels.ops import gossip_mix_sparse
+            return gossip_mix_sparse(idx_j, val, payload,
+                                     out_dtype=jnp.float32)
+        raise ValueError(f"unknown gossip backend {backend!r}")
 
-    raise ValueError(f"unknown gossip backend {backend!r}")
+    leaves, treedef = jax.tree.flatten(stacked)
+    r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
+        else [None] * len(leaves)
+    outs, new_rs = [], []
+    for x, r in zip(leaves, r_leaves):
+        flat = x.reshape(w, -1)
+        if wire is None:
+            out = mix_flat(flat, None)
+            new_r = r
+        else:
+            r_flat = r.reshape(w, -1) if r is not None else None
+            payload, scale, nr = _encode_rows(flat, r_flat, wire)
+            out = mix_flat(payload, scale)
+            new_r = nr.reshape(x.shape) if nr is not None else None
+        outs.append(out.reshape(x.shape).astype(x.dtype))
+        new_rs.append(new_r)
+    mixed = jax.tree.unflatten(treedef, outs)
+    if residual is not None:
+        return mixed, jax.tree.unflatten(treedef, new_rs)
+    return mixed
 
 
 def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
-                        adjacency=None):
+                        adjacency=None, wire=None, residual=None):
     """Sparse-topology gossip via collective_permute ring schedules.
 
     For a sparse mixing matrix P, the dense all-gather backend moves every
@@ -134,12 +268,23 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     Traffic per chip per used offset = local param bytes — so total gossip
     wire bytes scale with the number of DISTINCT offsets in the topology,
     not with world size (the paper's sparse-peers economy, made explicit).
+
+    ``wire``/``residual``: same contract as ``mix_pytree``. With
+    ``wire="int8"`` the ring permutes the int8 payload + one fp32 scale per
+    worker instead of fp32 leaves — per-offset bytes drop ~4× on top of the
+    offset-skipping economy (with "bf16", ~2×). Encoding and the EF21
+    residual are computed OUTSIDE the shard_map: quantization is row-local,
+    so it shards trivially and adds no cross-pod traffic.
     """
     from jax.sharding import PartitionSpec as Ps
 
     from repro.compat import shard_map
 
     w = P.shape[0]
+    wire = normalize_wire(wire)
+    if residual is not None and wire is None:
+        raise ValueError("error-feedback residual needs a lossy wire "
+                         "(wire='bf16'|'int8')")
     if adjacency is not None:               # static sparsity
         a = np.asarray(adjacency) | np.eye(w, dtype=bool)
         used_offsets = [o for o in range(w)
@@ -147,30 +292,64 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     else:                                   # documented dense fallback
         used_offsets = list(range(w))
 
-    def body(p_local, *leaves_local):
-        # p_local: [1, W] this worker's mixing row; leaves: [1, ...] local
+    leaves, treedef = jax.tree.flatten(stacked)
+    r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
+        else [None] * len(leaves)
+
+    # encode each leaf for the wire (row-local, shards with the worker axis)
+    payloads, scales, new_rs = [], [], []
+    for x, r in zip(leaves, r_leaves):
+        if wire is None:
+            payloads.append(x)
+            scales.append(None)
+            new_rs.append(r)
+            continue
+        flat = x.reshape(w, -1)
+        r_flat = r.reshape(w, -1) if r is not None else None
+        payload, scale, nr = _encode_rows(flat, r_flat, wire)
+        payloads.append(payload.reshape(x.shape))
+        scales.append(scale)
+        new_rs.append(nr.reshape(x.shape) if nr is not None else None)
+    has_scale = wire == "int8"
+
+    def body(p_local, *args):
+        # p_local: [1, W] this worker's mixing row; payload leaves [1, ...]
+        # local; int8 wire appends one [1] scale per leaf.
+        n = len(leaves)
+        qs, scs = args[:n], args[n:] if has_scale else (None,) * n
         idx = jax.lax.axis_index(axis)
         outs = []
-        for leaf in leaves_local:
-            acc_leaf = jnp.zeros_like(leaf, dtype=jnp.float32)
+        for q, s in zip(qs, scs):
+            acc = jnp.zeros(q.shape, jnp.float32)
             for o in used_offsets:
                 src = (idx - o) % w
-                weight = p_local[0, src]
+                weight = p_local[0, src].astype(jnp.float32)
                 if o == 0:
-                    contrib = leaf
+                    qq, ss = q, s
                 else:
-                    perm = [(s, (s + o) % w) for s in range(w)]
-                    contrib = jax.lax.ppermute(leaf, axis, perm)
-                acc_leaf = acc_leaf + weight.astype(jnp.float32) * \
-                    contrib.astype(jnp.float32)
-            outs.append(acc_leaf.astype(leaf.dtype))
+                    perm = [(j, (j + o) % w) for j in range(w)]
+                    qq = jax.lax.ppermute(q, axis, perm)
+                    ss = jax.lax.ppermute(s, axis, perm) \
+                        if s is not None else None
+                if ss is not None:          # dequant: fold scale into weight
+                    weight = weight * ss[0]
+                acc = acc + weight * qq.astype(jnp.float32)
+            outs.append(acc)
         return tuple(outs)
 
-    leaves, treedef = jax.tree.flatten(stacked)
     specs = tuple(Ps(axis) for _ in leaves)
+    in_specs = (Ps(axis, None),) + specs
+    operands = list(payloads)
+    if has_scale:
+        in_specs = in_specs + specs
+        operands += scales
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(Ps(axis, None),) + specs,
+        in_specs=in_specs,
         out_specs=specs, check_vma=False)
-    out_leaves = fn(P.astype(jnp.float32), *leaves)
-    return jax.tree.unflatten(treedef, list(out_leaves))
+    out_leaves = fn(P.astype(jnp.float32), *operands)
+    out_leaves = [o.astype(x.dtype) for o, x in zip(out_leaves, leaves)]
+    mixed = jax.tree.unflatten(treedef, out_leaves)
+    if residual is not None:
+        return mixed, jax.tree.unflatten(treedef, new_rs)
+    return mixed

@@ -6,6 +6,6 @@ Each kernel ships three surfaces:
   ref.py    — pure-jnp oracles (tests assert allclose, interpret=True)
 """
 from repro.kernels.ops import (  # noqa: F401
-    gossip_mix, gossip_mix_sparse, flash_attention, moe_router_topk,
-    ssd_chunk,
+    gossip_mix, gossip_mix_sparse, gossip_mix_quant, flash_attention,
+    moe_router_topk, ssd_chunk,
 )

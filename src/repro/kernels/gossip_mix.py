@@ -35,10 +35,15 @@ def _kernel(p_ref, w_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def gossip_mix_pallas(P, w, *, block_f: int = DEFAULT_BLOCK_F,
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block_f", "interpret"))
+def gossip_mix_pallas(P, w, *, out_dtype=None,
+                      block_f: int = DEFAULT_BLOCK_F,
                       interpret: bool = True):
-    """P: [W, W]; w: [W, F] with F % block_f == 0 (ops.py pads)."""
+    """P: [W, W]; w: [W, F] with F % block_f == 0 (ops.py pads).
+    ``out_dtype``: store dtype (default w.dtype; accumulation is fp32
+    regardless — int8 wire payloads pass out_dtype=f32 so the quantized
+    grid never rounds the mix back through the wire dtype)."""
     n, f = w.shape
     grid = (f // block_f,)
     return pl.pallas_call(
@@ -49,6 +54,6 @@ def gossip_mix_pallas(P, w, *, block_f: int = DEFAULT_BLOCK_F,
             pl.BlockSpec((n, block_f), lambda i: (0, i)),  # stream tiles
         ],
         out_specs=pl.BlockSpec((n, block_f), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, f), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, f), out_dtype or w.dtype),
         interpret=interpret,
     )(P.astype(jnp.float32), w)

@@ -61,11 +61,14 @@ def _kernel(idx_ref, val_ref, w_ref, o_ref):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def gossip_mix_sparse_pallas(idx, val, w, *, block_f: int = DEFAULT_BLOCK_F,
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block_f", "interpret"))
+def gossip_mix_sparse_pallas(idx, val, w, *, out_dtype=None,
+                             block_f: int = DEFAULT_BLOCK_F,
                              interpret: bool = True):
     """idx: [W, K] int32; val: [W, K]; w: [W, F] with F % block_f == 0
-    (ops.py pads). Returns [W, F] in w's dtype."""
+    (ops.py pads). Returns [W, F] in ``out_dtype`` (default w's dtype;
+    accumulation is fp32 regardless)."""
     n, f = w.shape
     k = idx.shape[1]
     grid = (f // block_f,)
@@ -78,6 +81,6 @@ def gossip_mix_sparse_pallas(idx, val, w, *, block_f: int = DEFAULT_BLOCK_F,
             pl.BlockSpec((n, block_f), lambda i: (0, i)),  # stream tiles
         ],
         out_specs=pl.BlockSpec((n, block_f), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, f), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, f), out_dtype or w.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), val.astype(jnp.float32), w)

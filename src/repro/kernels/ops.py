@@ -13,6 +13,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 from repro.kernels.gossip_mix import gossip_mix_pallas
 from repro.kernels.gossip_mix_sparse import gossip_mix_sparse_pallas
+from repro.kernels.gossip_mix_quant import gossip_mix_quant_pallas
 from repro.kernels.moe_router import moe_router_pallas
 
 
@@ -35,23 +36,42 @@ def _pow2_block(n: int, block: int) -> int:
     return max(16, min(cap, want))
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def gossip_mix(P, w, *, block_f: int = 2048, interpret: bool = True):
-    """P: [W, W]; w: [W, F] (any F — padded internally)."""
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block_f", "interpret"))
+def gossip_mix(P, w, *, out_dtype=None, block_f: int = 2048,
+               interpret: bool = True):
+    """P: [W, W]; w: [W, F] (any F — padded internally). ``out_dtype``
+    overrides the store dtype (default: w's — fp32 accum either way)."""
     wp, pad = _pad_to(w, 1, block_f)
-    out = gossip_mix_pallas(P, wp, block_f=block_f, interpret=interpret)
+    out = gossip_mix_pallas(P, wp, out_dtype=out_dtype, block_f=block_f,
+                            interpret=interpret)
     return out[:, :w.shape[1]] if pad else out
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def gossip_mix_sparse(idx, val, w, *, block_f: int = 2048,
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block_f", "interpret"))
+def gossip_mix_sparse(idx, val, w, *, out_dtype=None, block_f: int = 2048,
                       interpret: bool = True):
     """Padded-CSR gossip: idx/val [W, K]; w [W, F] (any F — padded
-    internally). out[i] = sum_k val[i,k] * w[idx[i,k]]."""
+    internally). out[i] = sum_k val[i,k] * w[idx[i,k]]. ``out_dtype``
+    overrides the store dtype (default: w's — fp32 accum either way)."""
     wp, pad = _pad_to(w, 1, block_f)
-    out = gossip_mix_sparse_pallas(idx, val, wp, block_f=block_f,
-                                   interpret=interpret)
+    out = gossip_mix_sparse_pallas(idx, val, wp, out_dtype=out_dtype,
+                                   block_f=block_f, interpret=interpret)
     return out[:, :w.shape[1]] if pad else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block_f", "interpret"))
+def gossip_mix_quant(idx, val, scale, q, *, out_dtype=jnp.float32,
+                     block_f: int = 2048, interpret: bool = True):
+    """Fused int8 dequantize→mix: idx/val [W, K]; scale [W] f32; q [W, F]
+    int8 (any F — padded internally; int8 zero padding dequantizes to 0).
+    out[i] = sum_k val[i,k] * scale[idx[i,k]] * q[idx[i,k]]."""
+    qp, pad = _pad_to(q, 1, block_f)
+    out = gossip_mix_quant_pallas(idx, val, scale, qp, out_dtype=out_dtype,
+                                  block_f=block_f, interpret=interpret)
+    return out[:, :q.shape[1]] if pad else out
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

@@ -18,6 +18,17 @@ def gossip_mix_sparse_ref(idx, val, w):
                       gathered).astype(w.dtype)
 
 
+def gossip_mix_quant_ref(idx, val, scale, q, out_dtype=jnp.float32):
+    """Quantized padded-CSR gossip (same argument order as the op):
+    idx [W, K] int32, val [W, K] (0 on padding), scale [W] f32 per-row
+    dequant scales, q [W, F] int8.
+    out[i] = sum_k val[i, k] * scale[idx[i, k]] * q[idx[i, k]]."""
+    deq = q.astype(jnp.float32) * scale.reshape(-1, 1)       # [W, F]
+    gathered = deq[idx]                                      # [W, K, F]
+    return jnp.einsum("wk,wkf->wf", val.astype(jnp.float32),
+                      gathered).astype(out_dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q,k,v: [B, H, S, D] (same S). Full-matrix reference attention."""
     b, h, s, d = q.shape

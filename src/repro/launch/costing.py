@@ -26,6 +26,37 @@ from repro.sharding import logical_rules, resolve_spec
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
+def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
+                out_degree: float = 0.0) -> Dict[str, float]:
+    """Per-round DeFTA gossip WIRE cost, accounted by wire dtype.
+
+    Unlike the HLO-parsed collective bytes (which see whatever one backend
+    lowering emits), this is the algorithmic wire contract: every pod ships
+    one serialized model payload to each of its ``out_degree`` outbound
+    peers (default: fully connected, pods-1), with the payload priced by
+    the gossip wire format — 4 B/param fp32, 2 B bf16, 1 B int8 (+ one
+    fp32 scale per worker×leaf quantization row). See core/gossip.py.
+    """
+    import numpy as np
+
+    from repro.launch.roofline import ICI_BW, gossip_round_wire_bytes, \
+        gossip_wire_bytes
+    from repro.models import model as model_mod
+
+    sds = model_mod.abstract_params(cfg)
+    leaves = jax.tree.leaves(sds)
+    n_params = sum(int(np.prod(s.shape)) for s in leaves)
+    deg = out_degree or max(fl_pods - 1, 0)
+    payload = gossip_wire_bytes(n_params, wire, rows=len(leaves))
+    return {
+        "wire": wire or "fp32",
+        "payload_bytes": float(payload),
+        "round_bytes": gossip_round_wire_bytes(
+            n_params, fl_pods, deg, wire, rows=len(leaves)),
+        "t_ici_s": payload * deg / ICI_BW,   # per-pod egress / link bw
+    }
+
+
 def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):

@@ -166,11 +166,18 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         if isinstance(g_cost, (list, tuple)):
             g_cost = g_cost[0]
         g_coll = _cb(g_compiled.as_text())
+        from repro.launch.costing import gossip_cost
         gossip_info = {
             "collective_gbytes_per_chip": sum(g_coll.values()) / 1e9,
             "collective_breakdown": {k: v / 1e9 for k, v in g_coll.items()},
             "t_collective_s": sum(g_coll.values()) / rf.ICI_BW,
             "flops_dev": float(g_cost.get("flops", 0.0)),
+            # algorithmic wire bytes per round, by gossip wire format —
+            # the int8 row is what mix_pytree(wire="int8") actually ships
+            "wire_gbytes_per_round": {
+                fmt or "fp32": gossip_cost(cfg, fl_pods,
+                                           wire=fmt)["round_bytes"] / 1e9
+                for fmt in (None, "bf16", "int8")},
         }
 
     mem = compiled.memory_analysis()

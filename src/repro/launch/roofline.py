@@ -32,6 +32,32 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# gossip wire formats: bytes per parameter on the wire. Single source of
+# truth is core/gossip.py (the module that encodes the payloads); aliases
+# cover the config spellings.
+from repro.core.gossip import WIRE_BYTES as _WIRE_BYTES  # noqa: E402
+
+WIRE_BYTES = {**_WIRE_BYTES, "float32": 4, "bfloat16": 2}
+
+
+def gossip_wire_bytes(n_params: int, wire=None, *, rows: int = 1) -> int:
+    """Bytes of ONE serialized model payload under a gossip wire format:
+    payload + the fp32 per-row quantization scales int8 ships alongside
+    (``rows`` = number of quantization rows, one per worker×leaf)."""
+    b = n_params * WIRE_BYTES[wire]
+    if WIRE_BYTES[wire] == 1:
+        b += 4 * rows
+    return b
+
+
+def gossip_round_wire_bytes(n_params: int, w: int, out_degree: float,
+                            wire=None, *, rows: int = 1) -> float:
+    """Cluster-total gossip wire bytes for one DeFTA round: every worker
+    ships its payload to ``out_degree`` outbound peers. The sparse-topology
+    economy (bytes ∝ nnz edges = w·out_degree, not w²) and the wire-format
+    economy (1/2/4 B per param) compose."""
+    return w * out_degree * gossip_wire_bytes(n_params, wire, rows=rows)
+
 
 def shape_bytes(shape_str: str) -> int:
     """Bytes of one HLO shape literal like ``bf16[16,512,128]``."""

@@ -93,11 +93,32 @@ def build_fl_train_step(cfg: ModelConfig, optimizer, *,
     return fl_step
 
 
-def build_gossip_step(cfg: ModelConfig):
+def build_gossip_step(cfg: ModelConfig, *, wire=None, backend: str = "einsum",
+                      adjacency=None, error_feedback: bool = False):
     """One DeFTA aggregation across pods: params <- P @ params, where P is
-    the (sampled, outdegree-corrected) mixing matrix [npods, npods]."""
-    def gossip_step(stacked_params, mix):
-        return mix_pytree(mix, stacked_params)
+    the (sampled, outdegree-corrected) mixing matrix [npods, npods].
+
+    ``wire``: None | "bf16" | "int8" — the gossip wire format (see
+    core/gossip.py). NOTE the scope of the byte claim: the in-jit
+    backends here (einsum/pallas/sparse) reproduce the wire's NUMERICS —
+    the payload precision every peer receives — but XLA fuses
+    encode→mix inside one program, so GSPMD's collectives still move
+    fp32; the realized ~2×/~4× cross-pod byte cut comes from the
+    multi-host ``mix_pytree_ppermute`` path, which explicitly permutes
+    the int8 payload + scales (``launch.costing.gossip_cost`` prices the
+    algorithmic wire contract either way). With ``error_feedback`` the
+    step becomes ``gossip_step(stacked_params, mix, wire_err) ->
+    (mixed, wire_err')`` carrying the EF21 residual buffers (zeros at step
+    0); without it (default) the signature is unchanged from PR 1."""
+    if error_feedback:
+        def gossip_step(stacked_params, mix, wire_err):
+            return mix_pytree(mix, stacked_params, backend=backend,
+                              adjacency=adjacency, wire=wire,
+                              residual=wire_err)
+    else:
+        def gossip_step(stacked_params, mix):
+            return mix_pytree(mix, stacked_params, backend=backend,
+                              adjacency=adjacency, wire=wire)
     return gossip_step
 
 

@@ -31,6 +31,14 @@ def main():
                     help="DeFTA-across-pods mode")
     ap.add_argument("--pods", type=int, default=2)
     ap.add_argument("--gossip-every", type=int, default=4)
+    ap.add_argument("--gossip-wire", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="gossip payload precision (bf16/int8; the "
+                         "~2x/~4x byte cut is realized on the multi-host "
+                         "ppermute path — in-jit backends reproduce the "
+                         "numerics)")
+    ap.add_argument("--no-gossip-ef", action="store_true",
+                    help="disable EF21 error feedback on lossy wires")
     ap.add_argument("--debug-mesh", action="store_true",
                     help="2x2(x pods) host-device mesh for CPU")
     ap.add_argument("--checkpoint-dir", default="")
@@ -81,13 +89,21 @@ def main():
             stack = lambda t: jax.tree.map(
                 lambda x: jnp.stack([x] * pods), t)
             params, opt_state = stack(params), stack(opt_state)
+            from repro.core.gossip import normalize_wire
+            wire = normalize_wire(args.gossip_wire)
+            use_ef = wire is not None and not args.no_gossip_ef
             fl_step = jax.jit(build_fl_train_step(cfg, opt),
                               donate_argnums=(0, 1))
-            gossip = jax.jit(build_gossip_step(cfg))
             adj = make_topology("dense", pods, pods - 1)
+            gossip = jax.jit(build_gossip_step(
+                cfg, wire=wire, adjacency=adj if wire else None,
+                error_feedback=use_ef))
             sizes = np.full(pods, args.batch)
             P = jnp.asarray(mixing_matrix(adj, sizes, "defta"),
                             jnp.float32)
+            wire_err = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params) \
+                if use_ef else None
             for i in range(args.steps):
                 b = batcher.batch_at(i)
                 batch = {k: jnp.asarray(v).reshape(
@@ -96,7 +112,10 @@ def main():
                 params, opt_state, step, losses = fl_step(
                     params, opt_state, step, batch)
                 if (i + 1) % args.gossip_every == 0:
-                    params = gossip(params, P)
+                    if use_ef:
+                        params, wire_err = gossip(params, P, wire_err)
+                    else:
+                        params = gossip(params, P)
                 print(f"step {i:4d} losses="
                       f"{[round(float(x), 4) for x in losses]} "
                       f"({time.time() - t0:.2f}s)"

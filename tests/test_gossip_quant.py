@@ -1,0 +1,281 @@
+"""Quantized error-feedback gossip wire stack (ISSUE 2).
+
+Contracts:
+* fused int8 quantize→mix→dequantize Pallas kernel == jnp oracle
+* per-row symmetric quantization round-trips within 1 LSB of scale
+* wire="int8"|"bf16" agrees ACROSS backends bit-for-bit (the dequant
+  fusion — scales folded into P / the CSR weights — changes no math)
+* EF21 residual contract: residual == encode loss; feeding it back keeps
+  repeated lossy mixing unbiased (error compensated, not compounded)
+* run_defta on the int8 wire learns; EF beats no-EF at equal epochs
+* sparse_support is memoized on adjacency bytes (cache-hit satellite)
+* device-side async early exit == host-exit reference path
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import mixing_matrix
+from repro.core.gossip import (SUPPORT_CACHE_STATS, dequantize_rows_int8,
+                               mix_pytree, normalize_wire,
+                               quantize_rows_int8, sparse_support,
+                               sparse_weights)
+from repro.core.topology import make_topology
+from repro.kernels import gossip_mix_quant
+from repro.kernels.ref import gossip_mix_quant_ref, gossip_mix_ref
+
+
+def _tree(key, w):
+    return {"a": jax.random.normal(jax.random.fold_in(key, 0), (w, 37)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (w, 3, 11))}
+
+
+# ---------------------------------------------------------------------------
+# quantization primitive + fused kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def test_quantize_rows_roundtrip_within_one_lsb():
+    x = jax.random.normal(jax.random.PRNGKey(0), (9, 513)) * \
+        jnp.linspace(0.1, 30.0, 9)[:, None]        # heterogeneous row scales
+    q, scale = quantize_rows_int8(x)
+    assert q.dtype == jnp.int8 and scale.shape == (9,)
+    deq = dequantize_rows_int8(q, scale)
+    # symmetric round-to-nearest: error <= scale/2 per element, per row
+    err = jnp.abs(deq - x)
+    assert bool(jnp.all(err <= scale[:, None] * 0.5 + 1e-7)), \
+        float(err.max())
+
+
+def test_quantize_rows_zero_row_is_safe():
+    x = jnp.zeros((3, 64)).at[1].set(1.0)
+    q, scale = quantize_rows_int8(x)
+    deq = dequantize_rows_int8(q, scale)
+    assert bool(jnp.all(jnp.isfinite(deq)))
+    np.testing.assert_allclose(np.asarray(deq[0]), 0.0)
+
+
+@pytest.mark.parametrize("w,k,f", [(8, 3, 300), (24, 5, 777), (16, 16, 64)])
+def test_quant_kernel_matches_oracle(w, k, f):
+    rng = np.random.default_rng(f)
+    idx = jnp.asarray(rng.integers(0, w, (w, k)).astype(np.int32))
+    val = jnp.asarray(rng.random((w, k)).astype(np.float32))
+    val = val.at[:, -1].set(0.0)          # a padding slot
+    stack = jnp.asarray(rng.standard_normal((w, f)), jnp.float32)
+    q, scale = quantize_rows_int8(stack)
+    out = gossip_mix_quant(idx, val, scale, q)
+    ref = gossip_mix_quant_ref(idx, val, scale, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_quant_kernel_on_real_topology_close_to_fp32():
+    w = 20
+    adj = make_topology("random_kout", w, 4, seed=3)
+    P = jnp.asarray(mixing_matrix(adj, np.arange(1, w + 1), "defta"),
+                    jnp.float32)
+    idx, val = sparse_weights(P, adj)
+    stack = jax.random.normal(jax.random.PRNGKey(3), (w, 4096))
+    q, scale = quantize_rows_int8(stack)
+    out = gossip_mix_quant(idx, val, scale, q)
+    ref = gossip_mix_ref(P, stack)
+    # lossy wire: bounded by the per-row quantization step, not exact
+    bound = float((scale.max() * 0.5) * val.sum(1).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) <= bound
+
+
+# ---------------------------------------------------------------------------
+# mix_pytree wire paths
+# ---------------------------------------------------------------------------
+
+def test_normalize_wire_aliases_and_rejects():
+    assert normalize_wire(None) is None
+    assert normalize_wire("float32") is None
+    assert normalize_wire("fp32") is None
+    assert normalize_wire("bfloat16") == "bf16"
+    assert normalize_wire(jnp.bfloat16) == "bf16"
+    assert normalize_wire("int8") == "int8"
+    with pytest.raises(ValueError, match="wire format"):
+        normalize_wire("int4")
+
+
+@pytest.mark.parametrize("wire", ["bf16", "int8"])
+def test_wire_agrees_across_all_backends(wire):
+    """The dequant fusion (scales folded into P columns / CSR weights /
+    the fused kernel) must be a pure lowering choice: every backend sees
+    the SAME payload, so results agree to fp32 accumulation noise."""
+    w = 16
+    adj = make_topology("random_kout", w, 3, seed=1)
+    P = jnp.asarray(mixing_matrix(adj, np.ones(w), "defta"), jnp.float32)
+    stacked = _tree(jax.random.PRNGKey(0), w)
+    ref = mix_pytree(P, stacked, wire=wire)          # einsum
+    for backend in ("pallas", "sparse", "auto"):
+        out = mix_pytree(P, stacked, backend=backend, adjacency=adj,
+                         wire=wire)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            assert a.dtype == b.dtype      # wire cast never leaks out
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, err_msg=backend)
+
+
+def test_int8_wire_preserves_row_stochastic_identity():
+    """All-ones rows quantize exactly (scale = 1/127, q = 127), so the
+    Lemma-3.2 fixed point survives the lossy wire bit-for-bit."""
+    w = 12
+    adj = make_topology("random_kout", w, 4, seed=2)
+    P = jnp.asarray(mixing_matrix(adj, np.arange(1, w + 1), "defta"),
+                    jnp.float32)
+    ones = {"a": jnp.ones((w, 65)), "b": jnp.ones((w, 2, 9))}
+    for backend, kw in [("einsum", {}), ("pallas", {}),
+                        ("sparse", dict(adjacency=adj)),
+                        ("auto", dict(adjacency=adj))]:
+        out = mix_pytree(P, ones, backend=backend, wire="int8", **kw)
+        for leaf in jax.tree.leaves(out):
+            np.testing.assert_allclose(np.asarray(leaf), 1.0, rtol=1e-5,
+                                       err_msg=backend)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_residual_is_exact_encode_loss():
+    w = 10
+    adj = make_topology("ring", w, 2, seed=0)
+    P = jnp.asarray(mixing_matrix(adj, np.ones(w), "defta"), jnp.float32)
+    stacked = _tree(jax.random.PRNGKey(5), w)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), stacked)
+    _, res = mix_pytree(P, stacked, backend="sparse", adjacency=adj,
+                        wire="int8", residual=zeros)
+    for x, r in zip(jax.tree.leaves(stacked), jax.tree.leaves(res)):
+        flat = x.reshape(w, -1)
+        q, s = quantize_rows_int8(flat)
+        expect = flat - dequantize_rows_int8(q, s)
+        np.testing.assert_allclose(np.asarray(r.reshape(w, -1)),
+                                   np.asarray(expect), atol=1e-6)
+
+
+def test_error_feedback_requires_lossy_wire():
+    P = jnp.eye(4)
+    t = {"a": jnp.ones((4, 8))}
+    with pytest.raises(ValueError, match="lossy wire"):
+        mix_pytree(P, t, residual=t)
+
+
+def test_error_feedback_unbiases_repeated_mixing():
+    """Identity-P lossy mixing repeated T times: with EF the time-average
+    of what went on the wire converges to the true value (EF21 property);
+    fire-and-forget keeps a persistent quantization bias."""
+    w, f, steps = 6, 257, 24
+    P = jnp.eye(w)
+    x = {"a": jax.random.normal(jax.random.PRNGKey(7), (w, f)) * 3.0}
+    res = jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32), x)
+    acc_ef = jnp.zeros((w, f))
+    for _ in range(steps):
+        out, res = mix_pytree(P, x, wire="int8", residual=res)
+        acc_ef = acc_ef + out["a"]
+    out_noef = mix_pytree(P, x, wire="int8")  # deterministic: same each step
+    err_ef = float(jnp.abs(acc_ef / steps - x["a"]).max())
+    err_noef = float(jnp.abs(out_noef["a"] - x["a"]).max())
+    assert err_ef < err_noef / 3, (err_ef, err_noef)
+
+
+def test_run_defta_int8_wire_learns_and_carries_residuals():
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import evaluate, run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 6
+    data = federated_dataset("vector", w, np.random.default_rng(2),
+                             n_per_worker=96, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=2,
+                      local_epochs=3, gossip_dtype="int8")
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    st, _, mal, _ = run_defta(jax.random.PRNGKey(2), task, cfg, train,
+                              data, epochs=8, gossip_backend="auto")
+    assert st.wire_err is not None
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree.leaves(st.wire_err))
+    m, _, _ = evaluate(task, st, data["test_x"], data["test_y"], mal)
+    assert m > 0.3, m
+
+
+# ---------------------------------------------------------------------------
+# sparse_support memoization (satellite)
+# ---------------------------------------------------------------------------
+
+def test_sparse_support_cache_hit():
+    adj = make_topology("random_kout", 31, 4, seed=9)
+    # two equal-content copies must share one cache entry
+    before = dict(SUPPORT_CACHE_STATS)
+    idx1, val1 = sparse_support(np.array(adj))
+    after_first = dict(SUPPORT_CACHE_STATS)
+    idx2, val2 = sparse_support(np.array(adj))
+    after_second = dict(SUPPORT_CACHE_STATS)
+    assert idx1 is idx2 and val1 is val2          # same cached objects
+    assert after_second["hits"] == after_first["hits"] + 1
+    assert after_second["misses"] == after_first["misses"]
+    assert after_first["misses"] <= before["misses"] + 1
+    np.testing.assert_array_equal(idx1, idx2)
+
+
+# ---------------------------------------------------------------------------
+# async device-side early exit (satellite)
+# ---------------------------------------------------------------------------
+
+def _async_setup():
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 5
+    data = federated_dataset("vector", w, np.random.default_rng(4),
+                             n_per_worker=48, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=1,
+                      local_epochs=1)
+    train = TrainConfig(learning_rate=0.05, batch_size=16)
+    return data, task, cfg, train
+
+
+@pytest.mark.parametrize("ticks,target", [(21, 6), (8, 100)])
+def test_async_device_exit_matches_host_reference(ticks, target):
+    """Same keys, same chunking — the lax.while_loop path must reproduce
+    the host-sync path exactly, including when the target is never reached
+    (ticks budget exhausted) and when ticks % check_every != 0."""
+    from repro.core.async_defta import run_async_defta
+
+    data, task, cfg, train = _async_setup()
+    kw = dict(ticks=ticks, target_epochs=target, check_every=4)
+    st_d, _, _, _ = run_async_defta(jax.random.PRNGKey(0), task, cfg,
+                                    train, data, **kw)
+    st_h, _, _, _ = run_async_defta(jax.random.PRNGKey(0), task, cfg,
+                                    train, data, host_exit=True, **kw)
+    np.testing.assert_array_equal(np.asarray(st_d.epoch),
+                                  np.asarray(st_h.epoch))
+    for a, b in zip(jax.tree.leaves(st_d.params),
+                    jax.tree.leaves(st_h.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_d.conf),
+                               np.asarray(st_h.conf), atol=1e-6)
+    # dead chunk-padding ticks are skipped entirely (lax.cond), so even
+    # the PRNG key matches the host path bit-for-bit
+    np.testing.assert_array_equal(np.asarray(st_d.key),
+                                  np.asarray(st_h.key))
+
+
+def test_async_early_exit_stops_at_target():
+    from repro.core.async_defta import run_async_defta
+
+    data, task, cfg, train = _async_setup()
+    st, _, mal, _ = run_async_defta(jax.random.PRNGKey(1), task, cfg,
+                                    train, data, ticks=60, target_epochs=3,
+                                    check_every=4)
+    ep = np.asarray(st.epoch)[~mal]
+    assert (ep >= 3).all()
+    # stopped well before the tick budget: fastest worker ~ chunk bound,
+    # not 60 ticks of epochs
+    assert ep.max() < 30, ep
