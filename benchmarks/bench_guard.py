@@ -10,7 +10,11 @@ fails (exit 1) when the headline wins regress:
   be free);
 * the int8 wire must stay ≤ 0.3× fp32 bytes (structural — catches payload
   accounting regressions);
-* the quantized-convergence parity check must be present and passing.
+* the quantized-convergence parity check must be present and passing;
+* the scenario engine must stay free on the superstep: a churn+attack
+  scenario run may not exceed ``1 + tolerance`` times the static run's
+  wall clock, and its dispatch count must be IDENTICAL (scenarios compile
+  to device-side data, never to extra dispatches).
 
 Interpret-mode timings are noisy; the guard compares RATIOS within one run
 (dense/sparse from the same process share the noise), not absolute times
@@ -82,6 +86,25 @@ def check(baseline, fresh, tolerance):
     else:
         print(f"quant convergence: int8+EF within "
               f"{conv['rel_delta']:.3%} of fp32 final loss")
+
+    scn = fresh.get("scenario_overhead")
+    if not scn:
+        failures.append("fresh bench has no scenario_overhead entry")
+    else:
+        print(f"scenario superstep overhead: {scn['ratio']:.2f}x static "
+              f"(compile_scenario {scn['compile_scenario_s'] * 1e3:.0f}ms, "
+              f"dispatches {scn['dispatches_scenario']} vs "
+              f"{scn['dispatches_static']})")
+        if scn["dispatches_scenario"] != scn["dispatches_static"]:
+            failures.append(
+                f"scenario run changed the dispatch count: "
+                f"{scn['dispatches_scenario']} vs "
+                f"{scn['dispatches_static']} — scenarios must stay data, "
+                f"not control flow")
+        if scn["ratio"] > 1 + tolerance:
+            failures.append(
+                f"scenario-compiled superstep {scn['ratio']:.2f}x slower "
+                f"than static (gate {1 + tolerance:.2f}x)")
     return failures
 
 

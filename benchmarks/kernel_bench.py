@@ -122,8 +122,10 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
 
     superstep = bench_superstep()
     quant_convergence = bench_quant_convergence()
+    scenario_overhead = bench_scenario_overhead()
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
-                   quant_convergence=quant_convergence)
+                   quant_convergence=quant_convergence,
+                   scenario_overhead=scenario_overhead)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -210,6 +212,59 @@ def bench_quant_convergence(epochs: int = 200, tolerance: float = 0.02):
     return dict(epochs=epochs, loss_fp32=loss_fp32, loss_int8_ef=loss_int8,
                 loss_int8_no_ef=loss_int8_noef, rel_delta=rel,
                 tolerance=tolerance)
+
+
+def bench_scenario_overhead(epochs: int = 60):
+    """Scenario-engine overhead on the superstepped driver: the same run
+    with a churn+sign-flip+straggler scenario vs the static topology, both
+    end-to-end (host compile_scenario + trace + XLA compile + execute).
+    The contract: identical dispatch counts (scenarios are data, not
+    control flow) and bounded wall-clock overhead per superstep — the
+    per-epoch mask lookups, dynamic outdegree renormalization and attack
+    transforms ride inside the scan."""
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios import (AttackSpec, ChurnSpec, ScenarioSpec,
+                                 StragglerSpec, compile_scenario)
+
+    w = 6
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                      local_epochs=1)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(
+        name="bench", attacks=(AttackSpec("sign_flip"),),
+        churn=(ChurnSpec(worker=0, leave=epochs // 2),),
+        stragglers=(StragglerSpec(worker=1, speed=0.5),))
+
+    t0 = time.time()
+    compiled = compile_scenario(spec, w, epochs)
+    compile_s = time.time() - t0
+
+    def once(scenario):
+        stats = {}
+        t0 = time.time()
+        run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                  epochs=epochs, scenario=scenario, stats=stats)
+        return time.time() - t0, stats["dispatches"]
+
+    # best-of-2: run_defta re-traces per call, so each timing includes the
+    # full trace+compile+execute pipeline — exactly the per-superstep cost
+    # a user pays; best-of filters scheduler noise
+    static_s, d_static = min(once(None) for _ in range(2))
+    scn_s, d_scn = min(once(compiled) for _ in range(2))
+    ratio = scn_s / static_s
+    print(f"scenario overhead {epochs} epochs: static {static_s:.2f}s vs "
+          f"scenario {scn_s:.2f}s ({ratio:.2f}x, compile_scenario "
+          f"{compile_s * 1e3:.1f}ms, dispatches {d_static} vs {d_scn})")
+    assert d_scn == d_static, (d_scn, d_static)
+    return dict(epochs=epochs, static_s=static_s, scenario_s=scn_s,
+                ratio=ratio, compile_scenario_s=compile_s,
+                dispatches_static=d_static, dispatches_scenario=d_scn)
 
 
 def run():

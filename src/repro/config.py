@@ -209,8 +209,18 @@ class DeFTAConfig:
     avg_peers: int = 4               # average outdegree (paper: 4)
     num_sampled: int = 2             # |S_i| sampled peers per round (paper: 2)
     topology: str = "random_kout"    # ring | random_kout | erdos | dense
-    aggregation: str = "defta"       # defta | defl | fedavg
+    aggregation: str = "defta"       # weighted: defta | defl | uniform;
+                                     # Byzantine-robust baselines (see
+                                     # scenarios/robust_agg.py):
+                                     # trimmed_mean | median | krum
+    robust_trim: float = 0.25        # trim/f fraction for the robust rules
     use_dts: bool = True
+    time_machine: bool = True        # §3.3 damage check + backup rollback.
+                                     # Off for the classical robust-agg
+                                     # baselines: those algorithms have no
+                                     # rollback — leaving DeFTA's time
+                                     # machine under them would credit the
+                                     # baseline with DeFTA's own defense
     crelu_slope: float = 0.2         # paper Eq. 13
     local_epochs: int = 10           # paper: 10 local epochs per round
     gossip_every: int = 1            # production: gossip every K steps
@@ -225,6 +235,15 @@ class DeFTAConfig:
                                      # quantization error is fed back into
                                      # next round's payload instead of
                                      # compounding
+    gossip_wire_round: str = "nearest"
+                                     # int8 wire rounding: "nearest" |
+                                     # "stochastic" (unbiased per round —
+                                     # E[dequant] == payload; see
+                                     # core/gossip.quantize_rows_int8).
+                                     # Consumed by the simulation engines;
+                                     # the --fl pods trainer takes it via
+                                     # train.py --gossip-wire-round
+                                     # (build_gossip_step(wire_round=))
     # differential privacy (the paper's FedAvg-algorithm-compatibility
     # claim: DP-SGD slots into local training unchanged)
     dp_clip: float = 0.0             # per-example L2 clip (0 = off)

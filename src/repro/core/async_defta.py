@@ -21,18 +21,27 @@ import numpy as np
 import functools
 
 from repro.config import DeFTAConfig, TrainConfig
-from repro.core.defta import (DeFTAState, build_round_fn, init_state,
-                              tree_select)
+from repro.core.defta import (DeFTAState, _pad_workers, build_round_fn,
+                              init_state, resolve_scenario, tree_select)
 from repro.core.tasks import Task
 from repro.core.topology import make_topology
 
 
 def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     data, *, ticks: int, num_malicious: int = 0,
-                    speed_range=(0.3, 1.0), target_epochs: int = 0,
-                    check_every: int = 0, host_exit: bool = False):
+                    scenario=None, speed_range=(0.3, 1.0),
+                    target_epochs: int = 0, check_every: int = 0,
+                    host_exit: bool = False, stats=None):
     """Run until every vanilla worker reaches ``target_epochs`` (if >0) or
     for ``ticks`` ticks. Returns (state, adj, malicious, speeds).
+
+    ``scenario`` (ScenarioSpec / CompiledScenario / preset name) replays a
+    churn/attack/fault timeline over the TICK axis — the global tick index
+    is the scenario epoch, so a worker that is dead at tick t is out of
+    the topology for every worker firing at t, and scenario stragglers
+    compose with the speed model (a worker advances only when it fires AND
+    the scenario lets it). Same dispatch count as a static run; pass
+    ``stats={}`` to get ``{"dispatches": n}`` back.
 
     Ticks advance inside ``jax.lax.scan`` chunks with donated state
     buffers. The target_epochs early-exit predicate is evaluated DEVICE-SIDE
@@ -41,37 +50,45 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     so the whole targeted run is ONE dispatch with zero host round-trips.
     ``host_exit=True`` keeps the PR-1 reference path: host syncs at every
     ``check_every`` boundary. Untargeted runs are a single scan either way."""
-    w = cfg.num_workers + num_malicious
+    num_classes = 0
+    if scenario is not None:
+        if num_malicious:
+            raise ValueError("pass attackers via the scenario, not "
+                             "num_malicious, when a scenario is given")
+        scenario = resolve_scenario(scenario, cfg, max(ticks, 1))
+        w = scenario.num_workers
+        malicious = scenario.malicious.copy()
+        num_classes = int(np.max(data["y"])) + 1
+    else:
+        w = cfg.num_workers + num_malicious
+        malicious = np.zeros(w, bool)
+        malicious[cfg.num_workers:] = True
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
-    malicious = np.zeros(w, bool)
-    malicious[cfg.num_workers:] = True
-    sizes = np.concatenate([
-        np.asarray(data["sizes"]),
-        np.full(num_malicious, int(np.mean(data["sizes"])))])
-    if num_malicious:
-        pad = lambda a: np.concatenate(
-            [a, np.repeat(a[-1:], num_malicious, 0)], 0)
-        data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
-                "mask": pad(data["mask"])}
+    data, sizes = _pad_workers(data, data["sizes"], w - cfg.num_workers)
 
     rng = np.random.default_rng(cfg.seed + 17)
     speeds = jnp.asarray(rng.uniform(*speed_range, size=w))
 
     from repro.core.gossip import uses_error_feedback
-    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
-    rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious)
+    use_ef = uses_error_feedback(cfg)
+    state = init_state(key, task, w, wire_error=use_ef)
+    rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
+                            scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
+    dispatches = 0
 
     def tick(state: DeFTAState, inp):
-        tkey, live = inp
+        tkey, live, t = inp
 
         def run(state):
             fired = jax.random.uniform(tkey, (w,)) < speeds
-            nxt = rnd_fn(state, jdata)
+            nxt = rnd_fn(state, jdata, t)
             # merge: fired workers take the new state, others keep the
             # old. wire_err rides along — a worker that did not fire did
             # not send, so its EF residual must not advance either.
+            # (with a scenario, nxt already froze non-firing/dead workers,
+            # so taking nxt.* for fired workers composes both gates)
             params = tree_select(fired, nxt.params, state.params)
             backup = tree_select(fired, nxt.backup, state.backup)
             wire_err = tree_select(fired, nxt.wire_err, state.wire_err)
@@ -81,7 +98,7 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                 best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
                 last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
                 key=nxt.key,
-                epoch=state.epoch + fired.astype(jnp.int32),
+                epoch=jnp.where(fired, nxt.epoch, state.epoch),
                 wire_err=wire_err)
 
         # dead (chunk-padding) ticks are skipped ENTIRELY — no round
@@ -90,28 +107,52 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
         return jax.lax.cond(live, run, lambda s: s, state), None
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_ticks(st, tkeys):
+    def run_ticks(st, tkeys, ts):
         live = jnp.ones((tkeys.shape[0],), bool)
-        return jax.lax.scan(tick, st, (tkeys, live))[0]
+        return jax.lax.scan(tick, st, (tkeys, live, ts))[0]
 
     if not check_every:
         check_every = min(8, ticks) if target_epochs else ticks
     check_every = max(1, check_every)      # ticks=0 stays a clean no-op
     tkeys = jax.random.split(jax.random.fold_in(key, 99), max(ticks, 1))
     tkeys = tkeys[:ticks]
+    ts_all = jnp.arange(ticks, dtype=jnp.int32)
+
+    # the target_epochs predicate must only wait on workers that CAN get
+    # there: a churned-out or heavily-straggled worker whose scenario fire
+    # opportunities are below the target would freeze the early exit and
+    # burn the whole tick budget
+    required = ~malicious
+    if scenario is not None and target_epochs:
+        opportunities = np.asarray(scenario.fire)[:max(ticks, 1)].sum(0)
+        required = required & (opportunities >= target_epochs)
+        if not required.any():
+            # target unreachable for everyone: a vacuously-true predicate
+            # would exit after ZERO ticks — run the full budget instead,
+            # matching the static engine's ticks-exhausted behaviour
+            required = ~malicious
+
+    def finish(state):
+        if stats is not None:
+            stats["dispatches"] = dispatches
+            stats["ticks"] = ticks
+        return state, adj, malicious, np.asarray(speeds)
 
     if not target_epochs or not ticks:     # no predicate: one plain scan
         if ticks:
-            state = run_ticks(state, tkeys)
-        return state, adj, malicious, np.asarray(speeds)
+            state = run_ticks(state, tkeys, ts_all)
+            dispatches += 1
+        return finish(state)
 
     if host_exit:                          # reference path (PR 1)
         for t0 in range(0, ticks, check_every):
-            state = run_ticks(state, tkeys[t0:t0 + check_every])
-            if bool((np.asarray(state.epoch)[~malicious]
+            state = run_ticks(state, tkeys[t0:t0 + check_every],
+                              ts_all[t0:t0 + check_every])
+            dispatches += 1
+            if bool((np.asarray(state.epoch)[required]
                      >= target_epochs).all()):
                 break
-        return state, adj, malicious, np.asarray(speeds)
+        return finish(state)
 
     # device-side early exit: while_loop over scan chunks, zero round-trips.
     # Ticks are padded up to a whole number of chunks; padded slots carry
@@ -125,10 +166,11 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                               tkeys.dtype)])
     tkeys = tkeys.reshape(nchunks, check_every, *tkeys.shape[1:])
     live = (jnp.arange(padded) < ticks).reshape(nchunks, check_every)
-    vanilla = jnp.asarray(~malicious)
+    ts = jnp.arange(padded, dtype=jnp.int32).reshape(nchunks, check_every)
+    vanilla = jnp.asarray(required)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_until(st, tkeys, live):
+    def run_until(st, tkeys, live, ts):
         def not_done(carry):
             st, c = carry
             reached = jnp.all(jnp.where(vanilla,
@@ -137,11 +179,12 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
         def chunk(carry):
             st, c = carry
-            st = jax.lax.scan(tick, st, (tkeys[c], live[c]))[0]
+            st = jax.lax.scan(tick, st, (tkeys[c], live[c], ts[c]))[0]
             return st, c + 1
 
         return jax.lax.while_loop(not_done, chunk,
                                   (st, jnp.zeros((), jnp.int32)))[0]
 
-    state = run_until(state, tkeys, live)
-    return state, adj, malicious, np.asarray(speeds)
+    state = run_until(state, tkeys, live, ts)
+    dispatches += 1
+    return finish(state)

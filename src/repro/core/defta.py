@@ -6,9 +6,14 @@ by one jitted super-step per global epoch:
     sample peers (DTS θ) → aggregate (outdegree-corrected P) → time-machine
     check → local SGD epochs → DTS confidence update → backup
 
-Malicious workers broadcast ``aggregate + noise`` (the paper's attack
-model); they occupy slots in the stacked arrays but their training is
-irrelevant — only what they *send* matters.
+Attack injection is pluggable (``repro.scenarios.attacks``): by default
+malicious workers broadcast ``aggregate + noise`` (the paper's attack
+model); a compiled ``scenario`` replays an arbitrary event timeline —
+churn, link failures, partitions, stragglers, and any mix of the attack
+zoo — as per-epoch device arrays indexed inside the scanned superstep, so
+scenarios cost ZERO extra dispatches. Malicious workers occupy slots in
+the stacked arrays but their training is irrelevant — only what they
+*send* matters (except ``label_flip``, which poisons what they train on).
 """
 from __future__ import annotations
 
@@ -26,14 +31,9 @@ from repro.core.aggregation import mixing_matrix
 from repro.core.gossip import mix_pytree
 from repro.core.tasks import Task
 from repro.core.topology import make_topology
-
-
-def tree_select(flag, a, b):
-    """Per-worker select: flag [W] bool; a/b stacked pytrees."""
-    def sel(x, y):
-        f = flag.reshape((-1,) + (1,) * (x.ndim - 1))
-        return jnp.where(f, x.astype(y.dtype), y)
-    return jax.tree.map(sel, a, b)
+from repro.scenarios.attacks import tree_select  # noqa: F401 (re-export:
+                                                 # async_defta/fedavg/tests
+                                                 # import it from here)
 
 
 def local_train_fn(task: Task, train: TrainConfig, local_epochs: int,
@@ -125,10 +125,21 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                    adj: np.ndarray, sizes: np.ndarray,
                    malicious: np.ndarray, *,
                    gossip_backend: str = "einsum",
-                   noise_scale: float = 200.0):
-    """Returns an UN-jitted round(state, data) -> state body — scannable,
-    so drivers can fuse many rounds into one XLA dispatch (and jittable
-    as-is for single-round use; see ``build_round``)."""
+                   noise_scale: float = 200.0,
+                   scenario=None, num_classes: int = 0):
+    """Returns an UN-jitted round(state, data, epoch=None) -> state body —
+    scannable, so drivers can fuse many rounds into one XLA dispatch (and
+    jittable as-is for single-round use; see ``build_round``).
+
+    ``scenario``: a ``repro.scenarios.CompiledScenario``. When given, the
+    traced ``epoch`` index looks up that epoch's alive/link/fire/attack
+    state from the compiled device arrays — churn, partitions, stragglers
+    and the whole attack zoo run INSIDE the scan body, no host round-trips.
+    Without it the body reproduces the legacy static-topology round (with
+    the paper's noise attack on ``malicious`` workers) bit-for-bit.
+
+    ``num_classes`` is required when the scenario contains a ``label_flip``
+    attack (the flip is ``y -> C-1-y``)."""
     w = adj.shape[0]
     adj_j = jnp.asarray(adj)
     sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
@@ -138,70 +149,141 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ltrain = local_train_fn(task, train, cfg.local_epochs,
                             dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
 
-    if cfg.aggregation == "defta":
-        col_w = sizes_j / outdeg
-    elif cfg.aggregation == "defl":
-        col_w = sizes_j
-    else:  # uniform gossip
-        col_w = jnp.ones_like(sizes_j)
+    from repro.core.gossip import (dynamic_mixing_matrix, normalize_wire,
+                                   uses_error_feedback)
+    from repro.scenarios import attacks as attacks_mod
+    from repro.scenarios.compile import ATTACK_CODE, epoch_view
+    from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
 
-    from repro.core.gossip import normalize_wire, uses_error_feedback
+    robust = cfg.aggregation in ROBUST_RULES
+    if not robust:
+        if cfg.aggregation == "defta":
+            col_w = sizes_j / outdeg
+        elif cfg.aggregation == "defl":
+            col_w = sizes_j
+        else:  # uniform gossip
+            col_w = jnp.ones_like(sizes_j)
+
     wire = normalize_wire(cfg.gossip_dtype)
     use_ef = uses_error_feedback(cfg)
+    stochastic = wire == "int8" and cfg.gossip_wire_round == "stochastic"
+    # stochastic rounding only exists on the int8 wire; on any other wire
+    # the knob is inert (same downgrade the --fl launch path applies)
+    wire_round = cfg.gossip_wire_round if stochastic else "nearest"
+    if robust and wire is not None:
+        raise ValueError(
+            f"robust aggregation ({cfg.aggregation!r}) simulates lossless "
+            f"model exchange — it never runs the quantized wire, so "
+            f"comparing it against a lossy-wire DeFTA run would be "
+            f"apples-to-oranges; set gossip_dtype='float32'")
+    if scenario is not None:
+        if scenario.num_workers != w:
+            raise ValueError(f"scenario compiled for W="
+                             f"{scenario.num_workers}, topology has {w}")
+        if "label_flip" in scenario.kinds_present and num_classes <= 0:
+            raise ValueError("label_flip scenario needs num_classes > 0")
 
-    def round(state: DeFTAState, data):
-        key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
+    def round(state: DeFTAState, data, epoch=None):
+        if stochastic:
+            key, k_sample, k_train, k_noise, k_wire = \
+                jax.random.split(state.key, 5)
+        else:
+            key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
+            k_wire = None
+
+        # ---- 0. scenario state for this epoch -------------------------
+        if scenario is not None:
+            view = epoch_view(scenario, epoch)
+            alive, fire, att_on = view["alive"], view["fire"], \
+                view["attack_on"]
+            eff_adj = adj_j & view["link_ok"] \
+                & alive[None, :] & alive[:, None]
+        else:
+            eff_adj = adj_j
 
         # ---- 1. peer sampling via DTS weights -------------------------
         if cfg.use_dts:
-            theta = dts_mod.sample_weights(state.conf, adj_j,
+            theta = dts_mod.sample_weights(state.conf, eff_adj,
                                            cfg.crelu_slope)        # [W,W]
         else:
-            theta = adj_j / jnp.maximum(adj_j.sum(1, keepdims=True), 1)
+            theta = eff_adj / jnp.maximum(eff_adj.sum(1, keepdims=True), 1)
         skeys = jax.random.split(k_sample, w)
         sampled = jax.vmap(
             lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
         )(skeys, theta)                                            # [W,W]
 
         # ---- 2. aggregation with outdegree-corrected weights ----------
-        mask = (sampled & adj_j) | jnp.eye(w, dtype=bool)
-        P = mask * col_w[None, :]
-        P = P / P.sum(axis=1, keepdims=True)
-        if use_ef:
-            if state.wire_err is None:
-                raise ValueError(
-                    "cfg enables gossip error feedback on a lossy wire "
-                    "but the state carries no residual buffers — build "
-                    "it with init_state(..., wire_error=True)")
-            agg, wire_err = mix_pytree(P, state.params,
-                                       backend=gossip_backend,
-                                       adjacency=adj, wire=wire,
-                                       residual=state.wire_err)
-        else:
-            agg = mix_pytree(P, state.params, backend=gossip_backend,
-                             adjacency=adj, wire=wire)
+        mask = (sampled & eff_adj) | jnp.eye(w, dtype=bool)
+        if robust:
+            # classical Byzantine-robust baselines: unweighted rule over
+            # the sampled set; P degrades to the uniform bookkeeping
+            # weights the DTS confidence update needs
+            agg = robust_mix(cfg.aggregation, mask, state.params,
+                             trim=cfg.robust_trim)
+            P = mask / mask.sum(axis=1, keepdims=True)
             wire_err = state.wire_err
+        else:
+            if scenario is not None:
+                # per-epoch outdegree renormalization under the dynamic
+                # adjacency (churn/link failures change |D_j|/d_j)
+                P = dynamic_mixing_matrix(sampled, eff_adj, sizes_j,
+                                          cfg.aggregation)
+            else:
+                P = mask * col_w[None, :]
+                P = P / P.sum(axis=1, keepdims=True)
+            if use_ef:
+                if state.wire_err is None:
+                    raise ValueError(
+                        "cfg enables gossip error feedback on a lossy wire "
+                        "but the state carries no residual buffers — build "
+                        "it with init_state(..., wire_error=True)")
+                agg, wire_err = mix_pytree(P, state.params,
+                                           backend=gossip_backend,
+                                           adjacency=adj, wire=wire,
+                                           residual=state.wire_err,
+                                           wire_round=wire_round,
+                                           wire_key=k_wire)
+            else:
+                agg = mix_pytree(P, state.params, backend=gossip_backend,
+                                 adjacency=adj, wire=wire,
+                                 wire_round=wire_round,
+                                 wire_key=k_wire)
+                wire_err = state.wire_err
 
         # ---- 3. time machine: damage check on aggregated model --------
-        loss_agg = jax.vmap(task.loss)(agg, data["x"], data["y"],
+        y_data = data["y"]
+        if scenario is not None and "label_flip" in scenario.kinds_present:
+            # data poisoning: label-flippers train (and self-evaluate) on
+            # y -> C-1-y; their protocol behaviour stays honest
+            lf = (scenario.attack_kind == ATTACK_CODE["label_flip"]) \
+                & att_on
+            y_data = attacks_mod.flip_labels(y_data, lf, num_classes)
+        loss_agg = jax.vmap(task.loss)(agg, data["x"], y_data,
                                        data["mask"])
-        damaged = dts_mod.is_damaged(loss_agg, state.best_loss)
-        start = tree_select(damaged, state.backup, agg)
+        if cfg.time_machine:
+            damaged = dts_mod.is_damaged(loss_agg, state.best_loss)
+            start = tree_select(damaged, state.backup, agg)
+        else:
+            damaged = jnp.zeros_like(loss_agg, bool)
+            start = agg
 
         # ---- 4. local training (the compensation step included) -------
         tkeys = jax.random.split(k_train, w)
         trained, train_loss = jax.vmap(
             lambda k, p, x, y, m: ltrain(k, p, x, y, m)
-        )(tkeys, start, data["x"], data["y"], data["mask"])
+        )(tkeys, start, data["x"], y_data, data["mask"])
 
-        # ---- 5. malicious workers emit aggregate + noise --------------
-        leaves, treedef = jax.tree.flatten(agg)
-        nkeys = jax.random.split(k_noise, len(leaves))
-        noise = jax.tree.unflatten(treedef, [
-            noise_scale * jax.random.normal(k, x.shape, x.dtype)
-            for k, x in zip(nkeys, leaves)])
-        poisoned = jax.tree.map(lambda a, n: a + n, agg, noise)
-        trained = tree_select(malicious_j, poisoned, trained)
+        # ---- 5. attack injection (repro.scenarios.attacks) ------------
+        if scenario is not None:
+            trained = attacks_mod.poison_sends(
+                k_noise, scenario.kinds_present, scenario.attack_kind,
+                scenario.attack_scale, att_on, agg, trained)
+        else:
+            # legacy path: the paper's aggregate+noise on ``malicious``
+            poisoned = attacks_mod.noise(
+                k_noise, agg, trained, jnp.full((w,), noise_scale,
+                                                jnp.float32))
+            trained = tree_select(malicious_j, poisoned, trained)
 
         # ---- 6. DTS confidence update (Algorithm 3) --------------------
         loss_trust = jnp.where(damaged, dts_mod.DAMAGE_PENALTY,
@@ -209,14 +291,35 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         conf = state.conf - sampled * P * loss_trust[:, None]
 
         improved = (loss_agg < state.best_loss) & ~damaged
-        backup = tree_select(improved, trained, state.backup)
+        # the time machine's compensation step RATCHETS: a damaged round
+        # starts from the backup, so its trained result is train(backup) —
+        # clean by induction — and becomes the new backup. Without this a
+        # worker whose whole peer set is malicious (66%-regime reality)
+        # re-trains the same frozen backup forever and never progresses.
+        backup = tree_select(improved | damaged, trained, state.backup)
         best_loss = jnp.where(improved, loss_agg, state.best_loss)
         last_loss = jnp.where(damaged, state.last_loss, loss_agg)
 
-        return DeFTAState(params=trained, backup=backup, conf=conf,
-                          best_loss=best_loss, last_loss=last_loss,
-                          key=key, epoch=state.epoch + 1,
-                          wire_err=wire_err)
+        if scenario is None:
+            return DeFTAState(params=trained, backup=backup, conf=conf,
+                              best_loss=best_loss, last_loss=last_loss,
+                              key=key, epoch=state.epoch + 1,
+                              wire_err=wire_err)
+
+        # ---- 7. churn/straggler merge: non-firing workers freeze ------
+        # (dead workers are absent from eff_adj so nobody consumed them;
+        # stragglers expose their stale params and skip their own round)
+        params = tree_select(fire, trained, state.params)
+        backup = tree_select(fire, backup, state.backup)
+        wire_err = tree_select(fire, wire_err, state.wire_err) \
+            if use_ef else state.wire_err
+        return DeFTAState(
+            params=params, backup=backup,
+            conf=jnp.where(fire[:, None], conf, state.conf),
+            best_loss=jnp.where(fire, best_loss, state.best_loss),
+            last_loss=jnp.where(fire, last_loss, state.last_loss),
+            key=key, epoch=state.epoch + fire.astype(jnp.int32),
+            wire_err=wire_err)
 
     return round
 
@@ -236,13 +339,60 @@ def evaluate(task: Task, state: DeFTAState, test_x, test_y,
     return float(accs.mean()), float(accs.std()), accs
 
 
+def resolve_scenario(scenario, cfg: DeFTAConfig, epochs: int):
+    """Accept a ScenarioSpec (compiled here over ``epochs``), an
+    already-compiled CompiledScenario, or a preset name string."""
+    from repro.scenarios.compile import CompiledScenario, compile_scenario
+    from repro.scenarios.spec import ScenarioSpec, get_scenario
+
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario, cfg.num_workers)
+    if isinstance(scenario, ScenarioSpec):
+        scenario = compile_scenario(scenario, cfg.num_workers, epochs)
+    if not isinstance(scenario, CompiledScenario):
+        raise TypeError(f"scenario must be a ScenarioSpec, "
+                        f"CompiledScenario or preset name, got "
+                        f"{type(scenario).__name__}")
+    if scenario.num_vanilla != cfg.num_workers:
+        raise ValueError(f"scenario compiled for {scenario.num_vanilla} "
+                         f"vanilla workers, cfg has {cfg.num_workers}")
+    if scenario.epochs < epochs:
+        # the topology state clamps past the horizon fine, but the
+        # per-epoch fire/attack_on schedules would freeze at whatever the
+        # last epoch's random draw happened to be — a straggler could be
+        # stuck never firing. Precompiled scenarios must cover the run.
+        raise ValueError(f"scenario horizon {scenario.epochs} is shorter "
+                         f"than the run ({epochs} epochs) — recompile "
+                         f"with compile_scenario(spec, W, {epochs})")
+    return scenario
+
+
+def _pad_workers(data, sizes, extra: int):
+    """Pad stacked per-worker data/sizes with ``extra`` attacker slots
+    (unused training slots — only what attackers *send* matters)."""
+    sizes = np.concatenate([np.asarray(sizes),
+                            np.full(extra, int(np.mean(sizes)))])
+    if extra:
+        pad = lambda a: np.concatenate(
+            [a, np.repeat(a[-1:], extra, 0)], 0)
+        data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
+                "mask": pad(data["mask"])}
+    return data, sizes
+
+
 def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
-              *, epochs: int, num_malicious: int = 0,
+              *, epochs: int, num_malicious: int = 0, scenario=None,
               gossip_backend: str = "einsum", eval_every: int = 0,
               test_x=None, test_y=None, superstep: bool = True,
               stats: Optional[dict] = None):
     """End-to-end driver. Malicious workers are appended after the vanilla
     ones (paper §4.3: normal workers fixed, attackers newly joined).
+
+    ``scenario`` (a ``repro.scenarios`` ScenarioSpec / CompiledScenario /
+    preset name) replaces ``num_malicious`` with a full event timeline:
+    its attackers are appended the same way, and churn/link/straggler
+    events replay inside the scanned supersteps — same dispatch count as a
+    static run.
 
     With ``superstep`` (default) epochs advance inside ``jax.lax.scan``
     chunks bounded by eval points: a run is ceil(epochs / eval_every) XLA
@@ -252,25 +402,28 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     per-epoch dispatch loop (the reference the fused path is tested
     against). Pass ``stats={}`` to get ``{"dispatches": n, ...}`` back.
     """
-    w = cfg.num_workers + num_malicious
+    num_classes = 0
+    if scenario is not None:
+        if num_malicious:
+            raise ValueError("pass attackers via the scenario, not "
+                             "num_malicious, when a scenario is given")
+        scenario = resolve_scenario(scenario, cfg, epochs)
+        w = scenario.num_workers
+        malicious = scenario.malicious.copy()
+        num_classes = int(np.max(data["y"])) + 1
+    else:
+        w = cfg.num_workers + num_malicious
+        malicious = np.zeros(w, bool)
+        malicious[cfg.num_workers:] = True
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
-    malicious = np.zeros(w, bool)
-    malicious[cfg.num_workers:] = True
-    sizes = np.concatenate([
-        np.asarray(data["sizes"]),
-        np.full(num_malicious, int(np.mean(data["sizes"])))])
-
-    # malicious workers need data slots (unused) — pad stacked data
-    if num_malicious:
-        pad = lambda a: np.concatenate(
-            [a, np.repeat(a[-1:], num_malicious, 0)], 0)
-        data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
-                "mask": pad(data["mask"])}
+    # attacker slots need (unused) data slots — pad stacked data
+    data, sizes = _pad_workers(data, data["sizes"], w - cfg.num_workers)
 
     from repro.core.gossip import uses_error_feedback
     state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
-                            gossip_backend=gossip_backend)
+                            gossip_backend=gossip_backend,
+                            scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
     history = []
@@ -279,7 +432,7 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     if not superstep:                       # per-epoch reference driver
         rnd = jax.jit(rnd_fn)
         for e in range(epochs):
-            state = rnd(state, jdata)
+            state = rnd(state, jdata, jnp.int32(e))
             dispatches += 1
             if eval_every and (e + 1) % eval_every == 0 \
                     and test_x is not None:
@@ -288,10 +441,10 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     else:
         @functools.partial(jax.jit, static_argnames=("length",),
                            donate_argnums=(0,))
-        def run_chunk(st, jd, *, length):
-            def body(s, _):
-                return rnd_fn(s, jd), None
-            return jax.lax.scan(body, st, None, length=length)[0]
+        def run_chunk(st, jd, e0, *, length):
+            def body(s, e):
+                return rnd_fn(s, jd, e), None
+            return jax.lax.scan(body, st, e0 + jnp.arange(length))[0]
 
         done = 0
         # eval boundaries only matter when there is something to eval —
@@ -300,7 +453,7 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
             else epochs
         while done < epochs:
             n = min(chunk, epochs - done)
-            state = run_chunk(state, jdata, length=n)
+            state = run_chunk(state, jdata, jnp.int32(done), length=n)
             dispatches += 1
             done += n
             if eval_every and done % eval_every == 0 \

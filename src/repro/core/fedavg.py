@@ -59,12 +59,11 @@ def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             lambda k, p, x, y, m: ltrain(k, p, x, y, m)
         )(tkeys, bcast, data["x"], data["y"], data["mask"])
 
-        # malicious: send server + noise
-        leaves, treedef = jax.tree.flatten(bcast)
-        nkeys = jax.random.split(k_noise, len(leaves))
-        poisoned = jax.tree.unflatten(treedef, [
-            x + noise_scale * jax.random.normal(k, x.shape, x.dtype)
-            for k, x in zip(nkeys, leaves)])
+        # malicious: send server + noise (repro.scenarios.attacks zoo —
+        # the undefended baseline keeps the paper's one attack model)
+        from repro.scenarios.attacks import noise as noise_attack
+        poisoned = noise_attack(k_noise, bcast, trained,
+                                jnp.full((w,), noise_scale, jnp.float32))
         trained = tree_select(malicious_j, poisoned, trained)
 
         # aggregation weights

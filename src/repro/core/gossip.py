@@ -84,14 +84,35 @@ def uses_error_feedback(cfg) -> bool:
         and normalize_wire(cfg.gossip_dtype) is not None
 
 
-def quantize_rows_int8(flat):
+def quantize_rows_int8(flat, *, rounding: str = "nearest", key=None):
     """Per-row symmetric int8 quantization of a [W, F] stack.
     Returns (q [W, F] int8, scale [W] f32) with q = round(flat / scale)
-    clipped to ±127 and scale = max|row| / 127 (never zero)."""
+    clipped to ±127 and scale = max|row| / 127 (never zero).
+
+    ``rounding="stochastic"`` rounds ``x`` up with probability equal to its
+    fractional part (needs ``key``): E[dequant(q)] == x exactly, so the
+    per-round quantization is UNBIASED — noise instead of bias, which
+    composes with (or substitutes for) the EF21 residual for workers that
+    drop out mid-stream and never get to replay their residual. On TPU the
+    same draw maps to ``pltpu.prng_random_bits`` inside the encode; the
+    encode is row-local jnp here (it runs outside the mix kernels), so the
+    lowering is already fused into the superstep either way."""
     flat = flat.astype(jnp.float32)
     amax = jnp.max(jnp.abs(flat), axis=1)
     scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
+    scaled = flat / scale[:, None]
+    if rounding == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        lo = jnp.floor(scaled)
+        u = jax.random.uniform(key, scaled.shape, jnp.float32)
+        q = lo + (u < (scaled - lo)).astype(jnp.float32)
+    elif rounding == "nearest":
+        q = jnp.round(scaled)
+    else:
+        raise ValueError(f"unknown wire rounding {rounding!r} "
+                         f"(expected 'nearest' | 'stochastic')")
+    q = jnp.clip(q, -127, 127)
     return q.astype(jnp.int8), scale
 
 
@@ -150,6 +171,43 @@ def sparse_weights(P, adjacency):
     return idx_j, val * jnp.asarray(valid, jnp.float32)
 
 
+def dynamic_mixing_matrix(sampled, eff_adj, sizes, scheme: str = "defta"):
+    """Per-epoch mixing matrix under a DYNAMIC (traced) adjacency.
+
+    The scenario engine changes who is reachable every epoch (churn, link
+    failures, partitions), so the aggregation weights cannot be baked at
+    build time: outdegrees — the |D_j|/d_j correction of Theorem 3.3 —
+    must be recomputed from the epoch's effective adjacency, otherwise a
+    worker whose receivers died keeps its stale (under-)weighting.
+
+    sampled:  [W, W] bool, this round's sampled peers.
+    eff_adj:  [W, W] bool, the epoch's effective topology (static adj ∧
+              link_ok ∧ alive-row ∧ alive-col). May be traced.
+    sizes:    [W] f32 dataset sizes.
+    Returns row-stochastic P [W, W]; every row keeps its self-loop, so an
+    isolated (or dead) worker degrades to the identity row — its params
+    pass through the mix unchanged.
+
+    P's support is ⊆ static adjacency ∪ self-loops by construction, so the
+    sparse backend reuses the STATIC padded-CSR support (masked entries
+    are zero-weighted slots) and the ``sparse_support`` memo is untouched
+    by per-epoch masks.
+    """
+    w = eff_adj.shape[0]
+    eye = jnp.eye(w, dtype=bool)
+    outdeg = (eff_adj | eye).sum(axis=0).astype(jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    if scheme == "defta":
+        col_w = sizes / outdeg
+    elif scheme == "defl":
+        col_w = sizes
+    else:                                   # uniform gossip
+        col_w = jnp.ones_like(sizes)
+    mask = (sampled & eff_adj) | eye
+    P = mask * col_w[None, :]
+    return P / jnp.maximum(P.sum(axis=1, keepdims=True), 1e-12)
+
+
 def _resolve_backend(backend, adjacency, w):
     if backend != "auto":
         return backend
@@ -159,7 +217,8 @@ def _resolve_backend(backend, adjacency, w):
     return "sparse" if a.mean() <= SPARSE_DENSITY_THRESHOLD else "pallas"
 
 
-def _encode_rows(flat, r_flat, wire):
+def _encode_rows(flat, r_flat, wire, *, rounding: str = "nearest",
+                 key=None):
     """Encode one worker-stacked [W, F] leaf for the wire. Returns
     (payload, scale_or_None, new_residual_or_None): with ``r_flat`` (EF21)
     the encoded row is ``flat + r_flat`` and the residual is what the
@@ -171,25 +230,33 @@ def _encode_rows(flat, r_flat, wire):
         payload, scale = send.astype(jnp.bfloat16), None
         deq = payload.astype(jnp.float32)
     else:                                         # int8
-        payload, scale = quantize_rows_int8(send)
+        payload, scale = quantize_rows_int8(send, rounding=rounding,
+                                            key=key)
         deq = dequantize_rows_int8(payload, scale)
     new_r = (send - deq) if r_flat is not None else None
     return payload, scale, new_r
 
 
 def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
-               wire=None, wire_dtype=None, residual=None):
+               wire=None, wire_dtype=None, residual=None,
+               wire_round: str = "nearest", wire_key=None):
     """P: [W, W] row-stochastic; stacked: pytree with leading axis W.
 
     ``adjacency``: static bool [W, W] support of P (required for the
     ``sparse`` backend, enables it under ``auto``). P's nonzeros must lie
     within adjacency ∪ self-loops — DeFTA's sampled mixing matrices do by
-    construction (sampled ⊆ topology edges).
+    construction (sampled ⊆ topology edges). A per-epoch dynamic mask
+    (churn, link failures) rides in P's VALUES: masked entries are zero,
+    which the padded-CSR backends express as zero-weighted slots of the
+    SAME static support — the ``sparse_support`` memo never churns.
 
     ``wire``: None | "bf16" | "int8" — what crosses the wire (module
     docstring). ``wire_dtype`` is the PR-1 spelling, kept as an alias.
     ``residual``: EF21 error-feedback buffers (pytree like ``stacked``);
     when given the return value is ``(mixed, new_residual)``.
+    ``wire_round``: "nearest" | "stochastic" rounding on the int8 wire
+    ("stochastic" needs ``wire_key`` and makes the encode unbiased; see
+    ``quantize_rows_int8``).
     """
     w = P.shape[0]
     backend = _resolve_backend(backend, adjacency, w)
@@ -197,6 +264,9 @@ def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
     if residual is not None and wire is None:
         raise ValueError("error-feedback residual needs a lossy wire "
                          "(wire='bf16'|'int8')")
+    if wire_round == "stochastic" and wire != "int8":
+        raise ValueError("wire_round='stochastic' is an int8-wire option "
+                         f"(wire={wire!r})")
 
     if backend == "sparse":
         if adjacency is None:
@@ -229,15 +299,19 @@ def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
     leaves, treedef = jax.tree.flatten(stacked)
     r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
         else [None] * len(leaves)
+    wire_keys = jax.random.split(wire_key, len(leaves)) \
+        if (wire_key is not None and wire_round == "stochastic") \
+        else [None] * len(leaves)
     outs, new_rs = [], []
-    for x, r in zip(leaves, r_leaves):
+    for x, r, wk in zip(leaves, r_leaves, wire_keys):
         flat = x.reshape(w, -1)
         if wire is None:
             out = mix_flat(flat, None)
             new_r = r
         else:
             r_flat = r.reshape(w, -1) if r is not None else None
-            payload, scale, nr = _encode_rows(flat, r_flat, wire)
+            payload, scale, nr = _encode_rows(flat, r_flat, wire,
+                                              rounding=wire_round, key=wk)
             out = mix_flat(payload, scale)
             new_r = nr.reshape(x.shape) if nr is not None else None
         outs.append(out.reshape(x.shape).astype(x.dtype))

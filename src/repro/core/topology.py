@@ -46,11 +46,17 @@ def erdos(n: int, p: float, rng: np.random.Generator) -> np.ndarray:
     # guarantee every worker has at least one in-edge and out-edge
     for i in range(n):
         if not adj[i].any():
-            adj[i, rng.integers(0, n - 1)] = True
-            adj[i, i] = False
-        if not adj[:, i].any():
+            # resample excluding i: j uniform over [0, n-1] \ {i}. (The
+            # old draw could land ON i, and the subsequent diagonal clear
+            # left row i empty — a worker with no peers at all.)
             j = int(rng.integers(0, n - 1))
-            adj[(j if j != i else (j + 1) % n), i] = True
+            adj[i, j if j < i else j + 1] = True
+        if not adj[:, i].any():
+            # same uniform exclusion resample as the row repair (the old
+            # remap of j==i onto (j+1)%n double-weighted worker i+1 and
+            # could never pick n-1)
+            j = int(rng.integers(0, n - 1))
+            adj[j if j < i else j + 1, i] = True
     return adj
 
 

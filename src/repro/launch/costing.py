@@ -57,6 +57,34 @@ def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
     }
 
 
+def scenario_gossip_cost(cfg: ModelConfig, fl_pods: int, compiled_scn, *,
+                         wire=None, out_degree: float = 0.0) -> Dict:
+    """Scenario-adjusted gossip wire cost: the static per-round bytes of
+    ``gossip_cost`` scaled by the scenario's live-edge fraction (each live
+    edge ships one payload, so churn/partitions cut wire bytes
+    proportionally). Reports the per-segment trajectory and the timeline
+    mean — the "cost delta" a dry-run prints next to the static number."""
+    import numpy as np
+
+    from repro.core.topology import make_topology
+
+    base = gossip_cost(cfg, fl_pods, wire=wire, out_degree=out_degree)
+    w = compiled_scn.num_workers
+    adj = make_topology("dense", w, w - 1)
+    s = compiled_scn.summary(adj)
+    frac = s["mean_edge_fraction"]
+    return {
+        **base,
+        "scenario": s["name"],
+        "mean_edge_fraction": frac,
+        "round_bytes_scenario": base["round_bytes"] * frac,
+        "segments": s["segments"],
+        "summary": s,           # the full digest — callers must not
+                                # recompute it (the per-segment loop is
+                                # O(S·W²))
+    }
+
+
 def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):

@@ -37,6 +37,10 @@ SKIPS = {
         "is not a meaningful computation (DESIGN.md §shape-skips)",
 }
 
+# scenario cost reports are compiled over this many epochs (the presets'
+# event timelines all fit well inside it)
+SCENARIO_HORIZON = 50
+
 # archs needing the sliding-window variant for long_500k (full-attention
 # families; window makes decode memory/compute linear)
 SLIDING_WINDOW_FOR_LONG = 4096
@@ -80,7 +84,7 @@ def effective_config(arch: str, shape: ShapeConfig,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                variant: str = "baseline", optimizer: str = "",
                accum_dtype: str = "float32", fl: bool = True,
-               verbose: bool = True):
+               scenario: str = "", verbose: bool = True):
     """Lower + compile one (arch, shape, mesh). Returns result dict.
 
     ``fl=False`` with multi_pod lowers the FedAvg-across-pods baseline:
@@ -179,6 +183,27 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                                            wire=fmt)["round_bytes"] / 1e9
                 for fmt in (None, "bf16", "int8")},
         }
+        if scenario:
+            # scenario summary + cost delta: compile the named event
+            # timeline over the pod workers and report how churn /
+            # partitions move the per-round wire bytes vs the static run
+            from repro.launch.costing import scenario_gossip_cost
+            from repro.scenarios import compile_scenario, get_scenario
+            spec = get_scenario(scenario, fl_pods)
+            compiled_scn = compile_scenario(spec, fl_pods,
+                                            SCENARIO_HORIZON)
+            sc = scenario_gossip_cost(cfg, fl_pods, compiled_scn)
+            gossip_info["scenario"] = {
+                "summary": sc["summary"],
+                "mean_edge_fraction": sc["mean_edge_fraction"],
+                "wire_gbytes_per_round": sc["round_bytes_scenario"] / 1e9,
+                "wire_gbytes_per_round_static": sc["round_bytes"] / 1e9,
+            }
+            if verbose:
+                print(f"  scenario {scenario}: mean edge fraction "
+                      f"{sc['mean_edge_fraction']:.3f} -> "
+                      f"{sc['round_bytes_scenario'] / 1e9:.2f} GB/round "
+                      f"(static {sc['round_bytes'] / 1e9:.2f})")
 
     mem = compiled.memory_analysis()
     # scan-aware correction: XLA counts while bodies once (see costing.py)
@@ -249,6 +274,10 @@ def main():
     ap.add_argument("--fedavg-baseline", action="store_true",
                     help="multi-pod without the FL pod axis (params "
                     "replicated across pods; grad AR crosses pods)")
+    ap.add_argument("--scenario", default="",
+                    help="attach a named scenario's summary + gossip cost "
+                    "delta to multi-pod FL dry-runs (paper_noise[@K], "
+                    "churn_signflip, storm)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -275,7 +304,8 @@ def main():
                              variant=args.variant,
                              optimizer=args.optimizer,
                              accum_dtype=args.accum_dtype,
-                             fl=not args.fedavg_baseline)
+                             fl=not args.fedavg_baseline,
+                             scenario=args.scenario)
         except Exception as e:  # record failures; they are bugs to fix
             traceback.print_exc()
             res = {"arch": arch, "shape": shape, "status": "FAILED",

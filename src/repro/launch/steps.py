@@ -94,7 +94,8 @@ def build_fl_train_step(cfg: ModelConfig, optimizer, *,
 
 
 def build_gossip_step(cfg: ModelConfig, *, wire=None, backend: str = "einsum",
-                      adjacency=None, error_feedback: bool = False):
+                      adjacency=None, error_feedback: bool = False,
+                      wire_round: str = "nearest"):
     """One DeFTA aggregation across pods: params <- P @ params, where P is
     the (sampled, outdegree-corrected) mixing matrix [npods, npods].
 
@@ -109,16 +110,24 @@ def build_gossip_step(cfg: ModelConfig, *, wire=None, backend: str = "einsum",
     algorithmic wire contract either way). With ``error_feedback`` the
     step becomes ``gossip_step(stacked_params, mix, wire_err) ->
     (mixed, wire_err')`` carrying the EF21 residual buffers (zeros at step
-    0); without it (default) the signature is unchanged from PR 1."""
+    0); without it (default) the signature is unchanged from PR 1.
+
+    ``wire_round="stochastic"`` (int8 wire only) appends a PRNG key to the
+    step's signature — ``gossip_step(..., wire_key)`` — and makes the
+    per-round quantization unbiased (core/gossip.quantize_rows_int8)."""
+    stochastic = wire_round == "stochastic"
     if error_feedback:
-        def gossip_step(stacked_params, mix, wire_err):
+        def gossip_step(stacked_params, mix, wire_err, wire_key=None):
             return mix_pytree(mix, stacked_params, backend=backend,
                               adjacency=adjacency, wire=wire,
-                              residual=wire_err)
+                              residual=wire_err, wire_round=wire_round,
+                              wire_key=wire_key if stochastic else None)
     else:
-        def gossip_step(stacked_params, mix):
+        def gossip_step(stacked_params, mix, wire_key=None):
             return mix_pytree(mix, stacked_params, backend=backend,
-                              adjacency=adjacency, wire=wire)
+                              adjacency=adjacency, wire=wire,
+                              wire_round=wire_round,
+                              wire_key=wire_key if stochastic else None)
     return gossip_step
 
 

@@ -1,11 +1,18 @@
 """Production training driver.
 
-Two modes:
+Three modes:
 * single-pod:  standard data+tensor-parallel training of one model.
 * multi-pod (``--fl``): DeFTA across pods — each pod is a federated worker
   with its own model replica and data stream; every ``--gossip-every``
   steps the pods exchange params via the outdegree-corrected gossip step
   and update DTS confidence scores from their own loss deltas.
+* scenario replay (``--scenario NAME``): run the simulation engines
+  through a named adversarial scenario (churn + attack zoo + faults,
+  compiled to device arrays — see ``repro/scenarios``). Presets:
+  ``paper_noise[@K]``, ``churn_signflip``, ``storm``. ``--async-ticks``
+  routes it through ``run_async_defta`` instead of ``run_defta``;
+  ``--assert-acc X`` exits nonzero if final vanilla accuracy < X (the CI
+  smoke hook).
 
 On this CPU container use tiny configs (e.g. --arch paper-small --debug-mesh)
 — the full meshes are exercised by dryrun.py.
@@ -17,6 +24,62 @@ import dataclasses
 import time
 
 import numpy as np
+
+
+def run_scenario_sim(args) -> int:
+    """--scenario: replay a named scenario through the DeFTA engines."""
+    import jax
+
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.async_defta import run_async_defta
+    from repro.core.defta import evaluate, resolve_scenario, run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    # robust rules run PURE (no DTS, no time machine) — same contract as
+    # table3_robustness.DEFENSES; crediting a classical baseline with
+    # DeFTA's own rollback would inflate it (robust_agg.py docstring)
+    robust = args.aggregation in ("trimmed_mean", "median", "krum")
+    cfg = DeFTAConfig(num_workers=args.sim_workers, avg_peers=4,
+                      num_sampled=2, local_epochs=args.sim_local_epochs,
+                      aggregation=args.aggregation,
+                      use_dts=args.aggregation == "defta",
+                      time_machine=not robust)
+    if args.aggregation != "defta":
+        print(f"aggregation={args.aggregation}: use_dts={cfg.use_dts} "
+              f"time_machine={cfg.time_machine} (baseline purity)")
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    data = federated_dataset("vector", cfg.num_workers,
+                             np.random.default_rng(cfg.seed),
+                             n_per_worker=120, alpha=0.5)
+    task = mlp_task(32, 10)
+    horizon = args.async_ticks or args.sim_epochs
+    compiled = resolve_scenario(args.scenario, cfg, horizon)
+    print(f"scenario {compiled.spec.name}: {compiled.summary()}")
+
+    key = jax.random.PRNGKey(cfg.seed)
+    stats: dict = {}
+    t0 = time.time()
+    if args.async_ticks:
+        st, adj, mal, _ = run_async_defta(
+            key, task, cfg, train, data, ticks=args.async_ticks,
+            scenario=compiled, target_epochs=args.sim_epochs, stats=stats)
+    else:
+        st, adj, mal, hist = run_defta(
+            key, task, cfg, train, data, epochs=args.sim_epochs,
+            scenario=compiled, eval_every=max(args.sim_epochs // 4, 1),
+            test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+        for e, m, s in hist:
+            print(f"  epoch {e:4d}: vanilla acc {m:.3f} ± {s:.3f}")
+    m, s, _ = evaluate(task, st, data["test_x"], data["test_y"], mal)
+    print(f"final vanilla acc {m:.3f} ± {s:.3f} "
+          f"({stats.get('dispatches', '?')} dispatches, "
+          f"{time.time() - t0:.1f}s, epochs={np.asarray(st.epoch).tolist()})")
+    if args.assert_acc and m < args.assert_acc:
+        print(f"FAIL: vanilla accuracy {m:.3f} < --assert-acc "
+              f"{args.assert_acc}")
+        return 1
+    return 0
 
 
 def main():
@@ -39,12 +102,37 @@ def main():
                          "numerics)")
     ap.add_argument("--no-gossip-ef", action="store_true",
                     help="disable EF21 error feedback on lossy wires")
+    ap.add_argument("--gossip-wire-round", default="nearest",
+                    choices=["nearest", "stochastic"],
+                    help="int8 wire rounding (stochastic = unbiased per "
+                         "round; see core/gossip.quantize_rows_int8)")
     ap.add_argument("--debug-mesh", action="store_true",
                     help="2x2(x pods) host-device mesh for CPU")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
+    ap.add_argument("--scenario", default="",
+                    help="replay a named adversarial scenario through the "
+                         "simulation engines (paper_noise[@K], "
+                         "churn_signflip, storm)")
+    ap.add_argument("--sim-epochs", type=int, default=12)
+    ap.add_argument("--sim-workers", type=int, default=8)
+    ap.add_argument("--sim-local-epochs", type=int, default=3)
+    ap.add_argument("--aggregation", default="defta",
+                    choices=["defta", "defl", "uniform", "trimmed_mean",
+                             "median", "krum"],
+                    help="aggregation rule for --scenario runs (robust "
+                         "rules are the Byzantine baselines)")
+    ap.add_argument("--async-ticks", type=int, default=0,
+                    help="route --scenario through run_async_defta for "
+                         "this many ticks")
+    ap.add_argument("--assert-acc", type=float, default=0.0,
+                    help="exit 1 if the --scenario run's final vanilla "
+                         "accuracy is below this (CI smoke)")
     args = ap.parse_args()
+
+    if args.scenario:
+        raise SystemExit(run_scenario_sim(args))
 
     if args.debug_mesh:
         import os
@@ -95,9 +183,14 @@ def main():
             fl_step = jax.jit(build_fl_train_step(cfg, opt),
                               donate_argnums=(0, 1))
             adj = make_topology("dense", pods, pods - 1)
+            stochastic = wire == "int8" and \
+                args.gossip_wire_round == "stochastic"
             gossip = jax.jit(build_gossip_step(
                 cfg, wire=wire, adjacency=adj if wire else None,
-                error_feedback=use_ef))
+                error_feedback=use_ef,
+                wire_round=args.gossip_wire_round if stochastic
+                else "nearest"))
+            gkey = jax.random.PRNGKey(101)
             sizes = np.full(pods, args.batch)
             P = jnp.asarray(mixing_matrix(adj, sizes, "defta"),
                             jnp.float32)
@@ -112,10 +205,12 @@ def main():
                 params, opt_state, step, losses = fl_step(
                     params, opt_state, step, batch)
                 if (i + 1) % args.gossip_every == 0:
+                    wk = jax.random.fold_in(gkey, i) if stochastic \
+                        else None
                     if use_ef:
-                        params, wire_err = gossip(params, P, wire_err)
+                        params, wire_err = gossip(params, P, wire_err, wk)
                     else:
-                        params = gossip(params, P)
+                        params = gossip(params, P, wk)
                 print(f"step {i:4d} losses="
                       f"{[round(float(x), 4) for x in losses]} "
                       f"({time.time() - t0:.2f}s)"

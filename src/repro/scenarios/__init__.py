@@ -1,0 +1,50 @@
+"""Adversarial scenario engine: declarative churn/attack/fault timelines,
+compiled once to device-side per-epoch arrays.
+
+The paper's headline claims are robustness (DeFTA survives 66% malicious
+workers) and fault tolerance; this subsystem lets the engines exercise the
+full DFL threat/fault space instead of one hardcoded attack:
+
+* ``spec``       — the ``ScenarioSpec`` grammar (typed events on an epoch
+                   timeline): ``AttackSpec`` (noise | sign_flip | scaling |
+                   alie | label_flip, optionally intermittent via
+                   period/duty), ``ChurnSpec`` (join/leave), ``LinkSpec``
+                   (directed link down-windows), ``PartitionSpec`` (group
+                   splits), ``StragglerSpec`` (speed < 1). Named presets
+                   behind ``get_scenario`` power ``--scenario``.
+* ``compile``    — ``compile_scenario(spec, num_vanilla, epochs)``:
+                   evaluates the timeline ONCE on the host into
+                   segment-compressed alive/link masks plus per-epoch
+                   fire/attack-on schedules; ``epoch_view`` is the traced
+                   per-epoch lookup the scanned round body uses. Scenarios
+                   are data, not control flow — dispatch counts match the
+                   static-topology run exactly.
+* ``attacks``    — the pluggable attack transforms (what malicious workers
+                   *send*, or for label_flip, what they train on); the
+                   engines' former hardcoded ``aggregate + noise`` lives
+                   here as ``attacks.noise``.
+* ``robust_agg`` — classical Byzantine-robust combination rules
+                   (trimmed_mean | median | krum), selectable via
+                   ``cfg.aggregation`` as defense baselines against DTS.
+
+Quick start::
+
+    from repro.scenarios import AttackSpec, ChurnSpec, ScenarioSpec
+    spec = ScenarioSpec(attacks=(AttackSpec("sign_flip"),),
+                        churn=(ChurnSpec(worker=0, leave=6),))
+    state, adj, mal, hist = run_defta(key, task, cfg, train, data,
+                                      epochs=20, scenario=spec)
+"""
+from repro.scenarios.compile import (ATTACK_CODE, CompiledScenario,
+                                     compile_scenario, epoch_view)
+from repro.scenarios.spec import (ATTACK_KINDS, AttackSpec, ChurnSpec,
+                                  LinkSpec, PartitionSpec, ScenarioSpec,
+                                  StragglerSpec, get_scenario)
+from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
+
+__all__ = [
+    "ATTACK_CODE", "ATTACK_KINDS", "AttackSpec", "ChurnSpec",
+    "CompiledScenario", "LinkSpec", "PartitionSpec", "ROBUST_RULES",
+    "ScenarioSpec", "StragglerSpec", "compile_scenario", "epoch_view",
+    "get_scenario", "robust_mix",
+]

@@ -1,0 +1,120 @@
+"""The attack zoo: pluggable transforms on what malicious workers *send*.
+
+The engines (``core/defta.py``, ``core/async_defta.py``, ``core/fedavg.py``)
+used to hardcode one attack — ``aggregate + noise``. Every attack here is a
+pure transform over the stacked worker pytrees, applied AFTER local
+training and BEFORE the models go on the wire, selected per worker by the
+compiled scenario's ``attack_kind``/``attack_on`` arrays — so any mix of
+attacks (including intermittent ones) runs inside the scanned superstep.
+
+Model attacks (transform what is sent):
+
+* ``noise``     — ``agg + scale·N(0,1)`` per coordinate (the paper's §4.3
+                  attack model; legacy ``noise_scale=200``).
+* ``sign_flip`` — ``agg − scale·(trained − agg)``: ship the inverted local
+                  update (gradient-ascent poisoning).
+* ``scaling``   — ``agg + scale·(trained − agg)``: boosted update / model
+                  replacement (Bagdasaryan et al. style).
+* ``alie``      — collusion, "a little is enough"-lite (Baruch et al.):
+                  every colluder sends the IDENTICAL ``mean − scale·std``
+                  of the current worker stack — a coordinated small shift
+                  that hides inside the empirical variance, which defeats
+                  coordinate-median-style defenses while staying under
+                  norm filters.
+
+Data attacks (transform what is trained on):
+
+* ``label_flip`` — the worker trains honestly on labels ``y → C−1−y``
+                   (see ``flip_labels``); its protocol behaviour is clean,
+                   only its updates push toward wrong classes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.scenarios.compile import ATTACK_CODE
+
+LABEL_FLIP_CODE = ATTACK_CODE["label_flip"]
+
+
+def tree_select(flag, a, b):
+    """Per-worker select: flag [W] bool; a/b stacked pytrees."""
+    def sel(x, y):
+        f = flag.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(f, x.astype(y.dtype), y)
+    return jax.tree.map(sel, a, b)
+
+
+def _per_worker(scale, like):
+    """Broadcast a [W] scale against a stacked [W, ...] leaf."""
+    return scale.reshape((-1,) + (1,) * (like.ndim - 1)).astype(like.dtype)
+
+
+def noise(key, agg, trained, scale):
+    """agg + scale·N(0,1) — one normal draw per leaf (legacy RNG layout)."""
+    leaves, treedef = jax.tree.flatten(agg)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        x + _per_worker(scale, x) * jax.random.normal(k, x.shape, x.dtype)
+        for k, x in zip(keys, leaves)])
+
+
+def sign_flip(key, agg, trained, scale):
+    del key
+    return jax.tree.map(
+        lambda a, t: a - _per_worker(scale, a) * (t.astype(a.dtype) - a),
+        agg, trained)
+
+
+def scaling(key, agg, trained, scale):
+    del key
+    return jax.tree.map(
+        lambda a, t: a + _per_worker(scale, a) * (t.astype(a.dtype) - a),
+        agg, trained)
+
+
+def alie(key, agg, trained, scale):
+    """All colluders emit the same mean − z·std of the worker stack."""
+    del key
+
+    def one(t):
+        mu = t.mean(axis=0, keepdims=True)
+        sd = t.std(axis=0, keepdims=True)
+        row = mu - _per_worker(scale, t) * sd
+        return jnp.broadcast_to(row, t.shape).astype(t.dtype)
+
+    return jax.tree.map(one, trained)
+
+
+# model attacks only — label_flip acts on the data, not the payload
+MODEL_ATTACKS = {"noise": noise, "sign_flip": sign_flip, "scaling": scaling,
+                 "alie": alie}
+
+
+def poison_sends(key, kinds_present, attack_kind, attack_scale, attack_on,
+                 agg, trained):
+    """Replace attackers' outgoing models. Only the attack kinds that are
+    statically present compile into the round body; per-worker selection is
+    ``attack_kind == code ∧ attack_on`` (the intermittent schedule).
+
+    key: PRNG key for stochastic attacks; agg: this round's aggregate
+    (stacked); trained: post-local-training params (stacked). Returns the
+    stacked pytree that actually goes on the wire."""
+    sends = trained
+    for kind in kinds_present:
+        if kind not in MODEL_ATTACKS:
+            continue                      # data attacks handled upstream
+        code = ATTACK_CODE[kind]
+        poisoned = MODEL_ATTACKS[kind](jax.random.fold_in(key, code),
+                                       agg, trained, attack_scale)
+        sends = tree_select((attack_kind == code) & attack_on,
+                            poisoned, sends)
+    return sends
+
+
+def flip_labels(y, active, num_classes: int):
+    """Label-flip data poisoning: y → (C−1) − y for workers with
+    ``active`` True. y: [W, N] int; active: [W] bool."""
+    flipped = (num_classes - 1) - y
+    return jnp.where(active[:, None], flipped, y)

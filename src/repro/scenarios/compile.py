@@ -1,0 +1,253 @@
+"""Compile a ``ScenarioSpec`` to device-side per-epoch mask/param arrays.
+
+The engines run epochs inside ``lax.scan`` supersteps (one XLA dispatch
+per eval chunk — PR 1), so a scenario must be *data, not control flow*:
+``compile_scenario`` evaluates the whole event timeline ONCE on the host
+and emits arrays the scanned round body indexes with the traced epoch
+counter. Nothing about a scenario costs a host round-trip at run time, and
+the dispatch count is identical to a static-topology run.
+
+Layout
+------
+Topology-shaped state (who is alive, which links are up) changes at event
+boundaries only, so it is segment-compressed: ``seg_of_epoch [E] int32``
+maps an epoch to one of S distinct segments, with ``alive [S, W]`` and
+``link_ok [S, W, W]``. Per-epoch state that is cheap or genuinely
+per-epoch (straggler fire schedule, intermittent attack on/off) stays
+``[E, W]``. Per-worker attack parameters are ``[W]``.
+
+``epoch_view`` clamps indices past the compiled horizon to the last epoch
+as a safety net, but the engines' ``resolve_scenario`` requires the
+horizon to cover the run: topology state persists fine under the clamp,
+yet the per-epoch fire/attack_on schedules would freeze at one arbitrary
+final-epoch draw (a straggler stuck never firing), so a precompiled
+scenario shorter than the run is rejected rather than silently replayed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.scenarios.spec import ATTACK_KINDS, ScenarioSpec
+
+# attack-kind integer codes (0 = honest); order is ATTACK_KINDS
+ATTACK_CODE = {k: i + 1 for i, k in enumerate(ATTACK_KINDS)}
+
+# default magnitudes per kind (scale=0 in the spec picks these; the noise
+# default matches the engines' historical noise_scale=200; sign_flip 1.0
+# is the textbook inverted-update attack)
+DEFAULT_SCALE = {"noise": 200.0, "sign_flip": 1.0, "scaling": 10.0,
+                 "alie": 1.5, "label_flip": 1.0}
+
+
+def _check_worker(idx: int, w: int, what: str) -> int:
+    if not 0 <= idx < w:
+        raise ValueError(f"{what} targets worker {idx} but W={w} "
+                         f"(negative indices are not allowed)")
+    return idx
+
+
+def _window(start: int, stop: int, epochs: int) -> np.ndarray:
+    """[E] bool for the half-open window [start, stop or end)."""
+    e = np.arange(epochs)
+    on = e >= start
+    if stop:
+        on &= e < stop
+    return on
+
+
+@dataclass
+class CompiledScenario:
+    spec: ScenarioSpec
+    num_vanilla: int
+    num_workers: int            # W = vanilla + appended attackers
+    epochs: int                 # compiled horizon E
+    # -- device arrays (jnp) -------------------------------------------
+    seg_of_epoch: Any           # [E] int32
+    alive: Any                  # [S, W] bool
+    link_ok: Any                # [S, W, W] bool (i receives from j)
+    fire: Any                   # [E, W] bool (straggler schedule ∧ alive)
+    attack_on: Any              # [E, W] bool
+    attack_kind: Any            # [W] int32 (ATTACK_CODE, 0 = honest)
+    attack_scale: Any           # [W] f32
+    # -- host-side metadata --------------------------------------------
+    kinds_present: Tuple[str, ...]
+    malicious: np.ndarray       # [W] bool (attack_kind > 0)
+    alive_np: np.ndarray        # [S, W] host copy for summaries
+    link_ok_np: np.ndarray      # [S, W, W]
+    seg_of_epoch_np: np.ndarray
+
+    @property
+    def num_segments(self) -> int:
+        return self.alive_np.shape[0]
+
+    def has_events(self) -> bool:
+        return self.spec.event_count() > 0
+
+    def summary(self, adj: Optional[np.ndarray] = None) -> dict:
+        """Human/JSON-facing digest: per-segment alive counts and (with the
+        static topology) the fraction of its edges still up — the scenario
+        cost delta (wire bytes scale with live edges)."""
+        segs = []
+        e_of_seg = [np.flatnonzero(self.seg_of_epoch_np == s)
+                    for s in range(self.num_segments)]
+        for s in range(self.num_segments):
+            d = {"epochs": [int(e_of_seg[s][0]), int(e_of_seg[s][-1]) + 1],
+                 "alive": int(self.alive_np[s].sum())}
+            if adj is not None:
+                a = np.asarray(adj, bool)
+                eff = a & self.link_ok_np[s] \
+                    & self.alive_np[s][None, :] & self.alive_np[s][:, None]
+                d["edge_fraction"] = round(
+                    float(eff.sum()) / max(int(a.sum()), 1), 4)
+            segs.append(d)
+        out = {
+            "name": self.spec.name,
+            "workers": self.num_workers,
+            "vanilla": self.num_vanilla,
+            "epochs": self.epochs,
+            "events": self.spec.event_count(),
+            "segments": segs,
+            "attacks": {k: int((np.asarray(self.attack_kind)
+                                == ATTACK_CODE[k]).sum())
+                        for k in self.kinds_present},
+            "stragglers": len(self.spec.stragglers),
+        }
+        if adj is not None:
+            # mean live-edge fraction over the timeline = the wire-byte
+            # multiplier vs the static run (each live edge ships one model)
+            fracs = [segs[self.seg_of_epoch_np[e]]["edge_fraction"]
+                     for e in range(self.epochs)]
+            out["mean_edge_fraction"] = round(float(np.mean(fracs)), 4)
+        return out
+
+
+def compile_scenario(spec: ScenarioSpec, num_vanilla: int,
+                     epochs: int) -> CompiledScenario:
+    """Evaluate the event timeline over ``epochs`` global epochs."""
+    import jax.numpy as jnp
+
+    if epochs <= 0:
+        raise ValueError("scenario horizon must be >= 1 epoch")
+    w = num_vanilla + spec.num_appended_attackers()
+
+    # ---- attacker slots ----------------------------------------------
+    attack_kind = np.zeros(w, np.int32)
+    attack_scale = np.zeros(w, np.float32)
+    attack_on = np.zeros((epochs, w), bool)
+    next_slot = num_vanilla
+    for a in spec.attacks:
+        slot = a.worker if a.worker >= 0 else next_slot
+        if a.worker < 0:
+            next_slot += 1
+        if slot >= w:
+            raise ValueError(f"attack targets worker {slot} but W={w}")
+        if attack_kind[slot]:
+            raise ValueError(f"worker {slot} already has an attack")
+        attack_kind[slot] = ATTACK_CODE[a.kind]
+        attack_scale[slot] = a.scale or DEFAULT_SCALE[a.kind]
+        on = _window(a.start, a.stop, epochs)
+        if a.period:
+            duty = a.duty or a.period // 2
+            on &= (np.arange(epochs) - a.start) % a.period < duty
+        attack_on[:, slot] = on
+
+    # ---- churn: alive timeline ---------------------------------------
+    alive_e = np.ones((epochs, w), bool)
+    churned = set()
+    for c in spec.churn:
+        _check_worker(c.worker, w, "churn")
+        if c.worker in churned:
+            # assignment is wholesale — a second entry would silently
+            # discard the first; one ChurnSpec(join=, leave=) expresses
+            # any single join/leave window
+            raise ValueError(f"worker {c.worker} has multiple ChurnSpecs")
+        churned.add(c.worker)
+        alive_e[:, c.worker] = _window(c.join, c.leave, epochs)
+
+    # ---- links + partitions: link_ok timeline ------------------------
+    link_ok_e = np.ones((epochs, w, w), bool)
+    for l in spec.links:
+        _check_worker(l.src, w, "link src")
+        _check_worker(l.dst, w, "link dst")
+        link_ok_e[_window(l.start, l.stop, epochs), l.dst, l.src] = False
+    for p in spec.partitions:
+        group_of = {}
+        for gi, g in enumerate(p.groups):
+            for wk in g:
+                group_of[_check_worker(wk, w, "partition")] = gi
+        cross = np.zeros((w, w), bool)
+        for i in range(w):
+            for j in range(w):
+                gi, gj = group_of.get(i), group_of.get(j)
+                if gi is not None and gj is not None and gi != gj:
+                    cross[i, j] = True
+        link_ok_e[_window(p.start, p.stop, epochs)] &= ~cross
+
+    # ---- segment-compress the topology state -------------------------
+    keys = [alive_e[e].tobytes() + link_ok_e[e].tobytes()
+            for e in range(epochs)]
+    seg_of_epoch = np.zeros(epochs, np.int32)
+    seg_index: dict = {}
+    for e, k in enumerate(keys):
+        if k not in seg_index:
+            seg_index[k] = len(seg_index)
+        seg_of_epoch[e] = seg_index[k]
+    firsts = {}
+    for e in range(epochs):
+        firsts.setdefault(int(seg_of_epoch[e]), e)
+    order = [firsts[s] for s in range(len(seg_index))]
+    alive = alive_e[order]
+    link_ok = link_ok_e[order]
+
+    # ---- straggler fire schedule (deterministic from seed) -----------
+    fire = np.ones((epochs, w), bool)
+    rng = np.random.default_rng(spec.seed + 1234)
+    slowed = set()
+    for s in spec.stragglers:
+        _check_worker(s.worker, w, "straggler")
+        if s.worker in slowed:
+            raise ValueError(f"worker {s.worker} has multiple "
+                             f"StragglerSpecs")
+        slowed.add(s.worker)
+        if not 0.0 < s.speed <= 1.0:
+            raise ValueError(f"straggler speed must be in (0, 1]: {s.speed}")
+        window = _window(s.start, s.stop, epochs)
+        slow = rng.random(epochs) < s.speed
+        fire[:, s.worker] = np.where(window, slow, True)
+    fire &= alive_e
+    attack_on &= alive_e          # dead attackers don't attack
+
+    kinds_present = tuple(k for k in ATTACK_KINDS
+                          if (attack_kind == ATTACK_CODE[k]).any())
+    return CompiledScenario(
+        spec=spec, num_vanilla=num_vanilla, num_workers=w, epochs=epochs,
+        seg_of_epoch=jnp.asarray(seg_of_epoch),
+        alive=jnp.asarray(alive),
+        link_ok=jnp.asarray(link_ok),
+        fire=jnp.asarray(fire),
+        attack_on=jnp.asarray(attack_on),
+        attack_kind=jnp.asarray(attack_kind),
+        attack_scale=jnp.asarray(attack_scale),
+        kinds_present=kinds_present,
+        malicious=attack_kind > 0,
+        alive_np=alive, link_ok_np=link_ok, seg_of_epoch_np=seg_of_epoch,
+    )
+
+
+def epoch_view(compiled: CompiledScenario, epoch):
+    """Device-side lookup of one epoch's scenario state from a TRACED
+    epoch index (clamped to the horizon). Returns a dict of jnp arrays:
+    alive [W], link_ok [W, W], fire [W], attack_on [W]."""
+    import jax.numpy as jnp
+
+    e = jnp.clip(epoch, 0, compiled.epochs - 1)
+    seg = compiled.seg_of_epoch[e]
+    return {
+        "alive": compiled.alive[seg],
+        "link_ok": compiled.link_ok[seg],
+        "fire": compiled.fire[e],
+        "attack_on": compiled.attack_on[e],
+    }

@@ -1,0 +1,121 @@
+"""Classical Byzantine-robust aggregation rules — the Table-3 baselines.
+
+DeFTA's defense is DTS (reweight who you *listen to* over time). The
+standard alternative in the DFL security literature (Hallaji et al. 2024)
+is a robust *combination* rule applied to whatever arrives each round.
+These are selectable via ``cfg.aggregation`` so the attack×defense sweep
+in ``benchmarks/table3_robustness.py`` can compare them head-to-head under
+every attack in the zoo:
+
+* ``trimmed_mean`` — coordinate-wise: drop the ⌊trim·n⌋ lowest and highest
+  values per coordinate, average the rest (Yin et al. 2018).
+* ``median``       — coordinate-wise median (marginal median).
+* ``krum``         — Krum-style selection (Blanchard et al. 2017): adopt
+  the single peer model whose summed squared distance to its closest
+  ``n − f − 2`` neighbours is smallest (``f = ⌊trim·n⌋``).
+
+All rules operate on each receiver's sampled peer set (incl. its own
+model) under a dynamic [W, W] mask, so they compose with scenarios: churn
+and link failures shrink the candidate set per epoch. They are unweighted
+(dataset sizes are ignored) — that IS the baseline: robust rules buy
+attack tolerance by giving up the outdegree-corrected unbiasedness of
+Theorem 3.3, which is exactly the trade the benchmark measures.
+
+Baseline purity: run these with ``cfg.use_dts=False`` AND
+``cfg.time_machine=False`` (as ``table3_robustness.DEFENSES`` does) —
+the classical algorithms are one-shot combination rules with no rollback;
+leaving DeFTA's time machine under them credits the baseline with
+DeFTA's own defense and muddies the comparison.
+
+Complexity is O(W²·F) per leaf (dense masked sort) — these are baselines,
+not the hot path; the production gossip stays on the padded-CSR kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ROBUST_RULES = ("trimmed_mean", "median", "krum")
+
+
+def _masked_sorted(mask, x):
+    """[W, W, F] peer values per receiver, invalid slots pushed to +inf by
+    the sort. mask: [W(recv), W(sender)]; x: [W, F]."""
+    vals = jnp.where(mask[:, :, None], x[None, :, :].astype(jnp.float32),
+                     jnp.inf)
+    return jnp.sort(vals, axis=1)
+
+
+def trimmed_mean_leaf(mask, x, trim: float):
+    w = mask.shape[0]
+    cnt = mask.sum(axis=1)                               # [W]
+    b = jnp.floor(trim * cnt).astype(jnp.int32)
+    # never trim the window empty: with trim >= 0.5 and a small candidate
+    # set, floor(trim*cnt) could eat every rank and silently return zeros
+    b = jnp.minimum(b, (cnt - 1) // 2)
+    srt = _masked_sorted(mask, x)
+    ranks = jnp.arange(w)[None, :, None]
+    keep = (ranks >= b[:, None, None]) & (ranks < (cnt - b)[:, None, None])
+    total = jnp.where(keep, srt, 0.0).sum(axis=1)
+    n_kept = jnp.maximum(cnt - 2 * b, 1)
+    return total / n_kept[:, None].astype(jnp.float32)
+
+
+def median_leaf(mask, x):
+    cnt = mask.sum(axis=1)
+    srt = _masked_sorted(mask, x)
+    lo = ((cnt - 1) // 2)[:, None, None]
+    hi = (cnt // 2)[:, None, None]
+    take = lambda i: jnp.take_along_axis(srt, i, axis=1)[:, 0, :]
+    return 0.5 * (take(lo) + take(hi))
+
+
+def krum_select(mask, stacked, trim: float):
+    """[W] index of the Krum-selected sender per receiver."""
+    w = mask.shape[0]
+    flat = jnp.concatenate(
+        [x.reshape(w, -1).astype(jnp.float32)
+         for x in jax.tree.leaves(stacked)], axis=1)
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)   # [W, W]
+    d2 = jnp.maximum(d2, 0.0)
+    eye = jnp.eye(w, dtype=bool)
+    # [recv, candidate j, peer k]: distances within the receiver's set
+    dm = jnp.where(mask[:, None, :] & mask[:, :, None] & ~eye[None],
+                   d2[None, :, :], jnp.inf)
+    srt = jnp.sort(dm, axis=2)
+    cnt = mask.sum(axis=1)
+    f = jnp.floor(trim * cnt).astype(jnp.int32)
+    m = jnp.clip(cnt - f - 2, 1, None)                       # neighbours
+    ranks = jnp.arange(w)[None, None, :]
+    score = jnp.where(ranks < m[:, None, None], srt, 0.0).sum(axis=2)
+    score = jnp.where(mask, score, jnp.inf)
+    sel = jnp.argmin(score, axis=1)
+    # a receiver whose candidate set is only itself has no finite score
+    # (candidate distances need a second set member) — argmin would pick
+    # worker 0 arbitrarily; degrade to identity like the weighted rules
+    return jnp.where(jnp.isfinite(jnp.min(score, axis=1)), sel,
+                     jnp.arange(w))
+
+
+def robust_mix(rule: str, mask, stacked, *, trim: float = 0.25):
+    """Aggregate the stacked worker pytree under ``mask`` [W, W] (bool,
+    ``mask[i, j]``: receiver i considers sender j; self-edges expected).
+    Every row must have >= 1 True. Returns the stacked aggregate."""
+    if rule == "krum":
+        sel = krum_select(mask, stacked, trim)
+        return jax.tree.map(lambda x: x[sel].astype(x.dtype), stacked)
+
+    def per_leaf(x):
+        w = x.shape[0]
+        flat = x.reshape(w, -1)
+        if rule == "trimmed_mean":
+            out = trimmed_mean_leaf(mask, flat, trim)
+        elif rule == "median":
+            out = median_leaf(mask, flat)
+        else:
+            raise ValueError(f"unknown robust rule {rule!r} "
+                             f"(one of {ROBUST_RULES})")
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(per_leaf, stacked)

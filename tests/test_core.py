@@ -95,6 +95,19 @@ def test_topologies_shape_and_degree():
         assert (adj.sum(1) >= 1).all()
 
 
+def test_erdos_repair_never_leaves_empty_rows():
+    """Regression: the in-edge repair used to draw a peer from [0, n-1)
+    which could land ON the diagonal; the subsequent diagonal clear left
+    the row empty. Seeds 1, 5, 7... reproduced it at n=5, p≈0.05 — the
+    repair must resample excluding i."""
+    for seed in range(120):
+        rng = np.random.default_rng(seed)
+        adj = topology.erdos(5, 0.05, rng)
+        assert (adj.sum(1) >= 1).all(), seed       # every row has a peer
+        assert (adj.sum(0) >= 1).all(), seed       # every col has a receiver
+        assert not adj.diagonal().any(), seed
+
+
 def test_ring_strongly_connected():
     assert topology.is_strongly_connected(topology.ring(9, 1))
     # a graph with an absorbing node is not strongly connected

@@ -279,3 +279,80 @@ def test_async_early_exit_stops_at_target():
     # stopped well before the tick budget: fastest worker ~ chunk bound,
     # not 60 ticks of epochs
     assert ep.max() < 30, ep
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding on the int8 wire (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+def test_stochastic_rounding_unbiased_vs_fp32_oracle():
+    """E[dequant(quantize_sr(x))] == x: averaged over keys, the stochastic
+    encode converges on the fp32 oracle, while round-to-nearest keeps a
+    systematic bias on values sitting off the grid midpoints."""
+    # rows whose values sit 0.25 LSB above the grid: nearest ALWAYS
+    # rounds down -> bias = -0.25 LSB; stochastic rounds up w.p. 0.25
+    scale_target = 1.0 / 127.0
+    base = jnp.arange(-100, 101, dtype=jnp.float32)
+    x = jnp.tile((base + 0.25) * scale_target, (2, 1))
+    x = x.at[:, -1].set(1.0)              # pins amax -> scale == target
+    q0, scale = quantize_rows_int8(x)
+    np.testing.assert_allclose(np.asarray(scale), scale_target, rtol=1e-5)
+    bias_nearest = float(jnp.mean(dequantize_rows_int8(q0, scale) - x))
+
+    n = 400
+    acc = jnp.zeros_like(x)
+    for i in range(n):
+        q, s = quantize_rows_int8(x, rounding="stochastic",
+                                  key=jax.random.PRNGKey(i))
+        acc = acc + dequantize_rows_int8(q, s)
+    bias_sr = float(jnp.mean(acc / n - x))
+    # nearest: ~ -0.25 LSB systematic; stochastic: ~ N(0, 0.43 LSB/sqrt(n))
+    assert abs(bias_nearest) > 0.2 * scale_target, bias_nearest
+    assert abs(bias_sr) < 0.05 * scale_target, (bias_sr, bias_nearest)
+
+
+def test_stochastic_rounding_stays_within_one_lsb():
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, 257))
+    q, scale = quantize_rows_int8(x, rounding="stochastic",
+                                  key=jax.random.PRNGKey(6))
+    err = jnp.abs(dequantize_rows_int8(q, scale) - x)
+    assert bool(jnp.all(err <= scale[:, None] + 1e-7)), float(err.max())
+
+
+def test_wire_round_validation_and_mix():
+    tree = _tree(jax.random.PRNGKey(7), 6)
+    adj = make_topology("random_kout", 6, 2, seed=1)
+    P = jnp.asarray(mixing_matrix(adj, np.ones(6), "defta"), jnp.float32)
+    with pytest.raises(ValueError):
+        mix_pytree(P, tree, wire="bf16", wire_round="stochastic",
+                   wire_key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        quantize_rows_int8(jnp.ones((2, 4)), rounding="stochastic")
+    out = mix_pytree(P, tree, wire="int8", wire_round="stochastic",
+                     wire_key=jax.random.PRNGKey(0))
+    ref = mix_pytree(P, tree)             # fp32 oracle
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        # one mix with 1-LSB-noisy payloads stays near the fp32 mix
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.1)
+
+
+def test_run_defta_stochastic_wire_learns():
+    import dataclasses as dc
+
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    data = federated_dataset("vector", 4, np.random.default_rng(3),
+                             n_per_worker=48, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=4, avg_peers=2, num_sampled=1,
+                      local_epochs=1, gossip_dtype="int8",
+                      gossip_wire_round="stochastic")
+    train = TrainConfig(learning_rate=0.05, batch_size=16)
+    st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                            epochs=6, gossip_backend="auto")
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(st.params))
+    assert float(jnp.mean(st.last_loss)) < 2.2   # ln(10) start, learning
