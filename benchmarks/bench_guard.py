@@ -11,6 +11,9 @@ fails (exit 1) when the headline wins regress:
 * the int8 wire must stay ≤ 0.3× fp32 bytes (structural — catches payload
   accounting regressions);
 * the quantized-convergence parity check must be present and passing;
+* FedAvg must stay on the unified superstep driver: its dispatch count
+  for a run must be IDENTICAL to the DeFTA engine's for the same run
+  shape (the round-program engine's parity contract);
 * the scenario engine must stay free on the superstep: a churn+attack
   scenario run may not exceed ``1 + tolerance`` times the static run's
   wall clock, and its dispatch count must be IDENTICAL (scenarios compile
@@ -86,6 +89,19 @@ def check(baseline, fresh, tolerance):
     else:
         print(f"quant convergence: int8+EF within "
               f"{conv['rel_delta']:.3%} of fp32 final loss")
+
+    fd = fresh.get("fedavg_dispatch")
+    if not fd:
+        failures.append("fresh bench has no fedavg_dispatch entry")
+    else:
+        print(f"fedavg dispatch parity: fedavg {fd['dispatches_fedavg']} "
+              f"vs defta {fd['dispatches_defta']} dispatches "
+              f"@ {fd['epochs']} epochs")
+        if fd["dispatches_fedavg"] != fd["dispatches_defta"]:
+            failures.append(
+                f"FedAvg left the unified superstep driver: "
+                f"{fd['dispatches_fedavg']} dispatches vs DeFTA's "
+                f"{fd['dispatches_defta']} for the same run shape")
 
     scn = fresh.get("scenario_overhead")
     if not scn:

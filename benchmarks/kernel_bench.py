@@ -123,9 +123,11 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     superstep = bench_superstep()
     quant_convergence = bench_quant_convergence()
     scenario_overhead = bench_scenario_overhead()
+    fedavg_dispatch = bench_fedavg_dispatch()
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
                    quant_convergence=quant_convergence,
-                   scenario_overhead=scenario_overhead)
+                   scenario_overhead=scenario_overhead,
+                   fedavg_dispatch=fedavg_dispatch)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -212,6 +214,47 @@ def bench_quant_convergence(epochs: int = 200, tolerance: float = 0.02):
     return dict(epochs=epochs, loss_fp32=loss_fp32, loss_int8_ef=loss_int8,
                 loss_int8_no_ef=loss_int8_noef, rel_delta=rel,
                 tolerance=tolerance)
+
+
+def bench_fedavg_dispatch(epochs: int = 120):
+    """Unified-driver dispatch parity: FedAvg rides the SAME chunked-scan
+    superstep driver as the DeFTA engines since the round-program
+    refactor, so a run with nothing to eval is ONE dispatch for both —
+    and the per-epoch reference loop still matches the fused run's final
+    server loss. CI gates the parity (bench_guard.py)."""
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import run_defta
+    from repro.core.fedavg import evaluate_server, run_fedavg
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w = 4
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    cfg = DeFTAConfig(num_workers=w, avg_peers=2, num_sampled=1,
+                      local_epochs=1)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    key = jax.random.PRNGKey(0)
+
+    stats_f, stats_d = {}, {}
+    st_f = run_fedavg(key, task, cfg, train, data, epochs=epochs,
+                      stats=stats_f)
+    run_defta(key, task, cfg, train, data, epochs=epochs, stats=stats_d)
+    st_ref = run_fedavg(key, task, cfg, train, data, epochs=epochs,
+                        superstep=False)
+    acc_fused = evaluate_server(task, st_f, data["test_x"], data["test_y"])
+    acc_ref = evaluate_server(task, st_ref, data["test_x"],
+                              data["test_y"])
+    print(f"fedavg dispatch parity {epochs} epochs: fedavg "
+          f"{stats_f['dispatches']} vs defta {stats_d['dispatches']} "
+          f"dispatches; fused acc {acc_fused:.3f} vs per-epoch "
+          f"{acc_ref:.3f}")
+    # no assert here: a parity break must still emit the bench file so
+    # bench_guard can report its purpose-built diagnostic
+    return dict(epochs=epochs, dispatches_fedavg=stats_f["dispatches"],
+                dispatches_defta=stats_d["dispatches"],
+                acc_fused=acc_fused, acc_per_epoch=acc_ref)
 
 
 def bench_scenario_overhead(epochs: int = 60):

@@ -1,5 +1,14 @@
 """Render §Dry-run and §Roofline tables for EXPERIMENTS.md from the
-dry-run JSONs (run after the sweep; idempotent)."""
+dry-run JSONs (run after the sweep; idempotent), plus the ``BENCH_*.json``
+trajectory dashboard: one row per bench file (the committed baseline, the
+fresh CI run, and any stashed history), tracking the CI-guarded headline
+numbers — sparse-kernel win, fused-quant slowdown, int8 wire-byte ratio,
+superstep dispatches, quantized-convergence delta, scenario-engine
+overhead and the FedAvg dispatch parity — across PRs.
+
+    python benchmarks/render_experiments.py                  # dry-run tables
+    python benchmarks/render_experiments.py --bench-dashboard [paths...]
+"""
 from __future__ import annotations
 
 import glob
@@ -7,6 +16,8 @@ import json
 import os
 
 ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+HEADLINE_W, HEADLINE_D = 500, 0.05          # bench_guard's gated cell
 
 
 def load(out_dir="experiments/dryrun", variants=False):
@@ -57,5 +68,74 @@ def render(out_dir="experiments/dryrun"):
     return "\n".join(lines)
 
 
+def _bench_row(label: str, payload: dict) -> str:
+    head = next((r for r in payload.get("rows", ())
+                 if r.get("W") == HEADLINE_W
+                 and r.get("density") == HEADLINE_D), None)
+
+    def fmt(v, spec="{:.2f}"):
+        return spec.format(v) if v is not None else "—"
+
+    win = quant = ratio = None
+    if head:
+        win = head["dense_us"] / head["sparse_us"]
+        if "quant_us" in head:
+            quant = head["quant_us"] / head["sparse_us"]
+        ratio = head.get("int8_fp32_byte_ratio")
+    ss = payload.get("superstep") or {}
+    qc = payload.get("quant_convergence") or {}
+    so = payload.get("scenario_overhead") or {}
+    fd = payload.get("fedavg_dispatch") or {}
+    disp = f"{ss['dispatches']}/{ss['dispatch_budget']}" \
+        if ss else "—"
+    fed = "—"
+    if fd:
+        ok = fd["dispatches_fedavg"] == fd["dispatches_defta"]
+        fed = f"{fd['dispatches_fedavg']}={fd['dispatches_defta']}" \
+            if ok else f"{fd['dispatches_fedavg']}≠{fd['dispatches_defta']}"
+    return (f"| {label} | {fmt(win)}x | {fmt(quant)}x | "
+            f"{fmt(ratio, '{:.3f}')} | {disp} | "
+            f"{fmt(qc.get('rel_delta'), '{:.3%}')} | "
+            f"{fmt(so.get('ratio'))}x | {fed} |")
+
+
+def render_bench_dashboard(paths=()) -> str:
+    """Markdown trajectory table over BENCH_*.json files. Default inputs:
+    the committed repo-root baseline plus anything under
+    ``benchmarks/history/`` (stash a copy there per PR to grow the
+    trajectory; CI also renders the fresh run as an artifact)."""
+    if not paths:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json"))) + \
+            sorted(glob.glob(os.path.join(root, "benchmarks", "history",
+                                          "*.json")))
+    lines = [
+        "# BENCH trajectory dashboard",
+        "",
+        f"Headline cell: W={HEADLINE_W} / density={HEADLINE_D} "
+        f"(the CI-guarded regime — see bench_guard.py).",
+        "",
+        "| bench file | sparse win | quant vs sparse | int8/fp32 bytes | "
+        "superstep disp | quant conv Δ | scenario overhead | "
+        "fedavg disp parity |",
+        "|" + "---|" * 8,
+    ]
+    for p in paths:
+        try:
+            with open(p) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            lines.append(f"| {os.path.basename(p)} | UNREADABLE ({e}) "
+                         + "| —" * 6 + " |")
+            continue
+        lines.append(_bench_row(os.path.basename(p), payload))
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    print(render())
+    import sys
+    if "--bench-dashboard" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--bench-dashboard"]
+        print(render_bench_dashboard(tuple(args)))
+    else:
+        print(render())

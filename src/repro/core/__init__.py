@@ -1,14 +1,20 @@
 """DeFTA core — the paper's primary contribution.
 
+engine:      the unified round-program engine — ONE composable superstep
+             stage pipeline (split_keys → scenario_view → peer_sample →
+             transport → damage_check → local_train → attack_inject →
+             trust_update → finalize/merge) plus the shared chunked-scan /
+             while_loop drivers; every mode below is a stage selection
 aggregation: outdegree-corrected mixing matrices + Markov/bias analysis
 dts:         decentralized trust system (confidence, cRELU, time machine)
-defta:       synchronous multi-worker engine (Algorithm 1)
-async_defta: asynchronous variant (§3.4)
-fedavg:      CFL-F / CFL-S centralized baselines
+defta:       synchronous multi-worker mode (Algorithm 1)
+async_defta: asynchronous mode (§3.4) — fire-gated tick over the pipeline
+fedavg:      CFL-F / CFL-S centralized baselines — star-topology selection
 topology:    directed p2p graphs
-gossip:      the P @ params mixing op (einsum | pallas backends)
+gossip:      the P @ params mixing op (einsum | pallas | sparse | quant
+             backends, ppermute ring transport)
 """
-from repro.core import aggregation, dts, topology  # noqa: F401
+from repro.core import aggregation, dts, engine, topology  # noqa: F401
 from repro.core.defta import run_defta, evaluate, init_state  # noqa: F401
 from repro.core.fedavg import run_fedavg, evaluate_server  # noqa: F401
 from repro.core.async_defta import run_async_defta  # noqa: F401

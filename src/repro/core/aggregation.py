@@ -12,6 +12,13 @@ schemes for ``p_{i,j}``:
 All sums run over the *effective* peer set N_i ∪ {i}: every worker keeps a
 self-edge (it trivially "receives" its own model), and outdegrees count that
 self-loop, so d_j = 1 + (# receivers of j).
+
+These are the host-side (static, np.float64) references. The engine's
+``transport`` stage builds its traced per-round P either from the same
+weights baked at build time (static topology) or via
+``core.gossip.dynamic_mixing_matrix`` (the traced re-derivation of the
+same formulas under per-epoch churn/link masks and time-varying
+topologies); ``tests/test_engine.py`` pins the two against each other.
 """
 from __future__ import annotations
 

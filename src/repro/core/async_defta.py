@@ -11,20 +11,27 @@ asynchronous across sub-systems. Non-firing workers are unchanged.
 The paper's observation that fast workers finish with immature peer models
 (Table 4) is reproduced by tracking per-worker epochs and evaluating at a
 fixed tick budget vs an extended one (AsyncDeFTA-L).
+
+Since the unified round-program refactor this module is the async *mode*
+over ``repro.core.engine``: the round body is the same stage pipeline as
+sync DeFTA, wrapped in the fire-gated tick merge
+(``engine.build_fire_gated_tick``) and driven by the shared tick driver
+(``engine.drive_ticks`` — chunked ``lax.scan`` with the device-side
+``lax.while_loop`` early exit).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-import functools
-
 from repro.config import DeFTAConfig, TrainConfig
-from repro.core.defta import (DeFTAState, _pad_workers, build_round_fn,
-                              init_state, resolve_scenario, tree_select)
+from repro.core.defta import (_pad_workers, build_round_fn, init_state,
+                              resolve_scenario)
+from repro.core.engine import build_fire_gated_tick, drive_ticks
 from repro.core.tasks import Task
 from repro.core.topology import make_topology
+
+import jax.numpy as jnp
 
 
 def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
@@ -70,53 +77,18 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     speeds = jnp.asarray(rng.uniform(*speed_range, size=w))
 
     from repro.core.gossip import uses_error_feedback
-    use_ef = uses_error_feedback(cfg)
-    state = init_state(key, task, w, wire_error=use_ef)
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
-    dispatches = 0
-
-    def tick(state: DeFTAState, inp):
-        tkey, live, t = inp
-
-        def run(state):
-            fired = jax.random.uniform(tkey, (w,)) < speeds
-            nxt = rnd_fn(state, jdata, t)
-            # merge: fired workers take the new state, others keep the
-            # old. wire_err rides along — a worker that did not fire did
-            # not send, so its EF residual must not advance either.
-            # (with a scenario, nxt already froze non-firing/dead workers,
-            # so taking nxt.* for fired workers composes both gates)
-            params = tree_select(fired, nxt.params, state.params)
-            backup = tree_select(fired, nxt.backup, state.backup)
-            wire_err = tree_select(fired, nxt.wire_err, state.wire_err)
-            conf = jnp.where(fired[:, None], nxt.conf, state.conf)
-            return DeFTAState(
-                params=params, backup=backup, conf=conf,
-                best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
-                last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
-                key=nxt.key,
-                epoch=jnp.where(fired, nxt.epoch, state.epoch),
-                wire_err=wire_err)
-
-        # dead (chunk-padding) ticks are skipped ENTIRELY — no round
-        # compute and no key advance, so the device-exit path returns a
-        # state bit-identical to the host-exit reference.
-        return jax.lax.cond(live, run, lambda s: s, state), None
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_ticks(st, tkeys, ts):
-        live = jnp.ones((tkeys.shape[0],), bool)
-        return jax.lax.scan(tick, st, (tkeys, live, ts))[0]
+    tick = build_fire_gated_tick(rnd_fn, jdata, speeds, w)
 
     if not check_every:
         check_every = min(8, ticks) if target_epochs else ticks
     check_every = max(1, check_every)      # ticks=0 stays a clean no-op
     tkeys = jax.random.split(jax.random.fold_in(key, 99), max(ticks, 1))
     tkeys = tkeys[:ticks]
-    ts_all = jnp.arange(ticks, dtype=jnp.int32)
 
     # the target_epochs predicate must only wait on workers that CAN get
     # there: a churned-out or heavily-straggled worker whose scenario fire
@@ -132,59 +104,7 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
             # matching the static engine's ticks-exhausted behaviour
             required = ~malicious
 
-    def finish(state):
-        if stats is not None:
-            stats["dispatches"] = dispatches
-            stats["ticks"] = ticks
-        return state, adj, malicious, np.asarray(speeds)
-
-    if not target_epochs or not ticks:     # no predicate: one plain scan
-        if ticks:
-            state = run_ticks(state, tkeys, ts_all)
-            dispatches += 1
-        return finish(state)
-
-    if host_exit:                          # reference path (PR 1)
-        for t0 in range(0, ticks, check_every):
-            state = run_ticks(state, tkeys[t0:t0 + check_every],
-                              ts_all[t0:t0 + check_every])
-            dispatches += 1
-            if bool((np.asarray(state.epoch)[required]
-                     >= target_epochs).all()):
-                break
-        return finish(state)
-
-    # device-side early exit: while_loop over scan chunks, zero round-trips.
-    # Ticks are padded up to a whole number of chunks; padded slots carry
-    # live=False so they never fire (parity with the host path, which
-    # simply stops at ``ticks``).
-    nchunks = -(-ticks // check_every)
-    padded = nchunks * check_every
-    if padded > ticks:
-        tkeys = jnp.concatenate(
-            [tkeys, jnp.zeros((padded - ticks,) + tkeys.shape[1:],
-                              tkeys.dtype)])
-    tkeys = tkeys.reshape(nchunks, check_every, *tkeys.shape[1:])
-    live = (jnp.arange(padded) < ticks).reshape(nchunks, check_every)
-    ts = jnp.arange(padded, dtype=jnp.int32).reshape(nchunks, check_every)
-    vanilla = jnp.asarray(required)
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_until(st, tkeys, live, ts):
-        def not_done(carry):
-            st, c = carry
-            reached = jnp.all(jnp.where(vanilla,
-                                        st.epoch >= target_epochs, True))
-            return (c < nchunks) & ~reached
-
-        def chunk(carry):
-            st, c = carry
-            st = jax.lax.scan(tick, st, (tkeys[c], live[c], ts[c]))[0]
-            return st, c + 1
-
-        return jax.lax.while_loop(not_done, chunk,
-                                  (st, jnp.zeros((), jnp.int32)))[0]
-
-    state = run_until(state, tkeys, live, ts)
-    dispatches += 1
-    return finish(state)
+    state = drive_ticks(tick, state, tkeys, ticks, check_every=check_every,
+                        required=required, target_epochs=target_epochs,
+                        host_exit=host_exit, stats=stats)
+    return state, adj, malicious, np.asarray(speeds)

@@ -6,119 +6,38 @@ by one jitted super-step per global epoch:
     sample peers (DTS θ) → aggregate (outdegree-corrected P) → time-machine
     check → local SGD epochs → DTS confidence update → backup
 
-Attack injection is pluggable (``repro.scenarios.attacks``): by default
-malicious workers broadcast ``aggregate + noise`` (the paper's attack
-model); a compiled ``scenario`` replays an arbitrary event timeline —
-churn, link failures, partitions, stragglers, and any mix of the attack
-zoo — as per-epoch device arrays indexed inside the scanned superstep, so
-scenarios cost ZERO extra dispatches. Malicious workers occupy slots in
-the stacked arrays but their training is irrelevant — only what they
-*send* matters (except ``label_flip``, which poisons what they train on).
+Since the unified round-program refactor, the round body itself lives in
+``repro.core.engine`` as a stage pipeline (``build_defta_round``) and the
+superstep loop is the shared chunked-scan driver (``drive_epochs``); this
+module is the sync *mode*: stage selection, scenario resolution and the
+end-to-end ``run_defta`` entry point. Attack injection is pluggable
+(``repro.scenarios.attacks``): by default malicious workers broadcast
+``aggregate + noise`` (the paper's attack model); a compiled ``scenario``
+replays an arbitrary event timeline — churn, link failures, partitions,
+stragglers, time-varying topologies and any mix of the attack zoo — as
+per-epoch device arrays indexed inside the scanned superstep, so scenarios
+cost ZERO extra dispatches.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DeFTAConfig, TrainConfig
-from repro.core import dts as dts_mod
-from repro.core.aggregation import mixing_matrix
-from repro.core.gossip import mix_pytree
+from repro.core.engine import (DeFTAState, build_defta_round, drive_epochs,
+                               init_state, local_train_fn)
 from repro.core.tasks import Task
 from repro.core.topology import make_topology
 from repro.scenarios.attacks import tree_select  # noqa: F401 (re-export:
                                                  # async_defta/fedavg/tests
                                                  # import it from here)
 
-
-def local_train_fn(task: Task, train: TrainConfig, local_epochs: int,
-                   dp_clip: float = 0.0, dp_sigma: float = 0.0):
-    """Returns f(key, params, x, y, mask) -> (params, mean_loss) running
-    ``local_epochs`` epochs of minibatch SGD. With ``dp_clip>0`` runs
-    DP-SGD (clip the minibatch gradient, add N(0, σ·clip/bs) noise) — the
-    paper's compatibility claim: DP composes with DeFTA untouched."""
-    bs = train.batch_size
-
-    def one_step(params, batch):
-        x, y, m, skey = batch
-        loss, g = jax.value_and_grad(task.loss)(params, x, y, m)
-        if dp_clip > 0:
-            gnorm = jnp.sqrt(sum(jnp.vdot(v, v).real
-                                 for v in jax.tree.leaves(g)) + 1e-12)
-            scale = jnp.minimum(1.0, dp_clip / gnorm)
-            leaves, tdef = jax.tree.flatten(g)
-            nkeys = jax.random.split(skey, len(leaves))
-            g = jax.tree.unflatten(tdef, [
-                v * scale + dp_sigma * dp_clip *
-                jax.random.normal(k, v.shape, v.dtype) / bs
-                for k, v in zip(nkeys, leaves)])
-        params = jax.tree.map(lambda p, gg: p - train.learning_rate * gg,
-                              params, g)
-        return params, loss
-
-    def run(key, params, x, y, mask):
-        n = x.shape[0]
-        steps_per_epoch = max(n // bs, 1)
-
-        def epoch(carry, ekey):
-            params = carry
-            pkey, nkey = jax.random.split(ekey)
-            perm = jax.random.permutation(pkey, n)
-            xs = x[perm][:steps_per_epoch * bs].reshape(
-                steps_per_epoch, bs, *x.shape[1:])
-            ys = y[perm][:steps_per_epoch * bs].reshape(steps_per_epoch, bs)
-            ms = mask[perm][:steps_per_epoch * bs].reshape(
-                steps_per_epoch, bs)
-            skeys = jax.random.split(nkey, steps_per_epoch)
-            params, losses = jax.lax.scan(
-                lambda p, b: one_step(p, b), params, (xs, ys, ms, skeys))
-            return params, losses.mean()
-
-        params, losses = jax.lax.scan(epoch, params,
-                                      jax.random.split(key, local_epochs))
-        return params, losses.mean()
-
-    return run
-
-
-@jax.tree_util.register_dataclass
-@dataclass
-class DeFTAState:
-    params: Any                  # stacked [W, ...]
-    backup: Any                  # stacked [W, ...]
-    conf: jnp.ndarray            # [W, W]
-    best_loss: jnp.ndarray       # [W]
-    last_loss: jnp.ndarray       # [W]
-    key: jnp.ndarray
-    epoch: jnp.ndarray           # [W] per-worker epoch counters
-    wire_err: Any = None         # EF21 quantization residuals (stacked
-                                 # like params; None when wire is lossless
-                                 # or error feedback is off)
-
-
-def init_state(key, task: Task, num_workers: int, *,
-               wire_error: bool = False) -> DeFTAState:
-    keys = jax.random.split(key, num_workers + 1)
-    params = jax.vmap(task.init)(keys[:num_workers])
-    return DeFTAState(
-        params=params,
-        # distinct buffers: superstep drivers donate the whole state, and
-        # XLA rejects donating one buffer through two arguments
-        backup=jax.tree.map(jnp.copy, params),
-        conf=jnp.zeros((num_workers, num_workers)),
-        best_loss=jnp.full((num_workers,), jnp.inf),
-        last_loss=jnp.zeros((num_workers,)),
-        key=keys[-1],
-        epoch=jnp.zeros((num_workers,), jnp.int32),
-        wire_err=jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        if wire_error else None,
-    )
+__all__ = ["DeFTAState", "build_round", "build_round_fn", "evaluate",
+           "global_model", "init_state", "local_train_fn",
+           "resolve_scenario", "run_defta", "tree_select"]
 
 
 def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
@@ -129,199 +48,14 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                    scenario=None, num_classes: int = 0):
     """Returns an UN-jitted round(state, data, epoch=None) -> state body —
     scannable, so drivers can fuse many rounds into one XLA dispatch (and
-    jittable as-is for single-round use; see ``build_round``).
-
-    ``scenario``: a ``repro.scenarios.CompiledScenario``. When given, the
-    traced ``epoch`` index looks up that epoch's alive/link/fire/attack
-    state from the compiled device arrays — churn, partitions, stragglers
-    and the whole attack zoo run INSIDE the scan body, no host round-trips.
-    Without it the body reproduces the legacy static-topology round (with
-    the paper's noise attack on ``malicious`` workers) bit-for-bit.
-
-    ``num_classes`` is required when the scenario contains a ``label_flip``
-    attack (the flip is ``y -> C-1-y``)."""
-    w = adj.shape[0]
-    adj_j = jnp.asarray(adj)
-    sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
-    adj_self = adj | np.eye(w, dtype=bool)
-    outdeg = jnp.asarray(adj_self.sum(axis=0).astype(np.float32))
-    malicious_j = jnp.asarray(malicious)
-    ltrain = local_train_fn(task, train, cfg.local_epochs,
-                            dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
-
-    from repro.core.gossip import (dynamic_mixing_matrix, normalize_wire,
-                                   uses_error_feedback)
-    from repro.scenarios import attacks as attacks_mod
-    from repro.scenarios.compile import ATTACK_CODE, epoch_view
-    from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
-
-    robust = cfg.aggregation in ROBUST_RULES
-    if not robust:
-        if cfg.aggregation == "defta":
-            col_w = sizes_j / outdeg
-        elif cfg.aggregation == "defl":
-            col_w = sizes_j
-        else:  # uniform gossip
-            col_w = jnp.ones_like(sizes_j)
-
-    wire = normalize_wire(cfg.gossip_dtype)
-    use_ef = uses_error_feedback(cfg)
-    stochastic = wire == "int8" and cfg.gossip_wire_round == "stochastic"
-    # stochastic rounding only exists on the int8 wire; on any other wire
-    # the knob is inert (same downgrade the --fl launch path applies)
-    wire_round = cfg.gossip_wire_round if stochastic else "nearest"
-    if robust and wire is not None:
-        raise ValueError(
-            f"robust aggregation ({cfg.aggregation!r}) simulates lossless "
-            f"model exchange — it never runs the quantized wire, so "
-            f"comparing it against a lossy-wire DeFTA run would be "
-            f"apples-to-oranges; set gossip_dtype='float32'")
-    if scenario is not None:
-        if scenario.num_workers != w:
-            raise ValueError(f"scenario compiled for W="
-                             f"{scenario.num_workers}, topology has {w}")
-        if "label_flip" in scenario.kinds_present and num_classes <= 0:
-            raise ValueError("label_flip scenario needs num_classes > 0")
-
-    def round(state: DeFTAState, data, epoch=None):
-        if stochastic:
-            key, k_sample, k_train, k_noise, k_wire = \
-                jax.random.split(state.key, 5)
-        else:
-            key, k_sample, k_train, k_noise = jax.random.split(state.key, 4)
-            k_wire = None
-
-        # ---- 0. scenario state for this epoch -------------------------
-        if scenario is not None:
-            view = epoch_view(scenario, epoch)
-            alive, fire, att_on = view["alive"], view["fire"], \
-                view["attack_on"]
-            eff_adj = adj_j & view["link_ok"] \
-                & alive[None, :] & alive[:, None]
-        else:
-            eff_adj = adj_j
-
-        # ---- 1. peer sampling via DTS weights -------------------------
-        if cfg.use_dts:
-            theta = dts_mod.sample_weights(state.conf, eff_adj,
-                                           cfg.crelu_slope)        # [W,W]
-        else:
-            theta = eff_adj / jnp.maximum(eff_adj.sum(1, keepdims=True), 1)
-        skeys = jax.random.split(k_sample, w)
-        sampled = jax.vmap(
-            lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
-        )(skeys, theta)                                            # [W,W]
-
-        # ---- 2. aggregation with outdegree-corrected weights ----------
-        mask = (sampled & eff_adj) | jnp.eye(w, dtype=bool)
-        if robust:
-            # classical Byzantine-robust baselines: unweighted rule over
-            # the sampled set; P degrades to the uniform bookkeeping
-            # weights the DTS confidence update needs
-            agg = robust_mix(cfg.aggregation, mask, state.params,
-                             trim=cfg.robust_trim)
-            P = mask / mask.sum(axis=1, keepdims=True)
-            wire_err = state.wire_err
-        else:
-            if scenario is not None:
-                # per-epoch outdegree renormalization under the dynamic
-                # adjacency (churn/link failures change |D_j|/d_j)
-                P = dynamic_mixing_matrix(sampled, eff_adj, sizes_j,
-                                          cfg.aggregation)
-            else:
-                P = mask * col_w[None, :]
-                P = P / P.sum(axis=1, keepdims=True)
-            if use_ef:
-                if state.wire_err is None:
-                    raise ValueError(
-                        "cfg enables gossip error feedback on a lossy wire "
-                        "but the state carries no residual buffers — build "
-                        "it with init_state(..., wire_error=True)")
-                agg, wire_err = mix_pytree(P, state.params,
-                                           backend=gossip_backend,
-                                           adjacency=adj, wire=wire,
-                                           residual=state.wire_err,
-                                           wire_round=wire_round,
-                                           wire_key=k_wire)
-            else:
-                agg = mix_pytree(P, state.params, backend=gossip_backend,
-                                 adjacency=adj, wire=wire,
-                                 wire_round=wire_round,
-                                 wire_key=k_wire)
-                wire_err = state.wire_err
-
-        # ---- 3. time machine: damage check on aggregated model --------
-        y_data = data["y"]
-        if scenario is not None and "label_flip" in scenario.kinds_present:
-            # data poisoning: label-flippers train (and self-evaluate) on
-            # y -> C-1-y; their protocol behaviour stays honest
-            lf = (scenario.attack_kind == ATTACK_CODE["label_flip"]) \
-                & att_on
-            y_data = attacks_mod.flip_labels(y_data, lf, num_classes)
-        loss_agg = jax.vmap(task.loss)(agg, data["x"], y_data,
-                                       data["mask"])
-        if cfg.time_machine:
-            damaged = dts_mod.is_damaged(loss_agg, state.best_loss)
-            start = tree_select(damaged, state.backup, agg)
-        else:
-            damaged = jnp.zeros_like(loss_agg, bool)
-            start = agg
-
-        # ---- 4. local training (the compensation step included) -------
-        tkeys = jax.random.split(k_train, w)
-        trained, train_loss = jax.vmap(
-            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
-        )(tkeys, start, data["x"], y_data, data["mask"])
-
-        # ---- 5. attack injection (repro.scenarios.attacks) ------------
-        if scenario is not None:
-            trained = attacks_mod.poison_sends(
-                k_noise, scenario.kinds_present, scenario.attack_kind,
-                scenario.attack_scale, att_on, agg, trained)
-        else:
-            # legacy path: the paper's aggregate+noise on ``malicious``
-            poisoned = attacks_mod.noise(
-                k_noise, agg, trained, jnp.full((w,), noise_scale,
-                                                jnp.float32))
-            trained = tree_select(malicious_j, poisoned, trained)
-
-        # ---- 6. DTS confidence update (Algorithm 3) --------------------
-        loss_trust = jnp.where(damaged, dts_mod.DAMAGE_PENALTY,
-                               loss_agg - state.last_loss)
-        conf = state.conf - sampled * P * loss_trust[:, None]
-
-        improved = (loss_agg < state.best_loss) & ~damaged
-        # the time machine's compensation step RATCHETS: a damaged round
-        # starts from the backup, so its trained result is train(backup) —
-        # clean by induction — and becomes the new backup. Without this a
-        # worker whose whole peer set is malicious (66%-regime reality)
-        # re-trains the same frozen backup forever and never progresses.
-        backup = tree_select(improved | damaged, trained, state.backup)
-        best_loss = jnp.where(improved, loss_agg, state.best_loss)
-        last_loss = jnp.where(damaged, state.last_loss, loss_agg)
-
-        if scenario is None:
-            return DeFTAState(params=trained, backup=backup, conf=conf,
-                              best_loss=best_loss, last_loss=last_loss,
-                              key=key, epoch=state.epoch + 1,
-                              wire_err=wire_err)
-
-        # ---- 7. churn/straggler merge: non-firing workers freeze ------
-        # (dead workers are absent from eff_adj so nobody consumed them;
-        # stragglers expose their stale params and skip their own round)
-        params = tree_select(fire, trained, state.params)
-        backup = tree_select(fire, backup, state.backup)
-        wire_err = tree_select(fire, wire_err, state.wire_err) \
-            if use_ef else state.wire_err
-        return DeFTAState(
-            params=params, backup=backup,
-            conf=jnp.where(fire[:, None], conf, state.conf),
-            best_loss=jnp.where(fire, best_loss, state.best_loss),
-            last_loss=jnp.where(fire, last_loss, state.last_loss),
-            key=key, epoch=state.epoch + fire.astype(jnp.int32),
-            wire_err=wire_err)
-
-    return round
+    jittable as-is for single-round use; see ``build_round``). The body is
+    the engine's stage pipeline: split_keys → scenario_view → peer_sample →
+    transport → damage_check → local_train → attack_inject → trust_update →
+    finalize/fire_merge (``repro.core.engine.build_defta_round``)."""
+    return build_defta_round(task, cfg, train, adj, sizes, malicious,
+                             gossip_backend=gossip_backend,
+                             noise_scale=noise_scale, scenario=scenario,
+                             num_classes=num_classes)
 
 
 def build_round(*args, **kwargs):
@@ -395,12 +129,13 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     static run.
 
     With ``superstep`` (default) epochs advance inside ``jax.lax.scan``
-    chunks bounded by eval points: a run is ceil(epochs / eval_every) XLA
-    dispatches (one, if eval_every=0) instead of one per epoch, and the
-    state buffers are donated across chunks so params/backup are not
-    double-buffered between dispatches. ``superstep=False`` keeps the
-    per-epoch dispatch loop (the reference the fused path is tested
-    against). Pass ``stats={}`` to get ``{"dispatches": n, ...}`` back.
+    chunks bounded by eval points (the engine's ``drive_epochs`` driver): a
+    run is ceil(epochs / eval_every) XLA dispatches (one, if eval_every=0)
+    instead of one per epoch, and the state buffers are donated across
+    chunks so params/backup are not double-buffered between dispatches.
+    ``superstep=False`` keeps the per-epoch dispatch loop (the reference
+    the fused path is tested against). Pass ``stats={}`` to get
+    ``{"dispatches": n, ...}`` back.
     """
     num_classes = 0
     if scenario is not None:
@@ -426,44 +161,15 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
                             scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
-    history = []
-    dispatches = 0
 
-    if not superstep:                       # per-epoch reference driver
-        rnd = jax.jit(rnd_fn)
-        for e in range(epochs):
-            state = rnd(state, jdata, jnp.int32(e))
-            dispatches += 1
-            if eval_every and (e + 1) % eval_every == 0 \
-                    and test_x is not None:
-                m, s, _ = evaluate(task, state, test_x, test_y, malicious)
-                history.append((e + 1, m, s))
-    else:
-        @functools.partial(jax.jit, static_argnames=("length",),
-                           donate_argnums=(0,))
-        def run_chunk(st, jd, e0, *, length):
-            def body(s, e):
-                return rnd_fn(s, jd, e), None
-            return jax.lax.scan(body, st, e0 + jnp.arange(length))[0]
-
-        done = 0
-        # eval boundaries only matter when there is something to eval —
-        # otherwise the whole run is a single dispatch
-        chunk = eval_every if (eval_every and test_x is not None) \
-            else epochs
-        while done < epochs:
-            n = min(chunk, epochs - done)
-            state = run_chunk(state, jdata, jnp.int32(done), length=n)
-            dispatches += 1
-            done += n
-            if eval_every and done % eval_every == 0 \
-                    and test_x is not None:
-                m, s, _ = evaluate(task, state, test_x, test_y, malicious)
-                history.append((done, m, s))
-
-    if stats is not None:
-        stats["dispatches"] = dispatches
-        stats["epochs"] = epochs
+    eval_fn = None
+    if test_x is not None:
+        def eval_fn(st, done):
+            m, s, _ = evaluate(task, st, test_x, test_y, malicious)
+            return (done, m, s)
+    state, history = drive_epochs(rnd_fn, state, jdata, epochs,
+                                  eval_every=eval_every, eval_fn=eval_fn,
+                                  superstep=superstep, stats=stats)
     return state, adj, malicious, history
 
 

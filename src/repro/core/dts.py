@@ -22,6 +22,11 @@ yields a damaged model (non-finite loss or an explosion), restore the
 backup, run one compensation training step, and push loss_trust = +inf so
 every sampled peer of that round is maximally penalized (we clamp to a
 large finite value for numerics).
+
+In the unified round-program engine (``core.engine``) these primitives are
+the ``peer_sample`` (sample_weights/sample_peers), ``damage_check``
+(is_damaged + backup select) and ``trust_update`` (confidence update)
+stages — shared verbatim by the sync, async and multi-pod selections.
 """
 from __future__ import annotations
 

@@ -1,0 +1,923 @@
+"""Unified round-program engine: ONE composable superstep pipeline behind
+DeFTA, async DeFTA, FedAvg, and the multi-pod ppermute path.
+
+The DFL surveys (Gabrielli et al. 2023; Hallaji et al. 2024) frame a
+decentralized-FL round as a pipeline of interchangeable stages. This module
+makes that decomposition executable: a *round program* is an ordered tuple
+of named stages over a mutable round context::
+
+    split_keys -> scenario_view -> peer_sample -> transport (mix/wire/EF)
+                -> damage_check -> local_train -> attack_inject
+                -> trust_update -> finalize/merge
+
+Each execution mode is a *stage selection* over this pipeline:
+
+* sync DeFTA (``core.defta``)    — the full list; static finalize without a
+  scenario, churn/straggler merge with one.
+* async DeFTA (``core.async_defta``) — the same round wrapped in a
+  fire-gated tick (``build_fire_gated_tick``): speed-sampled workers merge
+  the new state, the rest freeze.
+* FedAvg (``core.fedavg``)       — star topology: ``transport`` degrades to
+  a server broadcast going down and a size-weighted mean coming back up;
+  no peer sampling, no DTS, no time machine.
+* multi-pod (``launch.train --fl``) — ``build_pod_round``: the same
+  scenario/sample/transport/trust stages over the pod axis, with the
+  ``ppermute`` transport shipping the encoded wire payload on the
+  offset-skipping ring (local training happens outside, in
+  ``build_fl_train_step``; there is no time machine — pods have no
+  held-out self-evaluation between gossip rounds).
+
+Transports are a pluggable stage (``make_transport``): ``in_jit`` wraps the
+einsum/pallas/sparse/quant backends of ``core.gossip.mix_pytree``;
+``ppermute`` wraps ``mix_pytree_ppermute`` for cross-pod meshes. Both honor
+the full wire stack (fp32/bf16/int8 payloads, EF21 residuals, stochastic
+rounding where supported).
+
+Drivers are shared too: ``drive_epochs`` is the chunked-``lax.scan``
+superstep driver with donated buffers and dispatch accounting (one XLA
+dispatch per eval chunk) used by ``run_defta`` AND ``run_fedavg``;
+``drive_ticks`` is the tick driver with the device-side
+``lax.while_loop`` early exit used by ``run_async_defta``. The triplicated
+scan/while_loop scaffolding the three engines used to carry now lives here
+once.
+
+Parity contract: the pipeline reproduces the pre-refactor engines
+bit-identically at fixed seed (tests/test_engine.py vs
+tests/golden_engine.json) — stages split the old round bodies, they do not
+reorder a single op or PRNG split.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core import dts as dts_mod
+from repro.core.gossip import (dynamic_mixing_matrix, mix_pytree,
+                               mix_pytree_ppermute, normalize_wire,
+                               uses_error_feedback)
+from repro.core.tasks import Task
+from repro.scenarios.attacks import tree_select
+
+
+# ---------------------------------------------------------------------------
+# Shared state + local-training stage
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DeFTAState:
+    params: Any                  # stacked [W, ...]
+    backup: Any                  # stacked [W, ...]
+    conf: jnp.ndarray            # [W, W]
+    best_loss: jnp.ndarray       # [W]
+    last_loss: jnp.ndarray       # [W]
+    key: jnp.ndarray
+    epoch: jnp.ndarray           # [W] per-worker epoch counters
+    wire_err: Any = None         # EF21 quantization residuals (stacked
+                                 # like params; None when wire is lossless
+                                 # or error feedback is off)
+
+
+def init_state(key, task: Task, num_workers: int, *,
+               wire_error: bool = False) -> DeFTAState:
+    keys = jax.random.split(key, num_workers + 1)
+    params = jax.vmap(task.init)(keys[:num_workers])
+    return DeFTAState(
+        params=params,
+        # distinct buffers: superstep drivers donate the whole state, and
+        # XLA rejects donating one buffer through two arguments
+        backup=jax.tree.map(jnp.copy, params),
+        conf=jnp.zeros((num_workers, num_workers)),
+        best_loss=jnp.full((num_workers,), jnp.inf),
+        last_loss=jnp.zeros((num_workers,)),
+        key=keys[-1],
+        epoch=jnp.zeros((num_workers,), jnp.int32),
+        wire_err=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if wire_error else None,
+    )
+
+
+def local_train_fn(task: Task, train: TrainConfig, local_epochs: int,
+                   dp_clip: float = 0.0, dp_sigma: float = 0.0):
+    """Returns f(key, params, x, y, mask) -> (params, mean_loss) running
+    ``local_epochs`` epochs of minibatch SGD. With ``dp_clip>0`` runs
+    DP-SGD (clip the minibatch gradient, add N(0, σ·clip/bs) noise) — the
+    paper's compatibility claim: DP composes with DeFTA untouched."""
+    bs = train.batch_size
+
+    def one_step(params, batch):
+        x, y, m, skey = batch
+        loss, g = jax.value_and_grad(task.loss)(params, x, y, m)
+        if dp_clip > 0:
+            gnorm = jnp.sqrt(sum(jnp.vdot(v, v).real
+                                 for v in jax.tree.leaves(g)) + 1e-12)
+            scale = jnp.minimum(1.0, dp_clip / gnorm)
+            leaves, tdef = jax.tree.flatten(g)
+            nkeys = jax.random.split(skey, len(leaves))
+            g = jax.tree.unflatten(tdef, [
+                v * scale + dp_sigma * dp_clip *
+                jax.random.normal(k, v.shape, v.dtype) / bs
+                for k, v in zip(nkeys, leaves)])
+        params = jax.tree.map(lambda p, gg: p - train.learning_rate * gg,
+                              params, g)
+        return params, loss
+
+    def run(key, params, x, y, mask):
+        n = x.shape[0]
+        steps_per_epoch = max(n // bs, 1)
+
+        def epoch(carry, ekey):
+            params = carry
+            pkey, nkey = jax.random.split(ekey)
+            perm = jax.random.permutation(pkey, n)
+            xs = x[perm][:steps_per_epoch * bs].reshape(
+                steps_per_epoch, bs, *x.shape[1:])
+            ys = y[perm][:steps_per_epoch * bs].reshape(steps_per_epoch, bs)
+            ms = mask[perm][:steps_per_epoch * bs].reshape(
+                steps_per_epoch, bs)
+            skeys = jax.random.split(nkey, steps_per_epoch)
+            params, losses = jax.lax.scan(
+                lambda p, b: one_step(p, b), params, (xs, ys, ms, skeys))
+            return params, losses.mean()
+
+        params, losses = jax.lax.scan(epoch, params,
+                                      jax.random.split(key, local_epochs))
+        return params, losses.mean()
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Transports: the pluggable mixing stage
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Transport:
+    """How a round's mixing actually moves bytes.
+
+    ``mix(P, stacked, residual=None, key=None)`` follows the
+    ``core.gossip.mix_pytree`` contract: returns the mixed pytree, or
+    ``(mixed, new_residual)`` when an EF21 residual pytree is passed.
+    """
+    kind: str                    # "in_jit" | "ppermute"
+    wire: Optional[str]          # None | "bf16" | "int8"
+    use_ef: bool
+    stochastic: bool             # int8 stochastic rounding (in_jit only)
+    mix: Callable
+
+
+def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
+                   adjacency=None, mesh=None, axis: str = "pod",
+                   robust: bool = False) -> Transport:
+    """Build the transport stage from a ``DeFTAConfig``.
+
+    ``mesh=None`` selects the ``in_jit`` transport (the einsum / pallas /
+    sparse / quant backends of ``mix_pytree``); with a mesh the transport
+    is the cross-pod ``ppermute`` ring (offset-skipping + per-edge nnz row
+    selection, int8/bf16 payloads, EF residuals). Stochastic int8 rounding
+    is an in_jit-only option — the ppermute encode rounds to nearest.
+    """
+    wire = normalize_wire(cfg.gossip_dtype)
+    use_ef = uses_error_feedback(cfg)
+    stochastic = wire == "int8" and cfg.gossip_wire_round == "stochastic"
+    # stochastic rounding only exists on the int8 wire; on any other wire
+    # the knob is inert (same downgrade the --fl launch path applies)
+    wire_round = cfg.gossip_wire_round if stochastic else "nearest"
+    if robust and wire is not None:
+        raise ValueError(
+            f"robust aggregation ({cfg.aggregation!r}) simulates lossless "
+            f"model exchange — it never runs the quantized wire, so "
+            f"comparing it against a lossy-wire DeFTA run would be "
+            f"apples-to-oranges; set gossip_dtype='float32'")
+
+    if mesh is None:
+        def mix(P, stacked, residual=None, key=None):
+            return mix_pytree(P, stacked, backend=backend,
+                              adjacency=adjacency, wire=wire,
+                              residual=residual, wire_round=wire_round,
+                              wire_key=key)
+        kind = "in_jit"
+    else:
+        if stochastic:
+            raise ValueError("wire_round='stochastic' is not supported on "
+                             "the ppermute transport (row-local nearest "
+                             "encode only)")
+
+        def mix(P, stacked, residual=None, key=None):
+            del key
+            return mix_pytree_ppermute(P, stacked, mesh, axis=axis,
+                                       adjacency=adjacency, wire=wire,
+                                       residual=residual)
+        kind = "ppermute"
+    return Transport(kind=kind, wire=wire, use_ef=use_ef,
+                     stochastic=stochastic, mix=mix)
+
+
+# ---------------------------------------------------------------------------
+# Round programs: stage pipelines over a round context
+# ---------------------------------------------------------------------------
+
+def run_pipeline(stages, ctx: dict) -> dict:
+    """Execute the ordered (name, fn) stage tuple over the context."""
+    for _name, fn in stages:
+        fn(ctx)
+    return ctx
+
+
+def stage_names(round_fn) -> Tuple[str, ...]:
+    """The pipeline a built round runs (for docs/tests/introspection)."""
+    return tuple(n for n, _ in getattr(round_fn, "stages", ()))
+
+
+def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                      adj: np.ndarray, sizes: np.ndarray,
+                      malicious: np.ndarray, *,
+                      gossip_backend: str = "einsum",
+                      noise_scale: float = 200.0,
+                      scenario=None, num_classes: int = 0,
+                      transport: Optional[Transport] = None):
+    """The DeFTA round program: returns an UN-jitted
+    round(state, data, epoch=None) -> state body — scannable, so drivers
+    fuse many rounds into one XLA dispatch (and jittable as-is for
+    single-round use).
+
+    ``scenario``: a ``repro.scenarios.CompiledScenario``. When given, the
+    traced ``epoch`` index looks up that epoch's alive/link/fire/attack
+    state (and, for time-varying topologies, the segment's regenerated
+    adjacency) from the compiled device arrays — churn, partitions,
+    stragglers and the whole attack zoo run INSIDE the scan body, no host
+    round-trips. Without it the body reproduces the legacy static-topology
+    round (with the paper's noise attack on ``malicious`` workers)
+    bit-for-bit.
+
+    ``transport``: a ``Transport`` (default: ``make_transport`` over the
+    in_jit ``gossip_backend``). ``num_classes`` is required when the
+    scenario contains a ``label_flip`` attack (the flip is ``y -> C-1-y``).
+    """
+    w = adj.shape[0]
+    adj_j = jnp.asarray(adj)
+    sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
+    adj_self = adj | np.eye(w, dtype=bool)
+    outdeg = jnp.asarray(adj_self.sum(axis=0).astype(np.float32))
+    malicious_j = jnp.asarray(malicious)
+    ltrain = local_train_fn(task, train, cfg.local_epochs,
+                            dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
+
+    from repro.scenarios import attacks as attacks_mod
+    from repro.scenarios.compile import ATTACK_CODE, epoch_view
+    from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
+
+    robust = cfg.aggregation in ROBUST_RULES
+    if not robust:
+        if cfg.aggregation == "defta":
+            col_w = sizes_j / outdeg
+        elif cfg.aggregation == "defl":
+            col_w = sizes_j
+        else:  # uniform gossip
+            col_w = jnp.ones_like(sizes_j)
+
+    if scenario is not None:
+        if scenario.num_workers != w:
+            raise ValueError(f"scenario compiled for W="
+                             f"{scenario.num_workers}, topology has {w}")
+        if "label_flip" in scenario.kinds_present and num_classes <= 0:
+            raise ValueError("label_flip scenario needs num_classes > 0")
+
+    if transport is None:
+        # time-varying topologies: the sparse/padded-CSR support must cover
+        # every segment's regenerated adjacency (support union), so the
+        # ``sparse_support`` memo stays a single static entry
+        support = adj
+        if scenario is not None and scenario.adj_union is not None:
+            support = scenario.adj_union
+        transport = make_transport(cfg, backend=gossip_backend,
+                                   adjacency=support, robust=robust)
+    use_ef = transport.use_ef
+    stochastic = transport.stochastic
+    regen = scenario is not None and scenario.adj_seg is not None
+
+    # ---- stages -----------------------------------------------------------
+
+    def stage_split_keys(c):
+        state = c["state"]
+        if stochastic:
+            c["key"], c["k_sample"], c["k_train"], c["k_noise"], \
+                c["k_wire"] = jax.random.split(state.key, 5)
+        else:
+            c["key"], c["k_sample"], c["k_train"], c["k_noise"] = \
+                jax.random.split(state.key, 4)
+            c["k_wire"] = None
+
+    def stage_scenario_view(c):
+        if scenario is not None:
+            view = epoch_view(scenario, c["epoch"])
+            c["alive"], c["fire"], c["att_on"] = \
+                view["alive"], view["fire"], view["attack_on"]
+            base = view["adj"] if regen else adj_j
+            c["eff_adj"] = base & view["link_ok"] \
+                & c["alive"][None, :] & c["alive"][:, None]
+        else:
+            c["eff_adj"] = adj_j
+
+    def stage_peer_sample(c):
+        if cfg.use_dts:
+            theta = dts_mod.sample_weights(c["state"].conf, c["eff_adj"],
+                                           cfg.crelu_slope)        # [W,W]
+        else:
+            theta = c["eff_adj"] / jnp.maximum(
+                c["eff_adj"].sum(1, keepdims=True), 1)
+        skeys = jax.random.split(c["k_sample"], w)
+        c["sampled"] = jax.vmap(
+            lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
+        )(skeys, theta)                                            # [W,W]
+
+    def stage_transport(c):
+        state = c["state"]
+        mask = (c["sampled"] & c["eff_adj"]) | jnp.eye(w, dtype=bool)
+        if robust:
+            # classical Byzantine-robust baselines: unweighted rule over
+            # the sampled set; P degrades to the uniform bookkeeping
+            # weights the DTS confidence update needs
+            c["agg"] = robust_mix(cfg.aggregation, mask, state.params,
+                                  trim=cfg.robust_trim)
+            c["P"] = mask / mask.sum(axis=1, keepdims=True)
+            c["wire_err"] = state.wire_err
+            return
+        if scenario is not None:
+            # per-epoch outdegree renormalization under the dynamic
+            # adjacency (churn/link failures change |D_j|/d_j)
+            P = dynamic_mixing_matrix(c["sampled"], c["eff_adj"], sizes_j,
+                                      cfg.aggregation)
+        else:
+            P = mask * col_w[None, :]
+            P = P / P.sum(axis=1, keepdims=True)
+        c["P"] = P
+        if use_ef:
+            if state.wire_err is None:
+                raise ValueError(
+                    "cfg enables gossip error feedback on a lossy wire "
+                    "but the state carries no residual buffers — build "
+                    "it with init_state(..., wire_error=True)")
+            c["agg"], c["wire_err"] = transport.mix(
+                P, state.params, residual=state.wire_err, key=c["k_wire"])
+        else:
+            c["agg"] = transport.mix(P, state.params, key=c["k_wire"])
+            c["wire_err"] = state.wire_err
+
+    def stage_damage_check(c):
+        state, data = c["state"], c["data"]
+        y_data = data["y"]
+        if scenario is not None and "label_flip" in scenario.kinds_present:
+            # data poisoning: label-flippers train (and self-evaluate) on
+            # y -> C-1-y; their protocol behaviour stays honest
+            lf = (scenario.attack_kind == ATTACK_CODE["label_flip"]) \
+                & c["att_on"]
+            y_data = attacks_mod.flip_labels(y_data, lf, num_classes)
+        c["y_data"] = y_data
+        c["loss_agg"] = jax.vmap(task.loss)(c["agg"], data["x"], y_data,
+                                            data["mask"])
+        if cfg.time_machine:
+            c["damaged"] = dts_mod.is_damaged(c["loss_agg"],
+                                              state.best_loss)
+            c["start"] = tree_select(c["damaged"], state.backup, c["agg"])
+        else:
+            c["damaged"] = jnp.zeros_like(c["loss_agg"], bool)
+            c["start"] = c["agg"]
+
+    def stage_local_train(c):
+        data = c["data"]
+        tkeys = jax.random.split(c["k_train"], w)
+        c["trained"], c["train_loss"] = jax.vmap(
+            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
+        )(tkeys, c["start"], data["x"], c["y_data"], data["mask"])
+
+    def stage_attack_inject(c):
+        if scenario is not None:
+            c["trained"] = attacks_mod.poison_sends(
+                c["k_noise"], scenario.kinds_present, scenario.attack_kind,
+                scenario.attack_scale, c["att_on"], c["agg"], c["trained"])
+        else:
+            # legacy path: the paper's aggregate+noise on ``malicious``
+            poisoned = attacks_mod.noise(
+                c["k_noise"], c["agg"], c["trained"],
+                jnp.full((w,), noise_scale, jnp.float32))
+            c["trained"] = tree_select(malicious_j, poisoned, c["trained"])
+
+    def stage_trust_update(c):
+        state = c["state"]
+        loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
+                               c["loss_agg"] - state.last_loss)
+        c["conf"] = state.conf - c["sampled"] * c["P"] * loss_trust[:, None]
+
+        improved = (c["loss_agg"] < state.best_loss) & ~c["damaged"]
+        # the time machine's compensation step RATCHETS: a damaged round
+        # starts from the backup, so its trained result is train(backup) —
+        # clean by induction — and becomes the new backup. Without this a
+        # worker whose whole peer set is malicious (66%-regime reality)
+        # re-trains the same frozen backup forever and never progresses.
+        c["backup"] = tree_select(improved | c["damaged"], c["trained"],
+                                  state.backup)
+        c["best_loss"] = jnp.where(improved, c["loss_agg"],
+                                   state.best_loss)
+        c["last_loss"] = jnp.where(c["damaged"], state.last_loss,
+                                   c["loss_agg"])
+
+    def stage_finalize(c):
+        state = c["state"]
+        c["next"] = DeFTAState(
+            params=c["trained"], backup=c["backup"], conf=c["conf"],
+            best_loss=c["best_loss"], last_loss=c["last_loss"],
+            key=c["key"], epoch=state.epoch + 1, wire_err=c["wire_err"])
+
+    def stage_fire_merge(c):
+        # churn/straggler merge: non-firing workers freeze (dead workers
+        # are absent from eff_adj so nobody consumed them; stragglers
+        # expose their stale params and skip their own round)
+        state, fire = c["state"], c["fire"]
+        params = tree_select(fire, c["trained"], state.params)
+        backup = tree_select(fire, c["backup"], state.backup)
+        wire_err = tree_select(fire, c["wire_err"], state.wire_err) \
+            if use_ef else state.wire_err
+        c["next"] = DeFTAState(
+            params=params, backup=backup,
+            conf=jnp.where(fire[:, None], c["conf"], state.conf),
+            best_loss=jnp.where(fire, c["best_loss"], state.best_loss),
+            last_loss=jnp.where(fire, c["last_loss"], state.last_loss),
+            key=c["key"], epoch=state.epoch + fire.astype(jnp.int32),
+            wire_err=wire_err)
+
+    stages = (
+        ("split_keys", stage_split_keys),
+        ("scenario_view", stage_scenario_view),
+        ("peer_sample", stage_peer_sample),
+        ("transport", stage_transport),
+        ("damage_check", stage_damage_check),
+        ("local_train", stage_local_train),
+        ("attack_inject", stage_attack_inject),
+        ("trust_update", stage_trust_update),
+        ("finalize", stage_finalize) if scenario is None
+        else ("fire_merge", stage_fire_merge),
+    )
+
+    def round(state: DeFTAState, data, epoch=None):
+        c = {"state": state, "data": data, "epoch": epoch}
+        return run_pipeline(stages, c)["next"]
+
+    round.stages = stages
+    return round
+
+
+def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                       sizes: np.ndarray, malicious: np.ndarray, *,
+                       sample_workers: int = 0, server_opt: str = "none",
+                       server_lr: float = 1.0, noise_scale: float = 200.0):
+    """FedAvg as a stage selection over the same pipeline: the transport is
+    a STAR topology (server broadcast down, size-weighted mean up), there
+    is no peer sampling / DTS / time machine, and the server optimizer is
+    the finalize stage. ``sample_workers=0`` -> CFL-F; >0 -> CFL-S.
+
+    Returns an UN-jitted round(state, data, epoch=None) body — scannable by
+    ``drive_epochs`` exactly like the DeFTA round.
+    """
+    from repro.scenarios.attacks import noise as noise_attack
+
+    w = len(sizes)
+    sizes_j = jnp.asarray(sizes, jnp.float32)
+    malicious_j = jnp.asarray(malicious)
+    ltrain = local_train_fn(task, train, cfg.local_epochs)
+
+    def stage_split_keys(c):
+        c["key"], c["k_sel"], c["k_train"], c["k_noise"] = \
+            jax.random.split(c["state"].key, 4)
+
+    def stage_star_broadcast(c):
+        c["bcast"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (w,) + x.shape),
+            c["state"].server)
+
+    def stage_local_train(c):
+        data = c["data"]
+        tkeys = jax.random.split(c["k_train"], w)
+        c["trained"], _ = jax.vmap(
+            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
+        )(tkeys, c["bcast"], data["x"], data["y"], data["mask"])
+
+    def stage_attack_inject(c):
+        # malicious: send server + noise (repro.scenarios.attacks zoo —
+        # the undefended baseline keeps the paper's one attack model)
+        poisoned = noise_attack(c["k_noise"], c["bcast"], c["trained"],
+                                jnp.full((w,), noise_scale, jnp.float32))
+        c["trained"] = tree_select(malicious_j, poisoned, c["trained"])
+
+    def stage_star_aggregate(c):
+        if sample_workers:
+            sel = jax.random.choice(c["k_sel"], w, (sample_workers,),
+                                    replace=False)
+            wmask = jnp.zeros((w,)).at[sel].set(1.0)
+        else:
+            wmask = jnp.ones((w,))
+        aw = wmask * sizes_j
+        aw = aw / aw.sum()
+        c["new_server"] = jax.tree.map(
+            lambda x: jnp.einsum("i,i...->...", aw.astype(x.dtype), x),
+            c["trained"])
+
+    def stage_server_update(c):
+        from repro.core.fedavg import FedAvgState
+        state = c["state"]
+        if server_opt == "fedadam":
+            b1, b2, eps = 0.9, 0.99, 1e-3
+            delta = jax.tree.map(lambda n, s: n - s, c["new_server"],
+                                 state.server)
+            m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d,
+                             state.opt["m"], delta)
+            v = jax.tree.map(lambda vv, d: b2 * vv + (1 - b2) * d * d,
+                             state.opt["v"], delta)
+            new_server = jax.tree.map(
+                lambda s, mm, vv: s + server_lr * mm / (jnp.sqrt(vv) + eps),
+                state.server, m, v)
+            c["next"] = FedAvgState(server=new_server,
+                                    opt={"m": m, "v": v}, key=c["key"])
+        else:
+            c["next"] = FedAvgState(server=c["new_server"], opt=state.opt,
+                                    key=c["key"])
+
+    stages = (
+        ("split_keys", stage_split_keys),
+        ("star_broadcast", stage_star_broadcast),
+        ("local_train", stage_local_train),
+        ("attack_inject", stage_attack_inject),
+        ("star_aggregate", stage_star_aggregate),
+        ("server_update", stage_server_update),
+    )
+
+    def round(state, data, epoch=None):
+        del epoch                    # FedAvg's round is epoch-invariant
+        c = {"state": state, "data": data}
+        return run_pipeline(stages, c)["next"]
+
+    round.stages = stages
+    return round
+
+
+# ---------------------------------------------------------------------------
+# Async: fire-gated tick wrapper
+# ---------------------------------------------------------------------------
+
+def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
+    """Wrap a round program in the AsyncDeFTA tick merge: on each tick,
+    worker i completes a round with probability speeds[i]; fired workers
+    take the new state, the rest freeze (heterogeneous hardware, modeled by
+    its only algorithmically observable effect — which epoch's peer models
+    a worker reads). Dead (chunk-padding) ticks skip ENTIRELY: no round
+    compute and no key advance, so the device-exit path returns a state
+    bit-identical to the host-exit reference."""
+    def tick(state: DeFTAState, inp):
+        tkey, live, t = inp
+
+        def run(state):
+            fired = jax.random.uniform(tkey, (w,)) < speeds
+            nxt = rnd_fn(state, jdata, t)
+            # merge: fired workers take the new state, others keep the
+            # old. wire_err rides along — a worker that did not fire did
+            # not send, so its EF residual must not advance either.
+            # (with a scenario, nxt already froze non-firing/dead workers,
+            # so taking nxt.* for fired workers composes both gates)
+            params = tree_select(fired, nxt.params, state.params)
+            backup = tree_select(fired, nxt.backup, state.backup)
+            wire_err = tree_select(fired, nxt.wire_err, state.wire_err)
+            conf = jnp.where(fired[:, None], nxt.conf, state.conf)
+            return DeFTAState(
+                params=params, backup=backup, conf=conf,
+                best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
+                last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
+                key=nxt.key,
+                epoch=jnp.where(fired, nxt.epoch, state.epoch),
+                wire_err=wire_err)
+
+        return jax.lax.cond(live, run, lambda s: s, state), None
+
+    return tick
+
+
+# ---------------------------------------------------------------------------
+# Drivers: chunked-scan superstep + device-side while_loop early exit
+# ---------------------------------------------------------------------------
+
+def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
+                 eval_fn=None, superstep: bool = True,
+                 stats: Optional[dict] = None):
+    """The chunked-scan superstep driver (shared by run_defta and
+    run_fedavg): epochs advance inside ``jax.lax.scan`` chunks bounded by
+    eval points, with the state buffers DONATED across chunks — a run is
+    ceil(epochs / eval_every) XLA dispatches (one, if eval_every=0).
+    ``superstep=False`` keeps the per-epoch dispatch loop (the reference
+    the fused path is tested against). ``eval_fn(state, done_epochs)`` is
+    called at eval boundaries; its results are collected into the returned
+    history. Pass ``stats={}`` to get ``{"dispatches": n, ...}`` back.
+
+    Returns ``(state, history)``.
+    """
+    history = []
+    dispatches = 0
+
+    if not superstep:                       # per-epoch reference driver
+        rnd = jax.jit(rnd_fn)
+        for e in range(epochs):
+            state = rnd(state, jdata, jnp.int32(e))
+            dispatches += 1
+            if eval_every and (e + 1) % eval_every == 0 \
+                    and eval_fn is not None:
+                history.append(eval_fn(state, e + 1))
+    else:
+        @functools.partial(jax.jit, static_argnames=("length",),
+                           donate_argnums=(0,))
+        def run_chunk(st, jd, e0, *, length):
+            def body(s, e):
+                return rnd_fn(s, jd, e), None
+            return jax.lax.scan(body, st, e0 + jnp.arange(length))[0]
+
+        done = 0
+        # eval boundaries only matter when there is something to eval —
+        # otherwise the whole run is a single dispatch
+        chunk = eval_every if (eval_every and eval_fn is not None) \
+            else epochs
+        while done < epochs:
+            n = min(chunk, epochs - done)
+            state = run_chunk(state, jdata, jnp.int32(done), length=n)
+            dispatches += 1
+            done += n
+            if eval_every and done % eval_every == 0 \
+                    and eval_fn is not None:
+                history.append(eval_fn(state, done))
+
+    if stats is not None:
+        stats["dispatches"] = dispatches
+        stats["epochs"] = epochs
+    return state, history
+
+
+def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
+                required: np.ndarray, target_epochs: int = 0,
+                host_exit: bool = False, stats: Optional[dict] = None):
+    """The tick driver (AsyncDeFTA): ticks advance inside ``lax.scan``
+    chunks with donated state buffers. The target_epochs early-exit
+    predicate is evaluated DEVICE-SIDE by default: a ``lax.while_loop``
+    over scan chunks of ``check_every`` ticks checks
+    ``all(epoch >= target_epochs)`` on ``required`` workers between chunks,
+    so the whole targeted run is ONE dispatch with zero host round-trips.
+    ``host_exit=True`` keeps the reference path: host syncs at every
+    ``check_every`` boundary. Untargeted runs are a single scan either way.
+
+    ``tkeys``: [ticks, 2] per-tick PRNG keys. Returns the final state;
+    ``stats`` gets ``{"dispatches": n, "ticks": ticks}``.
+    """
+    dispatches = 0
+    ts_all = jnp.arange(ticks, dtype=jnp.int32)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_ticks(st, tk, ts):
+        live = jnp.ones((tk.shape[0],), bool)
+        return jax.lax.scan(tick_fn, st, (tk, live, ts))[0]
+
+    def finish(state):
+        if stats is not None:
+            stats["dispatches"] = dispatches
+            stats["ticks"] = ticks
+        return state
+
+    if not target_epochs or not ticks:     # no predicate: one plain scan
+        if ticks:
+            state = run_ticks(state, tkeys, ts_all)
+            dispatches += 1
+        return finish(state)
+
+    if host_exit:                          # reference path (PR 1)
+        for t0 in range(0, ticks, check_every):
+            state = run_ticks(state, tkeys[t0:t0 + check_every],
+                              ts_all[t0:t0 + check_every])
+            dispatches += 1
+            if bool((np.asarray(state.epoch)[required]
+                     >= target_epochs).all()):
+                break
+        return finish(state)
+
+    # device-side early exit: while_loop over scan chunks, zero round-trips.
+    # Ticks are padded up to a whole number of chunks; padded slots carry
+    # live=False so they never fire (parity with the host path, which
+    # simply stops at ``ticks``).
+    nchunks = -(-ticks // check_every)
+    padded = nchunks * check_every
+    if padded > ticks:
+        tkeys = jnp.concatenate(
+            [tkeys, jnp.zeros((padded - ticks,) + tkeys.shape[1:],
+                              tkeys.dtype)])
+    tkeys = tkeys.reshape(nchunks, check_every, *tkeys.shape[1:])
+    live = (jnp.arange(padded) < ticks).reshape(nchunks, check_every)
+    ts = jnp.arange(padded, dtype=jnp.int32).reshape(nchunks, check_every)
+    vanilla = jnp.asarray(required)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_until(st, tkeys, live, ts):
+        def not_done(carry):
+            st, c = carry
+            reached = jnp.all(jnp.where(vanilla,
+                                        st.epoch >= target_epochs, True))
+            return (c < nchunks) & ~reached
+
+        def chunk(carry):
+            st, c = carry
+            st = jax.lax.scan(tick_fn, st, (tkeys[c], live[c], ts[c]))[0]
+            return st, c + 1
+
+        return jax.lax.while_loop(not_done, chunk,
+                                  (st, jnp.zeros((), jnp.int32)))[0]
+
+    state = run_until(state, tkeys, live, ts)
+    dispatches += 1
+    return finish(state)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pod round program (launch/train.py --fl)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PodState:
+    """Gossip-round state for the multi-pod path: DTS confidence, EF
+    residuals and the round counter (local train state — params/opt —
+    lives outside, in the launcher's train loop)."""
+    conf: jnp.ndarray            # [npods, npods]
+    last_loss: jnp.ndarray       # [npods]
+    key: jnp.ndarray
+    round: jnp.ndarray           # scalar int32 gossip-round counter
+    wire_err: Any = None
+
+
+def init_pod_state(key, npods: int, params=None, *,
+                   wire_error: bool = False) -> PodState:
+    return PodState(
+        conf=jnp.zeros((npods, npods)),
+        last_loss=jnp.zeros((npods,)),
+        key=key,
+        round=jnp.zeros((), jnp.int32),
+        wire_err=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if wire_error else None,
+    )
+
+
+def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
+                    transport: Transport, adj: np.ndarray,
+                    scenario=None, num_appended: int = 0):
+    """The multi-pod gossip round as the SAME stage pipeline over the pod
+    axis: scenario_view -> peer_sample (DTS) -> transport (the full wire
+    stack, ppermute or in_jit) -> attack_inject -> trust_update. Local
+    training happens between gossip rounds in ``build_fl_train_step``;
+    there is no time machine (pods have no held-out self-eval between
+    rounds), so ``damage_check`` is the skipped stage of this selection.
+
+    Returns gossip_round(pstate, params, losses) -> (pstate, new_params):
+    ``params`` is the stacked [npods, ...] pod pytree, ``losses`` [npods]
+    the pods' current train losses (the DTS trust signal). The scenario
+    epoch axis is the GOSSIP ROUND index (pstate.round).
+
+    ``num_appended`` attackers from the scenario occupy the LAST pod slots
+    (paper §4.3: attackers newly joined) — the caller sizes the mesh so
+    vanilla + appended == npods.
+    """
+    from repro.scenarios import attacks as attacks_mod
+    from repro.scenarios.compile import ATTACK_CODE, epoch_view
+    from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
+
+    del num_appended                      # slots are already in npods
+    w = npods
+    adj_j = jnp.asarray(adj)
+    sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
+    robust = cfg.aggregation in ROBUST_RULES
+    if robust and transport.wire is not None:
+        raise ValueError("robust aggregation on the pod path needs a "
+                         "lossless wire (gossip_dtype='float32')")
+    if scenario is not None and scenario.num_workers != w:
+        raise ValueError(f"scenario compiled for W={scenario.num_workers} "
+                         f"pods, mesh has {w}")
+    regen = scenario is not None and scenario.adj_seg is not None
+    use_ef = transport.use_ef
+
+    def stage_split_keys(c):
+        if transport.stochastic:
+            c["key"], c["k_sample"], c["k_noise"], c["k_wire"] = \
+                jax.random.split(c["pstate"].key, 4)
+        else:
+            c["key"], c["k_sample"], c["k_noise"] = \
+                jax.random.split(c["pstate"].key, 3)
+            c["k_wire"] = None
+
+    def stage_scenario_view(c):
+        if scenario is not None:
+            view = epoch_view(scenario, c["pstate"].round)
+            c["alive"], c["fire"], c["att_on"] = \
+                view["alive"], view["fire"], view["attack_on"]
+            base = view["adj"] if regen else adj_j
+            c["eff_adj"] = base & view["link_ok"] \
+                & c["alive"][None, :] & c["alive"][:, None]
+        else:
+            c["eff_adj"] = adj_j
+
+    def stage_peer_sample(c):
+        if cfg.use_dts:
+            theta = dts_mod.sample_weights(c["pstate"].conf, c["eff_adj"],
+                                           cfg.crelu_slope)
+            skeys = jax.random.split(c["k_sample"], w)
+            c["sampled"] = jax.vmap(
+                lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
+            )(skeys, theta)
+        else:
+            c["sampled"] = c["eff_adj"]    # listen to every live peer
+
+    def stage_transport(c):
+        pstate = c["pstate"]
+        mask = (c["sampled"] & c["eff_adj"]) | jnp.eye(w, dtype=bool)
+        c["mask"] = mask
+        if robust:
+            c["agg"] = robust_mix(cfg.aggregation, mask, c["params"],
+                                  trim=cfg.robust_trim)
+            c["P"] = mask / mask.sum(axis=1, keepdims=True)
+            c["wire_err"] = pstate.wire_err
+            return
+        P = dynamic_mixing_matrix(c["sampled"], c["eff_adj"], sizes_j,
+                                  cfg.aggregation)
+        c["P"] = P
+        if use_ef:
+            c["agg"], c["wire_err"] = transport.mix(
+                P, c["params"], residual=pstate.wire_err, key=c["k_wire"])
+        else:
+            c["agg"] = transport.mix(P, c["params"], key=c["k_wire"])
+            c["wire_err"] = pstate.wire_err
+
+    def stage_attack_inject(c):
+        if scenario is None:
+            c["out"] = c["agg"]
+            return
+        # attackers replace their post-mix state with the poisoned send
+        # (based on the aggregate + their own pre-mix params, same
+        # transforms as the simulation engines); peers consume it at the
+        # NEXT gossip round. poison_sends' honest base is the pre-mix
+        # params, but honest pods must ADOPT the aggregate — so re-select:
+        # actively attacking slots ship the poison, everyone else the mix
+        poisoned = attacks_mod.poison_sends(
+            c["k_noise"], scenario.kinds_present, scenario.attack_kind,
+            scenario.attack_scale, c["att_on"], c["agg"], c["params"])
+        att = jnp.zeros_like(c["att_on"])
+        for kind in scenario.kinds_present:
+            if kind in attacks_mod.MODEL_ATTACKS:
+                att = att | (scenario.attack_kind == ATTACK_CODE[kind])
+        c["out"] = tree_select(att & c["att_on"], poisoned, c["agg"])
+
+    def stage_trust_update(c):
+        pstate = c["pstate"]
+        loss_trust = c["losses"] - pstate.last_loss
+        c["conf"] = pstate.conf - c["sampled"] * c["P"] \
+            * loss_trust[:, None]
+
+    def stage_finalize(c):
+        pstate = c["pstate"]
+        if scenario is not None:
+            fire = c["fire"]
+            out = tree_select(fire, c["out"], c["params"])
+            wire_err = tree_select(fire, c["wire_err"], pstate.wire_err) \
+                if use_ef else pstate.wire_err
+            conf = jnp.where(fire[:, None], c["conf"], pstate.conf)
+            last_loss = jnp.where(fire, c["losses"], pstate.last_loss)
+        else:
+            out, wire_err = c["out"], c["wire_err"]
+            conf, last_loss = c["conf"], c["losses"]
+        c["next"] = PodState(conf=conf, last_loss=last_loss, key=c["key"],
+                             round=pstate.round + 1, wire_err=wire_err)
+        c["new_params"] = out
+
+    stages = (
+        ("split_keys", stage_split_keys),
+        ("scenario_view", stage_scenario_view),
+        ("peer_sample", stage_peer_sample),
+        ("transport", stage_transport),
+        ("attack_inject", stage_attack_inject),
+        ("trust_update", stage_trust_update),
+        ("finalize", stage_finalize),
+    )
+
+    def gossip_round(pstate: PodState, params, losses):
+        c = {"pstate": pstate, "params": params, "losses": losses}
+        run_pipeline(stages, c)
+        return c["next"], c["new_params"]
+
+    gossip_round.stages = stages
+    return gossip_round

@@ -5,18 +5,28 @@ claim at the baseline level.
 
 No defense mechanism: a single malicious worker (sending server+noise)
 collapses training, as in paper Table 3.
+
+Since the unified round-program refactor, FedAvg is a *stage selection*
+over ``repro.core.engine``: a STAR-topology transport (server broadcast
+down, size-weighted mean up) with no peer sampling / DTS / time machine
+(``engine.build_fedavg_round``), driven by the same chunked-scan superstep
+driver as DeFTA (``engine.drive_epochs``) — so ``run_fedavg`` now fuses a
+whole run into ceil(epochs / eval_every) XLA dispatches and reports the
+count via ``stats=`` exactly like the decentralized engines.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DeFTAConfig, TrainConfig
-from repro.core.defta import local_train_fn, tree_select
+from repro.core.defta import local_train_fn, tree_select  # noqa: F401
+                                                 # (re-export: legacy
+                                                 # import site)
 from repro.core.tasks import Task
 
 
@@ -38,68 +48,43 @@ def init_state(key, task: Task, server_opt: str = "none") -> FedAvgState:
     return FedAvgState(server=server, opt=opt, key=k2)
 
 
-def build_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
-                sizes: np.ndarray, malicious: np.ndarray, *,
-                sample_workers: int = 0, server_opt: str = "none",
-                server_lr: float = 1.0, noise_scale: float = 200.0):
-    """sample_workers=0 -> CFL-F; >0 -> CFL-S with that many sampled."""
-    w = len(sizes)
-    sizes_j = jnp.asarray(sizes, jnp.float32)
-    malicious_j = jnp.asarray(malicious)
-    ltrain = local_train_fn(task, train, cfg.local_epochs)
+def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                   sizes: np.ndarray, malicious: np.ndarray, *,
+                   sample_workers: int = 0, server_opt: str = "none",
+                   server_lr: float = 1.0, noise_scale: float = 200.0):
+    """UN-jitted, scannable round(state, data, epoch=None) body —
+    ``sample_workers=0`` -> CFL-F; >0 -> CFL-S with that many sampled.
+    The body is the engine pipeline: split_keys → star_broadcast →
+    local_train → attack_inject → star_aggregate → server_update."""
+    from repro.core.engine import build_fedavg_round
+    return build_fedavg_round(task, cfg, train, sizes, malicious,
+                              sample_workers=sample_workers,
+                              server_opt=server_opt, server_lr=server_lr,
+                              noise_scale=noise_scale)
 
-    @jax.jit
-    def round(state: FedAvgState, data):
-        key, k_sel, k_train, k_noise = jax.random.split(state.key, 4)
-        bcast = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (w,) + x.shape), state.server)
 
-        tkeys = jax.random.split(k_train, w)
-        trained, _ = jax.vmap(
-            lambda k, p, x, y, m: ltrain(k, p, x, y, m)
-        )(tkeys, bcast, data["x"], data["y"], data["mask"])
-
-        # malicious: send server + noise (repro.scenarios.attacks zoo —
-        # the undefended baseline keeps the paper's one attack model)
-        from repro.scenarios.attacks import noise as noise_attack
-        poisoned = noise_attack(k_noise, bcast, trained,
-                                jnp.full((w,), noise_scale, jnp.float32))
-        trained = tree_select(malicious_j, poisoned, trained)
-
-        # aggregation weights
-        if sample_workers:
-            sel = jax.random.choice(k_sel, w, (sample_workers,),
-                                    replace=False)
-            wmask = jnp.zeros((w,)).at[sel].set(1.0)
-        else:
-            wmask = jnp.ones((w,))
-        aw = wmask * sizes_j
-        aw = aw / aw.sum()
-        new_server = jax.tree.map(
-            lambda x: jnp.einsum("i,i...->...", aw.astype(x.dtype), x),
-            trained)
-
-        if server_opt == "fedadam":
-            b1, b2, eps = 0.9, 0.99, 1e-3
-            delta = jax.tree.map(lambda n, s: n - s, new_server,
-                                 state.server)
-            m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d,
-                             state.opt["m"], delta)
-            v = jax.tree.map(lambda vv, d: b2 * vv + (1 - b2) * d * d,
-                             state.opt["v"], delta)
-            new_server = jax.tree.map(
-                lambda s, mm, vv: s + server_lr * mm / (jnp.sqrt(vv) + eps),
-                state.server, m, v)
-            return FedAvgState(server=new_server, opt={"m": m, "v": v},
-                               key=key)
-        return FedAvgState(server=new_server, opt=state.opt, key=key)
-
-    return round
+def build_round(*args, **kwargs):
+    """Returns a jitted round(state, data) -> state step (legacy API)."""
+    return jax.jit(build_round_fn(*args, **kwargs))
 
 
 def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
                *, epochs: int, num_malicious: int = 0,
-               sample_workers: int = 0, server_opt: str = "none"):
+               sample_workers: int = 0, server_opt: str = "none",
+               superstep: bool = True, eval_every: int = 0, test_x=None,
+               test_y=None, stats: Optional[dict] = None):
+    """End-to-end FedAvg driver on the unified superstep engine.
+
+    With ``superstep`` (default) the whole run is ceil(epochs /
+    eval_every) XLA dispatches (ONE when there is nothing to eval) via the
+    shared ``drive_epochs`` chunked scan with donated server buffers;
+    ``superstep=False`` keeps the per-epoch dispatch loop. Pass
+    ``stats={}`` to get ``{"dispatches": n, "epochs": e}`` back — the same
+    dispatch accounting the DeFTA engines report (CI-gated for parity in
+    ``benchmarks/bench_guard.py``). ``eval_every``+``test_x/test_y``
+    append ``(epoch, server_acc)`` tuples to ``stats["history"]``."""
+    from repro.core.engine import drive_epochs
+
     w = cfg.num_workers + num_malicious
     malicious = np.zeros(w, bool)
     malicious[cfg.num_workers:] = True
@@ -112,12 +97,21 @@ def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
         data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
                 "mask": pad(data["mask"])}
     state = init_state(key, task, server_opt)
-    rnd = build_round(task, cfg, train, sizes, malicious,
-                      sample_workers=sample_workers, server_opt=server_opt)
+    rnd_fn = build_round_fn(task, cfg, train, sizes, malicious,
+                            sample_workers=sample_workers,
+                            server_opt=server_opt)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
-    for _ in range(epochs):
-        state = rnd(state, jdata)
+
+    eval_fn = None
+    if test_x is not None:
+        def eval_fn(st, done):
+            return (done, evaluate_server(task, st, test_x, test_y))
+    state, history = drive_epochs(rnd_fn, state, jdata, epochs,
+                                  eval_every=eval_every, eval_fn=eval_fn,
+                                  superstep=superstep, stats=stats)
+    if stats is not None and history:
+        stats["history"] = history
     return state
 
 

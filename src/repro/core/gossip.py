@@ -339,9 +339,14 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     topology whenever you have it.
 
     stacked: pytree with leading worker axis sharded on ``axis``.
-    Traffic per chip per used offset = local param bytes — so total gossip
-    wire bytes scale with the number of DISTINCT offsets in the topology,
-    not with world size (the paper's sparse-peers economy, made explicit).
+    The padded-CSR nnz selection is FUSED into the ring schedule: offset
+    o's ppermute names only the (src, dst) pairs with a real edge
+    ``adjacency[dst, src]``, so a pod ships its rows ONLY to the pods
+    whose row of P actually uses them (unnamed destinations receive
+    zeros, which the zero P weight annihilates — bit-identical output).
+    Total gossip wire bytes therefore equal the algorithmic contract —
+    nnz(adjacency) payloads per round — instead of (#used offsets × W):
+    the paper's sparse-peers economy holds per EDGE, not just per offset.
 
     ``wire``/``residual``: same contract as ``mix_pytree``. With
     ``wire="int8"`` the ring permutes the int8 payload + one fp32 scale per
@@ -363,8 +368,15 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
         a = np.asarray(adjacency) | np.eye(w, dtype=bool)
         used_offsets = [o for o in range(w)
                         if np.any(a[np.arange(w), (np.arange(w) - o) % w])]
+        # nnz row selection per offset: src j -> dst (j+o)%w only where
+        # the edge exists
+        offset_perm = {
+            o: [(j, (j + o) % w) for j in range(w) if a[(j + o) % w, j]]
+            for o in used_offsets}
     else:                                   # documented dense fallback
         used_offsets = list(range(w))
+        offset_perm = {o: [(j, (j + o) % w) for j in range(w)]
+                       for o in used_offsets}
 
     leaves, treedef = jax.tree.flatten(stacked)
     r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
@@ -401,7 +413,7 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
                 if o == 0:
                     qq, ss = q, s
                 else:
-                    perm = [(j, (j + o) % w) for j in range(w)]
+                    perm = offset_perm[o]
                     qq = jax.lax.ppermute(q, axis, perm)
                     ss = jax.lax.ppermute(s, axis, perm) \
                         if s is not None else None

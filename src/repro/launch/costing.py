@@ -27,7 +27,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
-                out_degree: float = 0.0) -> Dict[str, float]:
+                out_degree: float = 0.0,
+                adjacency=None) -> Dict[str, float]:
     """Per-round DeFTA gossip WIRE cost, accounted by wire dtype.
 
     Unlike the HLO-parsed collective bytes (which see whatever one backend
@@ -36,11 +37,20 @@ def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
     peers (default: fully connected, pods-1), with the payload priced by
     the gossip wire format — 4 B/param fp32, 2 B bf16, 1 B int8 (+ one
     fp32 scale per worker×leaf quantization row). See core/gossip.py.
+
+    The ``ppermute`` transport realizes this contract on the wire:
+    ``ring_bytes`` is its per-round total with the nnz row selection fused
+    into the ring schedule (== the algorithmic contract over
+    ``adjacency``; default fully-connected pods), and
+    ``ring_bytes_dense_rotation`` is the pre-selection schedule that
+    rotated every pod's whole stack per used offset — the ratio is the
+    row-selection win.
     """
     import numpy as np
 
+    from repro.core.topology import make_topology
     from repro.launch.roofline import ICI_BW, gossip_round_wire_bytes, \
-        gossip_wire_bytes
+        gossip_wire_bytes, ppermute_ring_bytes
     from repro.models import model as model_mod
 
     sds = model_mod.abstract_params(cfg)
@@ -48,11 +58,17 @@ def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
     n_params = sum(int(np.prod(s.shape)) for s in leaves)
     deg = out_degree or max(fl_pods - 1, 0)
     payload = gossip_wire_bytes(n_params, wire, rows=len(leaves))
+    if adjacency is None:
+        adjacency = make_topology("dense", fl_pods, fl_pods - 1)
+    ring, ring_dense = ppermute_ring_bytes(n_params, adjacency, wire,
+                                           rows=len(leaves))
     return {
         "wire": wire or "fp32",
         "payload_bytes": float(payload),
         "round_bytes": gossip_round_wire_bytes(
             n_params, fl_pods, deg, wire, rows=len(leaves)),
+        "ring_bytes": float(ring),
+        "ring_bytes_dense_rotation": float(ring_dense),
         "t_ici_s": payload * deg / ICI_BW,   # per-pod egress / link bw
     }
 
@@ -63,7 +79,13 @@ def scenario_gossip_cost(cfg: ModelConfig, fl_pods: int, compiled_scn, *,
     ``gossip_cost`` scaled by the scenario's live-edge fraction (each live
     edge ships one payload, so churn/partitions cut wire bytes
     proportionally). Reports the per-segment trajectory and the timeline
-    mean — the "cost delta" a dry-run prints next to the static number."""
+    mean — the "cost delta" a dry-run prints next to the static number.
+
+    ``ring_bytes_scenario`` is the same delta applied to the ppermute ring
+    transport (nnz row selection fused into the schedule) — what a
+    ``train.py --fl --scenario`` run actually ships per round; with the
+    selection the ring achieves the algorithmic contract, so a dead edge's
+    payload really does come off the wire."""
     import numpy as np
 
     from repro.core.topology import make_topology
@@ -78,6 +100,7 @@ def scenario_gossip_cost(cfg: ModelConfig, fl_pods: int, compiled_scn, *,
         "scenario": s["name"],
         "mean_edge_fraction": frac,
         "round_bytes_scenario": base["round_bytes"] * frac,
+        "ring_bytes_scenario": base["ring_bytes"] * frac,
         "segments": s["segments"],
         "summary": s,           # the full digest — callers must not
                                 # recompute it (the per-segment loop is

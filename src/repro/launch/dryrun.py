@@ -171,6 +171,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             g_cost = g_cost[0]
         g_coll = _cb(g_compiled.as_text())
         from repro.launch.costing import gossip_cost
+        g_costs = {fmt: gossip_cost(cfg, fl_pods, wire=fmt)
+                   for fmt in (None, "bf16", "int8")}
         gossip_info = {
             "collective_gbytes_per_chip": sum(g_coll.values()) / 1e9,
             "collective_breakdown": {k: v / 1e9 for k, v in g_coll.items()},
@@ -179,9 +181,16 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             # algorithmic wire bytes per round, by gossip wire format —
             # the int8 row is what mix_pytree(wire="int8") actually ships
             "wire_gbytes_per_round": {
-                fmt or "fp32": gossip_cost(cfg, fl_pods,
-                                           wire=fmt)["round_bytes"] / 1e9
-                for fmt in (None, "bf16", "int8")},
+                fmt or "fp32": gc["round_bytes"] / 1e9
+                for fmt, gc in g_costs.items()},
+            # the ppermute ring transport's realized bytes (nnz row
+            # selection fused into the schedule == the algorithmic
+            # contract) vs the pre-selection whole-stack rotation
+            "ppermute_ring_gbytes_per_round": {
+                fmt or "fp32": gc["ring_bytes"] / 1e9
+                for fmt, gc in g_costs.items()},
+            "ppermute_dense_rotation_gbytes_per_round":
+                g_costs[None]["ring_bytes_dense_rotation"] / 1e9,
         }
         if scenario:
             # scenario summary + cost delta: compile the named event
@@ -198,12 +207,21 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "mean_edge_fraction": sc["mean_edge_fraction"],
                 "wire_gbytes_per_round": sc["round_bytes_scenario"] / 1e9,
                 "wire_gbytes_per_round_static": sc["round_bytes"] / 1e9,
+                # the --fl transport's realized ring bytes (nnz row
+                # selection): what a scenario-driven multi-pod run
+                # actually permutes per gossip round
+                "ppermute_ring_gbytes_per_round":
+                    sc["ring_bytes_scenario"] / 1e9,
+                "ppermute_ring_gbytes_per_round_static":
+                    sc["ring_bytes"] / 1e9,
             }
             if verbose:
                 print(f"  scenario {scenario}: mean edge fraction "
                       f"{sc['mean_edge_fraction']:.3f} -> "
                       f"{sc['round_bytes_scenario'] / 1e9:.2f} GB/round "
-                      f"(static {sc['round_bytes'] / 1e9:.2f})")
+                      f"(static {sc['round_bytes'] / 1e9:.2f}); "
+                      f"ppermute ring {sc['ring_bytes_scenario'] / 1e9:.2f}"
+                      f" GB/round (nnz row selection)")
 
     mem = compiled.memory_analysis()
     # scan-aware correction: XLA counts while bodies once (see costing.py)

@@ -59,6 +59,29 @@ def gossip_round_wire_bytes(n_params: int, w: int, out_degree: float,
     return w * out_degree * gossip_wire_bytes(n_params, wire, rows=rows)
 
 
+def ppermute_ring_bytes(n_params: int, adjacency, wire=None, *,
+                        rows: int = 1):
+    """Cluster-total wire bytes of ONE ``mix_pytree_ppermute`` round over
+    a static topology, as ``(nnz_bytes, dense_rotation_bytes)``:
+
+    * ``nnz_bytes`` — with the padded-CSR nnz row selection fused into the
+      ring schedule (each offset's ppermute names only real edges), a pod
+      ships one payload per out-edge: total = nnz(adjacency) × payload —
+      the algorithmic wire contract of ``gossip_round_wire_bytes``.
+    * ``dense_rotation_bytes`` — the pre-selection schedule (every used
+      offset rotates every pod's whole local stack): |used offsets| × W ×
+      payload. The ratio is the row-selection win.
+    """
+    import numpy as np
+    a = np.asarray(adjacency, bool).copy()
+    np.fill_diagonal(a, False)              # offset 0 never crosses a link
+    w = a.shape[0]
+    payload = gossip_wire_bytes(n_params, wire, rows=rows)
+    used = [o for o in range(1, w)
+            if np.any(a[np.arange(w), (np.arange(w) - o) % w])]
+    return int(a.sum()) * payload, len(used) * w * payload
+
+
 def shape_bytes(shape_str: str) -> int:
     """Bytes of one HLO shape literal like ``bf16[16,512,128]``."""
     m = _SHAPE_RE.match(shape_str)

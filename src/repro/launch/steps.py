@@ -131,6 +131,50 @@ def build_gossip_step(cfg: ModelConfig, *, wire=None, backend: str = "einsum",
     return gossip_step
 
 
+def build_pod_gossip_step(cfg: ModelConfig, defta_cfg, npods: int, sizes, *,
+                          adjacency, transport: str = "in_jit",
+                          backend: str = "einsum", mesh=None,
+                          axis: str = "pod", scenario=None):
+    """The multi-pod DeFTA gossip round as the unified engine's stage
+    pipeline (``repro.core.engine.build_pod_round``): scenario_view →
+    peer_sample (DTS) → transport → attack_inject → trust_update over the
+    pod axis — the full feature set of the simulation engines (compiled
+    scenarios, robust aggregation, the complete wire stack) on the
+    production launcher.
+
+    ``transport="ppermute"`` ships the encoded payload on the
+    offset-skipping + nnz-row-selected ``collective_permute`` ring
+    (requires ``mesh`` with the pod axis); ``"in_jit"`` uses the
+    einsum/pallas/sparse/quant ``mix_pytree`` backends. The scenario's
+    epoch axis is the GOSSIP ROUND index.
+
+    Returns ``(gossip_round, pod_transport)`` where
+    ``gossip_round(pstate, stacked_params, losses) ->
+    (pstate', stacked_params')`` (see ``engine.PodState`` /
+    ``engine.init_pod_state``)."""
+    del cfg                                    # model config not needed —
+                                               # kept for signature parity
+                                               # with build_gossip_step
+    import numpy as np
+
+    from repro.core.engine import build_pod_round, make_transport
+    from repro.scenarios.robust_agg import ROBUST_RULES
+
+    support = np.asarray(adjacency, bool)
+    if scenario is not None and scenario.adj_union is not None:
+        # time-varying topology: the padded-CSR / ring support must cover
+        # every segment's regenerated adjacency
+        support = scenario.adj_union
+    tr = make_transport(
+        defta_cfg, backend=backend, adjacency=support,
+        mesh=mesh if transport == "ppermute" else None, axis=axis,
+        robust=defta_cfg.aggregation in ROBUST_RULES)
+    rnd = build_pod_round(defta_cfg, npods, sizes, transport=tr,
+                          adj=np.asarray(adjacency, bool),
+                          scenario=scenario)
+    return rnd, tr
+
+
 def build_prefill_step(cfg: ModelConfig, *, moe_strategy="grouped"):
     def prefill_step(params, batch):
         logits, _ = model_mod.forward(params, cfg, batch,

@@ -4,15 +4,23 @@ Three modes:
 * single-pod:  standard data+tensor-parallel training of one model.
 * multi-pod (``--fl``): DeFTA across pods — each pod is a federated worker
   with its own model replica and data stream; every ``--gossip-every``
-  steps the pods exchange params via the outdegree-corrected gossip step
-  and update DTS confidence scores from their own loss deltas.
-* scenario replay (``--scenario NAME``): run the simulation engines
-  through a named adversarial scenario (churn + attack zoo + faults,
-  compiled to device arrays — see ``repro/scenarios``). Presets:
-  ``paper_noise[@K]``, ``churn_signflip``, ``storm``. ``--async-ticks``
-  routes it through ``run_async_defta`` instead of ``run_defta``;
-  ``--assert-acc X`` exits nonzero if final vanilla accuracy < X (the CI
-  smoke hook).
+  steps the pods run one gossip round of the unified engine's pod
+  pipeline (``core.engine.build_pod_round``): scenario replay → DTS peer
+  sampling (``--pod-dts``) → the full wire stack (``--gossip-wire``
+  fp32/bf16/int8 + EF21) over the ``--transport`` of choice (``ppermute``
+  = the offset-skipping, nnz-row-selected collective_permute ring;
+  ``in_jit`` = the einsum/pallas/sparse/quant backends) → attack
+  injection → trust update. ``--scenario NAME`` replays a compiled
+  adversarial timeline over the GOSSIP ROUND axis and ``--aggregation``
+  selects defta/defl/uniform or the Byzantine-robust baselines — the
+  same knobs the simulation engines take.
+* scenario replay (``--scenario NAME`` without ``--fl``): run the
+  simulation engines through a named adversarial scenario (churn + attack
+  zoo + faults, compiled to device arrays — see ``repro/scenarios``).
+  Presets: ``paper_noise[@K]``, ``churn_signflip``, ``storm``.
+  ``--async-ticks`` routes it through ``run_async_defta`` instead of
+  ``run_defta``; ``--assert-acc X`` exits nonzero if final vanilla
+  accuracy < X (the CI smoke hook).
 
 On this CPU container use tiny configs (e.g. --arch paper-small --debug-mesh)
 — the full meshes are exercised by dryrun.py.
@@ -106,6 +114,15 @@ def main():
                     choices=["nearest", "stochastic"],
                     help="int8 wire rounding (stochastic = unbiased per "
                          "round; see core/gossip.quantize_rows_int8)")
+    ap.add_argument("--transport", default="in_jit",
+                    choices=["in_jit", "ppermute"],
+                    help="--fl gossip transport: in_jit mix_pytree "
+                         "backends, or the cross-pod ppermute ring "
+                         "(offset-skipping + nnz row selection; realizes "
+                         "the wire-format byte cut)")
+    ap.add_argument("--pod-dts", action="store_true",
+                    help="--fl: DTS peer sampling + trust reweighting "
+                         "across pods (default: listen to all live peers)")
     ap.add_argument("--debug-mesh", action="store_true",
                     help="2x2(x pods) host-device mesh for CPU")
     ap.add_argument("--checkpoint-dir", default="")
@@ -131,7 +148,7 @@ def main():
                          "accuracy is below this (CI smoke)")
     args = ap.parse_args()
 
-    if args.scenario:
+    if args.scenario and not args.fl:
         raise SystemExit(run_scenario_sim(args))
 
     if args.debug_mesh:
@@ -144,13 +161,12 @@ def main():
     import jax.numpy as jnp
     from repro.config import ShapeConfig, reduced
     from repro.configs import get_config
-    from repro.core.aggregation import mixing_matrix
     from repro.core.topology import make_topology
     from repro.data.loader import TokenBatcher
     from repro.launch.mesh import make_debug_mesh
     from repro.launch.sharding_rules import base_rules
-    from repro.launch.steps import (build_fl_train_step, build_gossip_step,
-                                    build_train_step, input_specs)
+    from repro.launch.steps import (build_fl_train_step, build_train_step,
+                                    input_specs)
     from repro.models import model as model_mod
     from repro.optim import make_optimizer
     from repro.sharding import logical_rules
@@ -174,29 +190,66 @@ def main():
     ctx = logical_rules(mesh, rules) if mesh else _nullcontext()
     with (mesh if mesh else _nullcontext()), ctx:
         if args.fl:
+            import dataclasses as _dc
+
+            from repro.config import DeFTAConfig
+            from repro.core.engine import init_pod_state
+            from repro.core.gossip import normalize_wire, \
+                uses_error_feedback
+            from repro.launch.steps import build_pod_gossip_step
+            from repro.scenarios import compile_scenario, get_scenario
+            from repro.scenarios.robust_agg import ROBUST_RULES
+
             stack = lambda t: jax.tree.map(
                 lambda x: jnp.stack([x] * pods), t)
             params, opt_state = stack(params), stack(opt_state)
-            from repro.core.gossip import normalize_wire
-            wire = normalize_wire(args.gossip_wire)
-            use_ef = wire is not None and not args.no_gossip_ef
             fl_step = jax.jit(build_fl_train_step(cfg, opt),
                               donate_argnums=(0, 1))
             adj = make_topology("dense", pods, pods - 1)
-            stochastic = wire == "int8" and \
-                args.gossip_wire_round == "stochastic"
-            gossip = jax.jit(build_gossip_step(
-                cfg, wire=wire, adjacency=adj if wire else None,
-                error_feedback=use_ef,
-                wire_round=args.gossip_wire_round if stochastic
-                else "nearest"))
-            gkey = jax.random.PRNGKey(101)
             sizes = np.full(pods, args.batch)
-            P = jnp.asarray(mixing_matrix(adj, sizes, "defta"),
-                            jnp.float32)
-            wire_err = jax.tree.map(
-                lambda x: jnp.zeros(x.shape, jnp.float32), params) \
-                if use_ef else None
+
+            robust = args.aggregation in ROBUST_RULES
+            dcfg = DeFTAConfig(
+                num_workers=pods, avg_peers=pods - 1,
+                num_sampled=min(2, pods - 1), topology="dense",
+                aggregation=args.aggregation,
+                use_dts=args.pod_dts and not robust,
+                time_machine=False,
+                gossip_dtype="float32" if robust else args.gossip_wire,
+                gossip_error_feedback=not args.no_gossip_ef,
+                gossip_wire_round=args.gossip_wire_round)
+
+            # gossip-round horizon = how many gossip rounds the run holds;
+            # the scenario's epoch axis is the gossip round index
+            rounds = max(args.steps // args.gossip_every, 1)
+            scenario = None
+            if args.scenario:
+                n_app = get_scenario(
+                    args.scenario, pods).num_appended_attackers()
+                vanilla = pods - n_app
+                if vanilla <= 0:
+                    raise SystemExit(
+                        f"scenario {args.scenario} appends {n_app} "
+                        f"attackers but the mesh only has {pods} pods — "
+                        f"attackers occupy pod slots; use more --pods")
+                scenario = compile_scenario(
+                    get_scenario(args.scenario, vanilla), vanilla, rounds)
+                assert scenario.num_workers == pods
+                print(f"--fl scenario {scenario.spec.name}: "
+                      f"{scenario.summary(adj)}")
+
+            gossip_rnd, pod_tr = build_pod_gossip_step(
+                cfg, dcfg, pods, sizes, adjacency=adj,
+                transport=args.transport, mesh=mesh, scenario=scenario)
+            gossip = jax.jit(gossip_rnd, donate_argnums=(0, 1))
+            pstate = init_pod_state(
+                jax.random.PRNGKey(101), pods, params,
+                wire_error=uses_error_feedback(dcfg) and not robust)
+            print(f"--fl pod pipeline: transport={pod_tr.kind} "
+                  f"wire={pod_tr.wire or 'fp32'} ef={pod_tr.use_ef} "
+                  f"aggregation={args.aggregation} dts={dcfg.use_dts}")
+
+            losses = jnp.zeros((pods,))
             for i in range(args.steps):
                 b = batcher.batch_at(i)
                 batch = {k: jnp.asarray(v).reshape(
@@ -205,12 +258,7 @@ def main():
                 params, opt_state, step, losses = fl_step(
                     params, opt_state, step, batch)
                 if (i + 1) % args.gossip_every == 0:
-                    wk = jax.random.fold_in(gkey, i) if stochastic \
-                        else None
-                    if use_ef:
-                        params, wire_err = gossip(params, P, wire_err, wk)
-                    else:
-                        params = gossip(params, P, wk)
+                    pstate, params = gossip(pstate, params, losses)
                 print(f"step {i:4d} losses="
                       f"{[round(float(x), 4) for x in losses]} "
                       f"({time.time() - t0:.2f}s)"

@@ -39,12 +39,12 @@ from repro.scenarios.compile import (ATTACK_CODE, CompiledScenario,
                                      compile_scenario, epoch_view)
 from repro.scenarios.spec import (ATTACK_KINDS, AttackSpec, ChurnSpec,
                                   LinkSpec, PartitionSpec, ScenarioSpec,
-                                  StragglerSpec, get_scenario)
+                                  StragglerSpec, TopologySpec, get_scenario)
 from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
 
 __all__ = [
     "ATTACK_CODE", "ATTACK_KINDS", "AttackSpec", "ChurnSpec",
     "CompiledScenario", "LinkSpec", "PartitionSpec", "ROBUST_RULES",
-    "ScenarioSpec", "StragglerSpec", "compile_scenario", "epoch_view",
-    "get_scenario", "robust_mix",
+    "ScenarioSpec", "StragglerSpec", "TopologySpec", "compile_scenario",
+    "epoch_view", "get_scenario", "robust_mix",
 ]

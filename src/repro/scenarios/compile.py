@@ -78,6 +78,14 @@ class CompiledScenario:
     alive_np: np.ndarray        # [S, W] host copy for summaries
     link_ok_np: np.ndarray      # [S, W, W]
     seg_of_epoch_np: np.ndarray
+    # -- time-varying topology (spec.topology; None = mask-only) -------
+    adj_seg: Any = None         # [S, W, W] bool — per-segment regenerated
+                                # adjacency (rekeyed topology draw)
+    adj_union: Optional[np.ndarray] = None
+                                # [W, W] support union over segments — the
+                                # static padded-CSR support the sparse
+                                # backend memoizes on
+    adj_seg_np: Optional[np.ndarray] = None
 
     @property
     def num_segments(self) -> int:
@@ -98,7 +106,13 @@ class CompiledScenario:
                  "alive": int(self.alive_np[s].sum())}
             if adj is not None:
                 a = np.asarray(adj, bool)
-                eff = a & self.link_ok_np[s] \
+                # under a time-varying topology the segment's own drawn
+                # adjacency carries the edges; the fraction stays
+                # normalized by the STATIC graph so it remains the
+                # wire-byte multiplier vs the static run
+                seg_a = self.adj_seg_np[s] if self.adj_seg_np is not None \
+                    else a
+                eff = seg_a & self.link_ok_np[s] \
                     & self.alive_np[s][None, :] & self.alive_np[s][:, None]
                 d["edge_fraction"] = round(
                     float(eff.sum()) / max(int(a.sum()), 1), 4)
@@ -187,7 +201,12 @@ def compile_scenario(spec: ScenarioSpec, num_vanilla: int,
         link_ok_e[_window(p.start, p.stop, epochs)] &= ~cross
 
     # ---- segment-compress the topology state -------------------------
+    # (a TopologySpec's ``every`` forces extra boundaries: epochs in
+    # different re-draw windows must land in different segments even when
+    # their alive/link state is identical)
+    every = spec.topology.every if spec.topology else 0
     keys = [alive_e[e].tobytes() + link_ok_e[e].tobytes()
+            + ((e // every).to_bytes(4, "little") if every else b"")
             for e in range(epochs)]
     seg_of_epoch = np.zeros(epochs, np.int32)
     seg_index: dict = {}
@@ -201,6 +220,20 @@ def compile_scenario(spec: ScenarioSpec, num_vanilla: int,
     order = [firsts[s] for s in range(len(seg_index))]
     alive = alive_e[order]
     link_ok = link_ok_e[order]
+
+    # ---- time-varying topology: rekeyed draw per segment -------------
+    adj_seg = adj_union = None
+    if spec.topology is not None:
+        from repro.core.topology import make_topology
+        t = spec.topology
+        adj_seg = np.stack([
+            make_topology(t.kind, w, t.avg_peers,
+                          seed=spec.seed + 7919 * (s + 1))
+            for s in range(len(order))])
+        # support union: the ONE static padded-CSR support covering every
+        # segment (sparse_support memoizes on its bytes — no per-epoch
+        # cache churn)
+        adj_union = adj_seg.any(axis=0)
 
     # ---- straggler fire schedule (deterministic from seed) -----------
     fire = np.ones((epochs, w), bool)
@@ -234,6 +267,8 @@ def compile_scenario(spec: ScenarioSpec, num_vanilla: int,
         kinds_present=kinds_present,
         malicious=attack_kind > 0,
         alive_np=alive, link_ok_np=link_ok, seg_of_epoch_np=seg_of_epoch,
+        adj_seg=jnp.asarray(adj_seg) if adj_seg is not None else None,
+        adj_union=adj_union, adj_seg_np=adj_seg,
     )
 
 
@@ -250,4 +285,8 @@ def epoch_view(compiled: CompiledScenario, epoch):
         "link_ok": compiled.link_ok[seg],
         "fire": compiled.fire[e],
         "attack_on": compiled.attack_on[e],
+        # time-varying topology: the segment's regenerated adjacency
+        # (None when the spec only masks a build-time graph)
+        "adj": compiled.adj_seg[seg]
+        if compiled.adj_seg is not None else None,
     }

@@ -49,6 +49,14 @@ schedule drawn from ``seed`` at compile time — device-side it is just a
 [E, W] fire mask). Dead/not-yet-joined workers are removed from the
 topology (nobody receives from them, they receive from nobody, their state
 is frozen); their slots stay in the stacked arrays so shapes are static.
+
+Time-varying topologies: ``topology=TopologySpec(kind, avg_peers)`` makes
+the compiler REGENERATE the adjacency per topology segment (a rekeyed
+``core.topology`` draw per distinct churn/link segment) instead of only
+masking a build-time one — peers genuinely change over the run. The
+compiled scenario carries the per-segment adjacencies plus their support
+UNION, which is what the padded-CSR sparse backend keys its
+``sparse_support`` memo on (one static entry for the whole run).
 """
 from __future__ import annotations
 
@@ -111,6 +119,26 @@ class StragglerSpec:
     stop: int = 0
 
 
+_TOPOLOGY_KINDS = ("ring", "random_kout", "erdos", "dense")
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """Time-varying topology: regenerate the adjacency from a rekeyed
+    ``core.topology`` draw at every topology segment boundary (each
+    distinct churn/link/partition segment gets its own draw) instead of
+    masking one build-time graph. ``every>1`` additionally forces a
+    re-draw every that-many epochs even without an event boundary."""
+    kind: str = "random_kout"
+    avg_peers: int = 4
+    every: int = 0               # >0: extra segment boundary every N epochs
+
+    def __post_init__(self):
+        if self.kind not in _TOPOLOGY_KINDS:
+            raise ValueError(f"unknown topology kind {self.kind!r} "
+                             f"(one of {_TOPOLOGY_KINDS})")
+
+
 @dataclass(frozen=True)
 class ScenarioSpec:
     name: str = "scenario"
@@ -119,6 +147,7 @@ class ScenarioSpec:
     links: Tuple[LinkSpec, ...] = ()
     partitions: Tuple[PartitionSpec, ...] = ()
     stragglers: Tuple[StragglerSpec, ...] = ()
+    topology: "TopologySpec | None" = None
     seed: int = 0
 
     def num_appended_attackers(self) -> int:
