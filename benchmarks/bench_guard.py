@@ -17,7 +17,14 @@ fails (exit 1) when the headline wins regress:
 * the scenario engine must stay free on the superstep: a churn+attack
   scenario run may not exceed ``1 + tolerance`` times the static run's
   wall clock, and its dispatch count must be IDENTICAL (scenarios compile
-  to device-side data, never to extra dispatches).
+  to device-side data, never to extra dispatches);
+* the geometric trust_update stage (DTS v2, ``dts_signal="geom"``) must
+  keep DISPATCH PARITY with loss-only DTS and its superstep wall clock
+  within ``1 + tolerance`` of the loss-only run — geometry is data flow
+  inside the scanned round body, never extra dispatches;
+* the DTS v2 headline must hold: on the label_flip × non-iid trust-grid
+  cells, geom or both must beat loss on final mean honest accuracy (the
+  PR-3 finding the geometric signal exists to fix).
 
 Interpret-mode timings are noisy; the guard compares RATIOS within one run
 (dense/sparse from the same process share the noise), not absolute times
@@ -121,6 +128,37 @@ def check(baseline, fresh, tolerance):
             failures.append(
                 f"scenario-compiled superstep {scn['ratio']:.2f}x slower "
                 f"than static (gate {1 + tolerance:.2f}x)")
+
+    gt = fresh.get("geom_trust")
+    if not gt:
+        failures.append("fresh bench has no geom_trust entry")
+    else:
+        print(f"geom trust_update: {gt['ratio']:.2f}x loss-only superstep "
+              f"(dispatches {gt['dispatches_geom']} vs "
+              f"{gt['dispatches_loss']})")
+        if gt["dispatches_geom"] != gt["dispatches_loss"]:
+            failures.append(
+                f"geom trust_update changed the dispatch count: "
+                f"{gt['dispatches_geom']} vs {gt['dispatches_loss']} — "
+                f"the geometric signal must stay data flow inside the "
+                f"scanned round body")
+        if gt["ratio"] > 1 + tolerance:
+            failures.append(
+                f"geom trust_update superstep {gt['ratio']:.2f}x slower "
+                f"than loss-only (gate {1 + tolerance:.2f}x)")
+
+    tg = fresh.get("trust_grid")
+    if not tg:
+        failures.append("fresh bench has no trust_grid entry")
+    else:
+        accs = tg.get("accs", {})
+        print("trust grid label_flip × non-iid: "
+              + " ".join(f"{s}={a:.3f}" for s, a in accs.items()))
+        if not tg.get("headline_ok"):
+            failures.append(
+                "DTS v2 headline regressed: geom/both no longer beat "
+                "loss on label_flip × non-iid honest accuracy "
+                f"(accs: {accs})")
     return failures
 
 

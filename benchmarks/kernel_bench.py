@@ -5,8 +5,11 @@ Also emits ``BENCH_gossip.json``: the dense-vs-sparse-vs-einsum gossip
 trajectory over (world size, topology density) — now including the
 quantized wire sweep (bytes-on-wire by format + fused int8 kernel time) —
 plus the super-step driver check (dispatch count and per-epoch-driver loss
-agreement) and the quantized-convergence parity check (int8 wire with EF21
-error feedback lands within tolerance of the fp32 run)."""
+agreement), the quantized-convergence parity check (int8 wire with EF21
+error feedback lands within tolerance of the fp32 run), the geometric
+trust_update cost contract (dispatch parity + superstep overhead vs
+loss-only DTS) and the DTS v2 headline cells (label_flip × signal on the
+non-iid partition, benchmarks/table_trust.py)."""
 from __future__ import annotations
 
 import json
@@ -124,10 +127,13 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     quant_convergence = bench_quant_convergence()
     scenario_overhead = bench_scenario_overhead()
     fedavg_dispatch = bench_fedavg_dispatch()
+    geom_trust = bench_geom_trust()
+    trust_grid = bench_trust_grid()
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
                    quant_convergence=quant_convergence,
                    scenario_overhead=scenario_overhead,
-                   fedavg_dispatch=fedavg_dispatch)
+                   fedavg_dispatch=fedavg_dispatch,
+                   geom_trust=geom_trust, trust_grid=trust_grid)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -308,6 +314,109 @@ def bench_scenario_overhead(epochs: int = 60):
     return dict(epochs=epochs, static_s=static_s, scenario_s=scn_s,
                 ratio=ratio, compile_scenario_s=compile_s,
                 dispatches_static=d_static, dispatches_scenario=d_scn)
+
+
+def bench_geom_trust(epochs: int = 20):
+    """DTS v2 cost contract, CI-gated by bench_guard: the geometric
+    trust_update stage variant (``dts_signal="geom"``) must keep DISPATCH
+    PARITY with loss-only (geometry is data flow inside the scanned round
+    body, never control flow) and the STEADY-STATE scanned superstep must
+    stay within the overhead gate (≤ 1 + tolerance ×) at the paper's
+    round shape (local_epochs=10) — geometry is a fixed per-round cost,
+    so the contract is defined against a representative round, not a
+    local_epochs=1 microbench where any fixed cost looks huge. Compile
+    is excluded (the one-off trace/compile delta is reported separately):
+    the two signals compile DIFFERENT graphs, and compile-time variance
+    across CI machines would swamp a ratio gate."""
+    import dataclasses
+
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import (_pad_workers, build_round_fn,
+                                  resolve_scenario)
+    from repro.core.engine import init_state
+    from repro.core.tasks import mlp_task
+    from repro.core.topology import make_topology
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios import AttackSpec, ScenarioSpec
+
+    w, k = 8, 4
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(
+        name="geom_bench",
+        attacks=tuple(AttackSpec("label_flip") for _ in range(k)))
+
+    def measure(signal):
+        cfg = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                          local_epochs=10, dts_signal=signal)
+        scn = resolve_scenario(spec, cfg, epochs)
+        d2, sizes = _pad_workers(data, data["sizes"], k)
+        jdata = {kk: jnp.asarray(v) for kk, v in d2.items()
+                 if kk in ("x", "y", "mask")}
+        adj = make_topology(cfg.topology, scn.num_workers, cfg.avg_peers,
+                            cfg.seed)
+        rnd = build_round_fn(task, cfg, train, adj, sizes,
+                             scn.malicious.copy(), scenario=scn,
+                             num_classes=10)
+
+        @jax.jit
+        def chunk(st, jd):
+            return jax.lax.scan(lambda s, e: (rnd(s, jd, e), None), st,
+                                jnp.arange(epochs))[0]
+
+        st = init_state(jax.random.PRNGKey(0), task, scn.num_workers)
+        t0 = time.time()
+        jax.block_until_ready(chunk(st, jdata))      # trace + compile
+        compile_s = time.time() - t0
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(chunk(st, jdata))  # one XLA dispatch
+            best = min(best, time.time() - t0)
+        return best, compile_s
+
+    loss_s, loss_compile = measure("loss")
+    geom_s, geom_compile = measure("geom")
+    ratio = geom_s / loss_s
+    # dispatch parity on the end-to-end driver (stats accounting)
+    from repro.core.defta import run_defta
+    stats_l, stats_g = {}, {}
+    base = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                       local_epochs=1)
+    run_defta(jax.random.PRNGKey(0), task, base, train, data, epochs=6,
+              scenario=spec, stats=stats_l)
+    run_defta(jax.random.PRNGKey(0), task,
+              dataclasses.replace(base, dts_signal="geom"), train, data,
+              epochs=6, scenario=spec, stats=stats_g)
+    print(f"geom trust overhead {epochs}x10-local-epoch supersteps: "
+          f"loss {loss_s:.2f}s vs geom {geom_s:.2f}s ({ratio:.2f}x "
+          f"steady-state; compile {loss_compile:.1f}s vs "
+          f"{geom_compile:.1f}s; dispatches {stats_l['dispatches']} vs "
+          f"{stats_g['dispatches']})")
+    return dict(epochs=epochs, loss_s=loss_s, geom_s=geom_s, ratio=ratio,
+                compile_loss_s=loss_compile, compile_geom_s=geom_compile,
+                dispatches_loss=stats_l["dispatches"],
+                dispatches_geom=stats_g["dispatches"])
+
+
+def bench_trust_grid(epochs: int = 40):
+    """The DTS v2 headline cells for the BENCH trajectory: label_flip ×
+    (loss / geom / both) on the non-iid partition — the PR-3 failure case
+    the geometric signal exists to fix. Full grid (more attacks, iid
+    column, trust trajectories) in benchmarks/table_trust.py; this
+    compact slice rides BENCH_gossip.json so bench_guard and the
+    dashboard track the headline across PRs."""
+    try:
+        from benchmarks.table_trust import headline_check, sweep
+    except ImportError:                    # run as benchmarks/kernel_bench.py
+        from table_trust import headline_check, sweep
+
+    rows = sweep(epochs=epochs, attacks=("label_flip",),
+                 partitions=(("non_iid", 0.5),))
+    ok, accs = headline_check(rows, verbose=False)
+    return dict(epochs=epochs, headline_ok=bool(ok), accs=accs, rows=rows)
 
 
 def run():

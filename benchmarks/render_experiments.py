@@ -4,7 +4,9 @@ trajectory dashboard: one row per bench file (the committed baseline, the
 fresh CI run, and any stashed history), tracking the CI-guarded headline
 numbers — sparse-kernel win, fused-quant slowdown, int8 wire-byte ratio,
 superstep dispatches, quantized-convergence delta, scenario-engine
-overhead and the FedAvg dispatch parity — across PRs.
+overhead and the FedAvg dispatch parity — across PRs, and the DTS v2
+trust panel (label_flip × non-iid honest accuracy per trust signal +
+the geometric trust_update overhead).
 
     python benchmarks/render_experiments.py                  # dry-run tables
     python benchmarks/render_experiments.py --bench-dashboard [paths...]
@@ -120,6 +122,7 @@ def render_bench_dashboard(paths=()) -> str:
         "fedavg disp parity |",
         "|" + "---|" * 8,
     ]
+    payloads = []
     for p in paths:
         try:
             with open(p) as fh:
@@ -129,7 +132,40 @@ def render_bench_dashboard(paths=()) -> str:
                          + "| —" * 6 + " |")
             continue
         lines.append(_bench_row(os.path.basename(p), payload))
+        payloads.append((os.path.basename(p), payload))
+    lines += _trust_panel(payloads)
     return "\n".join(lines)
+
+
+def _trust_panel(payloads) -> list:
+    """The DTS v2 trust panel: per bench file, the label_flip × non-iid
+    honest accuracy by trust signal (loss / geom / both), the final
+    attacker-θ share of the best geometric signal, and the geometric
+    trust_update overhead — blank for pre-DTS-v2 history files."""
+    lines = [
+        "",
+        "## DTS v2 trust panel (label_flip × non-iid)",
+        "",
+        "| bench file | acc loss | acc geom | acc both | attacker-θ "
+        "(best geom) | headline | geom overhead |",
+        "|" + "---|" * 7,
+    ]
+    for label, payload in payloads:
+        tg = payload.get("trust_grid")
+        gt = payload.get("geom_trust") or {}
+        if not tg:
+            lines.append(f"| {label} " + "| — " * 6 + "|")
+            continue
+        accs = tg.get("accs", {})
+        theta = min((r["attacker_theta"] for r in tg.get("rows", ())
+                     if r["signal"] != "loss"), default=None)
+        lines.append(
+            f"| {label} | {accs.get('loss', 0):.3f} | "
+            f"{accs.get('geom', 0):.3f} | {accs.get('both', 0):.3f} | "
+            + (f"{theta:.3f}" if theta is not None else "—")
+            + f" | {'OK' if tg.get('headline_ok') else 'REGRESSED'} | "
+            + (f"{gt['ratio']:.2f}x" if gt else "—") + " |")
+    return lines
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ def main() -> None:
 
     from benchmarks import (bias_analysis, kernel_bench, roofline_table,
                             table2_performance, table3_robustness,
-                            table4_async)
+                            table4_async, table_trust)
 
     results = {}
     csv_rows = []
@@ -69,6 +69,22 @@ def main() -> None:
     csv_rows.append(("table4_async", (time.time() - t0) * 1e6,
                      results["table4"][2]["acc"] -
                      results["table4"][0]["acc"]))
+
+    t0 = time.time()
+    # the DTS v2 grid: --fast runs only the headline cells (label_flip ×
+    # non-iid); default adds the adaptive attackers and the iid column
+    results["table_trust"] = table_trust.sweep(
+        epochs=epochs,
+        attacks=("label_flip",) if args.fast
+        else ("label_flip", "alie", "dts_dodge", "theta_aware"),
+        partitions=(("non_iid", 0.5),) if args.fast
+        else table_trust.PARTITIONS)
+    ok, accs = table_trust.headline_check(results["table_trust"],
+                                          verbose=False)
+    best_geom = max((a for s, a in accs.items() if s != "loss"),
+                    default=0.0)
+    csv_rows.append(("table_trust", (time.time() - t0) * 1e6,
+                     best_geom - accs.get("loss", 0.0)))
 
     if os.path.isdir("experiments/dryrun"):
         results["roofline"] = roofline_table.run()

@@ -1,0 +1,151 @@
+"""Attack × trust-signal grid: the DTS v2 acceptance bench.
+
+PR 3's finding (ROADMAP "DTS finding"): the paper's loss-delta trust
+signal cannot separate ``label_flip`` attackers from honest peers under
+non-iid heterogeneity — the loss delta is a scalar per receiver, so every
+sampled peer of a bad round is penalized alike, and a flipper's damage
+hides inside non-iid loss noise. DTS v2 (``core/dts.geom_scores``,
+``DeFTAConfig.dts_signal``) adds per-(receiver, peer) update-geometry
+signals. This bench runs the closing grid:
+
+    attacks   × label_flip / alie / dts_dodge / theta_aware
+    signals   × loss / geom / both
+    partition × iid (Dirichlet α=100) / non-iid (α=0.5, the PR-3 case)
+
+recording final mean honest accuracy and the TRUST TRAJECTORY — the mean
+sampling-weight mass honest workers place on attackers (θ share) at each
+eval point; a working defense drives it toward 0. The headline claim
+(checked by ``headline_check`` and gated in ``BENCH_gossip.json`` via
+``benchmarks/bench_guard.py``): geom/both beat loss on final honest
+accuracy under label_flip × non-iid, where loss-only provably fails.
+
+    PYTHONPATH=src python benchmarks/table_trust.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core import dts
+from repro.core.defta import (_pad_workers, build_round_fn, evaluate,
+                              resolve_scenario)
+from repro.core.engine import drive_epochs, init_state
+from repro.core.gossip import uses_error_feedback
+from repro.core.tasks import mlp_task
+from repro.core.topology import make_topology
+from repro.data.synthetic import federated_dataset
+from repro.scenarios import AttackSpec, ScenarioSpec
+
+ATTACKS = ("label_flip", "alie", "dts_dodge", "theta_aware")
+SIGNALS = ("loss", "geom", "both")
+PARTITIONS = (("iid", 100.0), ("non_iid", 0.5))
+
+
+def attacker_theta_share(conf, adj, malicious) -> float:
+    """Mean sampling-weight mass honest workers place on attackers — the
+    trust-trajectory statistic (0 = attackers frozen out, ~k/peers =
+    undetected)."""
+    theta = dts.sample_weights(conf, jnp.asarray(adj))
+    t = np.asarray(theta)
+    return float(t[~malicious][:, malicious].sum(axis=1).mean())
+
+
+def run_cell(key, task, cfg: DeFTAConfig, train: TrainConfig, data, spec,
+             *, epochs: int, eval_every: int):
+    """One grid cell on the engine API directly (build_round_fn +
+    drive_epochs) so the eval hook can record BOTH honest accuracy and the
+    attacker-θ share per eval point — the trust trajectory ``run_defta``'s
+    fixed eval cannot expose."""
+    scenario = resolve_scenario(spec, cfg, epochs)
+    w = scenario.num_workers
+    malicious = scenario.malicious.copy()
+    num_classes = int(np.max(data["y"])) + 1
+    adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
+    data, sizes = _pad_workers(data, data["sizes"], w - cfg.num_workers)
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
+    rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
+                            scenario=scenario, num_classes=num_classes)
+    jdata = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("x", "y", "mask")}
+
+    def eval_fn(st, done):
+        m, s, _ = evaluate(task, st, data["test_x"], data["test_y"],
+                           malicious)
+        return (done, m, s, attacker_theta_share(st.conf, adj, malicious))
+
+    state, hist = drive_epochs(rnd_fn, state, jdata, epochs,
+                               eval_every=eval_every, eval_fn=eval_fn)
+    done, acc, std, share = hist[-1]
+    return dict(acc=acc, std=std, attacker_theta=share,
+                trajectory=[dict(epoch=int(e), acc=float(m),
+                                 attacker_theta=float(t))
+                            for e, m, _, t in hist])
+
+
+def sweep(epochs: int = 40, k: int = 8, num_workers: int = 20,
+          attacks=ATTACKS, signals=SIGNALS, partitions=PARTITIONS,
+          eval_every: int = 10, local_epochs: int = 3, seed: int = 0,
+          n_per_worker: int = 120, verbose: bool = True):
+    """The attack × signal × partition grid. Returns rows of
+    dict(attack, signal, partition, acc, std, attacker_theta, trajectory).
+    """
+    rows = []
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    for part_name, alpha in partitions:
+        data = federated_dataset("vector", num_workers,
+                                 np.random.default_rng(seed),
+                                 n_per_worker=n_per_worker, alpha=alpha)
+        for attack in attacks:
+            spec = ScenarioSpec(
+                name=f"{attack}_k{k}",
+                attacks=tuple(AttackSpec(attack) for _ in range(k)))
+            for signal in signals:
+                cfg = DeFTAConfig(num_workers=num_workers, avg_peers=4,
+                                  num_sampled=2,
+                                  local_epochs=local_epochs,
+                                  dts_signal=signal, seed=seed)
+                t0 = time.time()
+                cell = run_cell(jax.random.PRNGKey(seed), task, cfg,
+                                train, data, spec, epochs=epochs,
+                                eval_every=eval_every)
+                rows.append(dict(attack=attack, signal=signal,
+                                 partition=part_name, k=k,
+                                 num_workers=num_workers, epochs=epochs,
+                                 **cell))
+                if verbose:
+                    print(f"trust {part_name:>7s} {attack:>11s} × "
+                          f"{signal:<4s}: acc {cell['acc']:.3f}±"
+                          f"{cell['std']:.2f} attacker-θ "
+                          f"{cell['attacker_theta']:.3f} "
+                          f"({time.time() - t0:.0f}s)")
+    headline_check(rows, verbose=verbose)
+    return rows
+
+
+def headline_check(rows, verbose: bool = True):
+    """The acceptance claim: geom or both beats loss on final mean honest
+    accuracy under label_flip × non-iid (and loss stays bit-identical to
+    the legacy engine — pinned separately by tests/golden_engine.json).
+    Returns (ok, by_signal)."""
+    accs = {r["signal"]: r["acc"] for r in rows
+            if r["attack"] == "label_flip" and r["partition"] == "non_iid"}
+    geom_accs = [a for s, a in accs.items() if s != "loss"]
+    if "loss" not in accs or not geom_accs:
+        # a signals-subset sweep has no headline comparison to make
+        return None, accs
+    ok = max(geom_accs) > accs["loss"]
+    if verbose:
+        print(f"trust headline label_flip × non-iid: loss "
+              f"{accs['loss']:.3f} vs best geom-signal "
+              f"{max(geom_accs):.3f} -> {'OK' if ok else 'REGRESSION'}")
+    return ok, accs
+
+
+if __name__ == "__main__":
+    sweep()

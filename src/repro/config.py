@@ -215,6 +215,20 @@ class DeFTAConfig:
                                      # trimmed_mean | median | krum
     robust_trim: float = 0.25        # trim/f fraction for the robust rules
     use_dts: bool = True
+    dts_signal: str = "loss"         # trust signal for the DTS confidence
+                                     # update (core/dts.py, the engine's
+                                     # trust_update stage):
+                                     # "loss" — the paper's loss-delta
+                                     #   (Algorithm 3 line 12, bit-exact
+                                     #   legacy behaviour);
+                                     # "geom" — update-geometry scores
+                                     #   (cosine to the trust-weighted
+                                     #   median direction, norm-ratio
+                                     #   outlier, sign-agreement), per-peer
+                                     #   resolution the loss delta lacks;
+                                     # "both" — loss_trust + λ·geom_trust
+                                     #   fused (λ = dts_geom_weight)
+    dts_geom_weight: float = 1.0     # λ scaling the geometric trust term
     time_machine: bool = True        # §3.3 damage check + backup rollback.
                                      # Off for the classical robust-agg
                                      # baselines: those algorithms have no

@@ -23,10 +23,40 @@ backup, run one compensation training step, and push loss_trust = +inf so
 every sampled peer of that round is maximally penalized (we clamp to a
 large finite value for numerics).
 
+**Geometric trust (DTS v2).** The loss-delta signal is a scalar per
+receiver: every sampled peer of a bad round is penalized alike, and under
+non-iid heterogeneity a label-flip attacker's contribution is
+indistinguishable from an honest peer's (the PR-3 finding: "a defense
+needs update geometry, not just loss deltas"; cf. the DFL security surveys
+and served-trust designs like DeTrust-FL). ``geom_scores`` supplies the
+missing per-(receiver, peer) resolution from deltas the round already
+materializes: each peer j's UPDATE delta u_j — the local step it applied
+on top of its adopted aggregate (``trained − start`` in the simulation
+engines; the round displacement on the pod path). NOT the raw model
+difference ``x_j − x_i``: under non-iid spread attackers cluster while
+honest workers scatter, so model differences make the poison look
+central (see ``geom_scores``). Each u_j is scored by
+
+* cosine distance to the trust-weighted coordinate-wise **median
+  direction** of i's peer set (robust reference — a colluding majority
+  shifts a mean, not a weighted median until it owns half the trust mass),
+* the |log| **norm ratio** against the weighted-median peer norm
+  (scaling / boosted-update outliers), and
+* the **sign-disagreement rate** vs that median direction (sign-flip and
+  label-flip updates push coordinates the wrong way even when their
+  magnitude hides in the crowd).
+
+Each signal is scale-invariant; their sum is centered over the peer set so
+conforming peers sit at ≲0 and outliers >0, and the fused confidence
+update becomes ``c_i ← c_i − m_i ∘ p_i · (loss_trust + λ·geom_trust)``
+(``DeFTAConfig.dts_signal = "loss" | "geom" | "both"``, λ =
+``dts_geom_weight``; "loss" is bit-identical to the paper's update).
+
 In the unified round-program engine (``core.engine``) these primitives are
 the ``peer_sample`` (sample_weights/sample_peers), ``damage_check``
-(is_damaged + backup select) and ``trust_update`` (confidence update)
-stages — shared verbatim by the sync, async and multi-pod selections.
+(is_damaged + backup select) and ``trust_update`` (confidence update,
+loss and/or geometric signal) stages — shared verbatim by the sync, async
+and multi-pod selections.
 """
 from __future__ import annotations
 
@@ -50,15 +80,30 @@ def sample_weights(conf, peer_mask, slope: float = 0.2):
     return jax.nn.softmax(z, axis=-1)
 
 
+def topk_mask(score, k: int):
+    """Boolean mask of the (≤ k) largest FINITE entries of ``score`` along
+    the last axis. Index-based rather than threshold-based: the old
+    ``score >= top_k(score)[0][..., -1]`` comparison admits MORE than k
+    entries on exact ties, and on degenerate rows (fewer than k finite
+    scores) the threshold collapses to −inf, where ``-inf >= -inf`` is
+    True and only a caller-side guard kept the mask sane. Scattering the
+    top-k indices guarantees ≤ k True entries unconditionally; −inf
+    padding slots are dropped via the finiteness gate."""
+    vals, idx = jax.lax.top_k(score, k)
+    hit = (jnp.arange(score.shape[-1]) == idx[..., None]) \
+        & jnp.isfinite(vals)[..., None]
+    return hit.any(axis=-2)
+
+
 def sample_peers(key, theta, num_sampled: int):
     """Gumbel top-k sample without replacement by weights θ. theta: [W];
     returns boolean mask [W] with ≤ num_sampled True entries (fewer only if
-    the peer set itself is smaller)."""
+    the peer set itself is smaller — isolated workers and all-dead
+    neighborhoods yield the empty mask, never a full row)."""
     g = jax.random.gumbel(key, theta.shape)
     score = jnp.where(theta > 0, jnp.log(theta + 1e-20) + g, -jnp.inf)
     k = min(num_sampled, theta.shape[-1])
-    thresh = jax.lax.top_k(score, k)[0][..., -1]
-    return (score >= thresh) & (theta > 0)
+    return topk_mask(score, k) & (theta > 0)
 
 
 def is_damaged(loss, best_loss):
@@ -96,3 +141,167 @@ def init_dts_state(num_workers: int):
         "best_loss": jnp.asarray(jnp.inf),
         "last_loss": jnp.asarray(0.0),
     }
+
+
+# ---------------------------------------------------------------------------
+# Geometric trust signals (DTS v2)
+# ---------------------------------------------------------------------------
+
+GEOM_NORM_CLIP = 4.0       # |log norm-ratio| saturation (e^4 ≈ 55x outlier)
+
+
+def flatten_stacked(stacked):
+    """Flatten a stacked [W, ...] pytree to one [W, D] fp32 matrix (the
+    per-worker model vectors the geometric signals score)."""
+    leaves = jax.tree.leaves(stacked)
+    return jnp.concatenate(
+        [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in leaves],
+        axis=1)
+
+
+def weighted_median(vals, wts):
+    """Per-receiver coordinate-wise weighted median of a SHARED stack.
+
+    vals: [P, D] — one stack of peer values, shared by every receiver;
+    wts: [R, P] per-receiver weights (>= 0, zero = excluded). Returns
+    [R, D]: per (receiver, coordinate) the smallest value whose
+    cumulative weight reaches half the receiver's total.
+
+    Because the stack is shared, the per-coordinate sort order does not
+    depend on the receiver — only the weights do — so the values are
+    sorted ONCE and each receiver contributes just a weight gather +
+    cumsum (this is what keeps the geometric trust_update inside the
+    superstep overhead gate). Zero-weight entries can never be the
+    crossing index (the cumsum does not move on them), so no value
+    masking is needed; an all-zero weight row returns 0.
+    """
+    order = jnp.argsort(vals, axis=0)                  # one shared sort
+    sv = jnp.take_along_axis(vals, order, axis=0)      # [P, D]
+    sw = jnp.take(wts, order, axis=1)                  # [R, P, D]
+    cw = jnp.cumsum(sw, axis=1)
+    total = wts.sum(axis=1)
+    pick = jnp.argmax(cw >= total[:, None, None] * 0.5, axis=1)  # [R, D]
+    med = jnp.take_along_axis(
+        jnp.broadcast_to(sv[None], (wts.shape[0],) + sv.shape),
+        pick[:, None, :], axis=1)[:, 0, :]
+    return jnp.where(total[:, None] > 0, med, 0.0)
+
+
+def geom_scores(deltas, mask, weights=None, *,
+                norm_clip: float = GEOM_NORM_CLIP, eps: float = 1e-12):
+    """Update-geometry suspicion scores per (receiver i, peer j).
+
+    deltas: [W, D] per-peer UPDATE deltas (``flatten_stacked`` of two
+    stacks the round already materializes — zero extra dispatches). The
+    simulation engines pass each worker's local-update delta
+    ``trained − start`` (the step it applied on top of its adopted
+    aggregate — what an update-shipping wire format exposes directly,
+    post attack injection so the poison is exactly what gets scored);
+    the pod round passes the round displacement ``out − params``. The
+    TRAINING component is where label-flip/sign-flip poisoning lives
+    (ascent instead of descent on the shared structure) — raw model
+    DIFFERENCES ``x_j − x_i`` hide it under non-iid spread (attackers
+    cluster, honest workers scatter; see the ROADMAP DTS v2 findings).
+
+    mask: [W, W] bool, i listens to j (the sampled ∧ live set; the
+    diagonal is ignored for scoring); weights: [W, W] trust weights for
+    the reference statistics (θ from ``sample_weights``; defaults to
+    uniform over the mask).
+
+    The reference direction r_i is the trust-weighted coordinate-wise
+    median over i's peer set ∪ SELF, with the receiver's own displacement
+    carrying half the total mass: the receiver's own data is clean by
+    definition, so the median is anchored on it (FLTrust-style trust
+    root) and a colluding majority cannot capture the reference — the
+    failure mode of purely peer-relative geometry at ≥50% malicious.
+    (At exactly half the mass the lower weighted median collapses to the
+    closed form ``min(self, max over positive-weight peers)`` per
+    coordinate — computed that way below, so the direction reference
+    depends on ``weights`` only through their support; the weights still
+    shape the norm median and the centering.)
+
+    Each peer is scored by three scale-invariant signals — cosine
+    distance to r_i, clipped |log| norm ratio vs the (self-anchored)
+    weighted-median displacement norm, and sign-disagreement rate vs r_i —
+    summed and centered over the receiver's peer set. Returns [W, W]:
+    ~0-sum per row under ``weights``; conforming peers ≲ 0, geometric
+    outliers > 0. Rows with no peers are all-zero. Permutation-
+    equivariant in the worker axis and invariant to a global positive
+    rescaling of ``deltas``.
+    """
+    w = deltas.shape[0]
+    eye = jnp.eye(w, dtype=bool)
+    mask = mask & ~eye
+    wts = jnp.where(mask, weights if weights is not None else 1.0, 0.0)
+    wts = jnp.maximum(wts, 0.0)
+    # self-anchor: the receiver's own displacement joins the reference
+    # statistics with weight == the whole peer mass (half the total)
+    wts_ref = wts + eye * wts.sum(1, keepdims=True)
+
+    # The (lower) weighted median with the self anchor at exactly half
+    # the mass has a closed form: the cumulative weight can only reach
+    # half BEFORE self if the ENTIRE peer mass lies below self's value,
+    # in which case the median is the largest peer value — otherwise it
+    # is self. Per coordinate: ref = min(self, max over positive-weight
+    # peers). Same result as weighted_median(deltas, wts_ref), without
+    # the [R, P, D] sort/gather/cumsum — what keeps this stage inside
+    # the superstep overhead gate.
+    peer_max = jnp.max(
+        jnp.where(wts[:, :, None] > 0, deltas[None, :, :], -jnp.inf),
+        axis=1)                                        # [R, D]
+    ref = jnp.minimum(deltas, peer_max)    # row r's self IS deltas[r]
+    ref = jnp.where(jnp.isfinite(ref), ref, 0.0)       # no-peer rows
+    dn = jnp.sqrt((deltas * deltas).sum(-1))           # [P]
+    rn = jnp.sqrt((ref * ref).sum(-1))                 # [R]
+
+    cos = (ref @ deltas.T) / (dn[None, :] * rn[:, None] + eps)
+    cos_score = 1.0 - cos                              # [0, 2]
+
+    med_n = weighted_median(dn[:, None], wts_ref)[:, 0]  # [R]
+    norm_score = jnp.abs(jnp.log((dn[None, :] + eps)
+                                 / (med_n[:, None] + eps)))
+    norm_score = jnp.clip(norm_score, 0.0, norm_clip) / norm_clip
+
+    # sign-agreement via a sign matmul: S_ref @ S.T counts same-sign
+    # minus differing-sign coordinates (exact zeros count as half-agree)
+    agree = 0.5 * (1.0 + (jnp.sign(ref) @ jnp.sign(deltas).T)
+                   / deltas.shape[1])
+    sign_score = 1.0 - agree                           # [0, 1]
+
+    score = cos_score + norm_score + sign_score
+    tot = wts.sum(1, keepdims=True)
+    mean_s = (wts * score).sum(1, keepdims=True) / jnp.maximum(tot, eps)
+    return jnp.where(mask, score - mean_s, 0.0)
+
+
+def fused_trust_signal(dts_signal: str, loss_trust, geom, damaged,
+                       lam: float):
+    """The trust_update stage's fused per-(receiver, peer) signal.
+
+    ``loss_trust``: [W] (already carries DAMAGE_PENALTY on damaged rows);
+    ``geom``: [W, W] from ``geom_scores`` (or None); ``damaged``: [W] bool.
+    Returns [W, W]. ``"loss"`` reproduces Algorithm 3 line 12 bit-exactly
+    (a pure broadcast, no geometry ops traced); ``"geom"`` keeps only the
+    damage penalty from the loss channel; ``"both"`` sums the channels.
+    """
+    if dts_signal == "loss":
+        return loss_trust[:, None]
+    if dts_signal == "geom":
+        damage_only = jnp.where(damaged, DAMAGE_PENALTY, 0.0)
+        return damage_only[:, None] + lam * geom
+    if dts_signal == "both":
+        return loss_trust[:, None] + lam * geom
+    raise ValueError(f"unknown dts_signal {dts_signal!r} "
+                     f"(one of: loss, geom, both)")
+
+
+def geom_confidence_update(dts_signal: str, lam: float, conf, sampled, P,
+                           loss_trust, damaged, deltas, mask, weights):
+    """The geometric trust_update branch, shared verbatim by the sync/
+    async round and the pod round (the two selections differ only in
+    which deltas and mask they pass): score the deltas, fuse with the
+    loss channel per ``dts_signal``, and apply Algorithm 3's masked
+    update ``c ← c − m ∘ p · signal``."""
+    gs = geom_scores(deltas, mask, weights=weights)
+    signal = fused_trust_signal(dts_signal, loss_trust, gs, damaged, lam)
+    return conf - sampled * P * signal

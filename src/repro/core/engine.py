@@ -24,8 +24,15 @@ Each execution mode is a *stage selection* over this pipeline:
   scenario/sample/transport/trust stages over the pod axis, with the
   ``ppermute`` transport shipping the encoded wire payload on the
   offset-skipping ring (local training happens outside, in
-  ``build_fl_train_step``; there is no time machine — pods have no
-  held-out self-evaluation between gossip rounds).
+  ``build_fl_train_step``). With ``cfg.time_machine`` + a ``self_eval``
+  callable the pod path gains the damage check too: a held-out
+  self-evaluation between gossip rounds guards what a pod adopts.
+
+The ``trust_update`` stage is itself a selection
+(``DeFTAConfig.dts_signal``): the paper's loss-delta signal (``"loss"``,
+bit-exact), the update-geometry signal of ``core.dts.geom_scores``
+(``"geom"``), or their fused sum (``"both"``) — one stage variant shared
+by every mode; see docs/ARCHITECTURE.md for the full stage contract.
 
 Transports are a pluggable stage (``make_transport``): ``in_jit`` wraps the
 einsum/pallas/sparse/quant backends of ``core.gossip.mix_pytree``;
@@ -224,6 +231,18 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
 # Round programs: stage pipelines over a round context
 # ---------------------------------------------------------------------------
 
+def resolve_dts_signal(cfg: DeFTAConfig) -> bool:
+    """Validate ``cfg.dts_signal`` at build time and return whether the
+    geometric trust channel is traced into the round body. ``"loss"``
+    (the default) compiles to the bit-exact legacy trust_update — no
+    geometry ops, no extra PRNG splits — which is what the golden-parity
+    tests pin."""
+    if cfg.dts_signal not in ("loss", "geom", "both"):
+        raise ValueError(f"unknown dts_signal {cfg.dts_signal!r} "
+                         f"(one of: loss, geom, both)")
+    return cfg.use_dts and cfg.dts_signal != "loss"
+
+
 def run_pipeline(stages, ctx: dict) -> dict:
     """Execute the ordered (name, fn) stage tuple over the context."""
     for _name, fn in stages:
@@ -269,6 +288,7 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     malicious_j = jnp.asarray(malicious)
     ltrain = local_train_fn(task, train, cfg.local_epochs,
                             dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
+    geom = resolve_dts_signal(cfg)
 
     from repro.scenarios import attacks as attacks_mod
     from repro.scenarios.compile import ATTACK_CODE, epoch_view
@@ -306,6 +326,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     # ---- stages -----------------------------------------------------------
 
     def stage_split_keys(c):
+        """reads state.key; writes key (next round), k_sample, k_train,
+        k_noise and — on the stochastic int8 wire only — k_wire. The split
+        layout is frozen: adding a split changes every downstream draw."""
         state = c["state"]
         if stochastic:
             c["key"], c["k_sample"], c["k_train"], c["k_noise"], \
@@ -316,6 +339,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["k_wire"] = None
 
     def stage_scenario_view(c):
+        """reads epoch; writes eff_adj (and alive/fire/att_on with a
+        scenario): the round's effective topology = (per-segment or static)
+        adjacency ∧ link_ok ∧ alive on both endpoints."""
         if scenario is not None:
             view = epoch_view(scenario, c["epoch"])
             c["alive"], c["fire"], c["att_on"] = \
@@ -327,18 +353,28 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["eff_adj"] = adj_j
 
     def stage_peer_sample(c):
+        """reads eff_adj, state.conf, k_sample; writes theta [W,W] (DTS
+        sampling weights, observed by theta-aware attacks and reused as
+        the geometric reference weights) and sampled [W,W] (Gumbel top-k,
+        ≤ num_sampled per row)."""
         if cfg.use_dts:
             theta = dts_mod.sample_weights(c["state"].conf, c["eff_adj"],
                                            cfg.crelu_slope)        # [W,W]
         else:
             theta = c["eff_adj"] / jnp.maximum(
                 c["eff_adj"].sum(1, keepdims=True), 1)
+        c["theta"] = theta
         skeys = jax.random.split(c["k_sample"], w)
         c["sampled"] = jax.vmap(
             lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
         )(skeys, theta)                                            # [W,W]
 
     def stage_transport(c):
+        """reads sampled, eff_adj, state.params, state.wire_err, k_wire;
+        writes P (mixing matrix), agg (the mixed models) and wire_err
+        (advanced EF21 residuals). This is the pluggable stage: in_jit
+        mix_pytree backends, the cross-pod ppermute ring, or a robust
+        rule (trimmed_mean/median/krum) replacing the weighted mix."""
         state = c["state"]
         mask = (c["sampled"] & c["eff_adj"]) | jnp.eye(w, dtype=bool)
         if robust:
@@ -372,6 +408,11 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["wire_err"] = state.wire_err
 
     def stage_damage_check(c):
+        """reads agg, state.{backup,best_loss}, data; writes y_data
+        (label-flip poisoned labels where active), loss_agg (each worker's
+        self-evaluation of the aggregate), damaged [W] and start (the
+        params local training departs from — the backup on damaged
+        rounds: the §3.3 time machine)."""
         state, data = c["state"], c["data"]
         y_data = data["y"]
         if scenario is not None and "label_flip" in scenario.kinds_present:
@@ -392,6 +433,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["start"] = c["agg"]
 
     def stage_local_train(c):
+        """reads start, y_data, data, k_train; writes trained (post-SGD
+        stacked params) and train_loss — ``local_epochs`` minibatch epochs
+        per worker, vmapped over the worker axis."""
         data = c["data"]
         tkeys = jax.random.split(c["k_train"], w)
         c["trained"], c["train_loss"] = jax.vmap(
@@ -399,10 +443,14 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         )(tkeys, c["start"], data["x"], c["y_data"], data["mask"])
 
     def stage_attack_inject(c):
+        """reads trained, agg, att_on, theta, k_noise; writes trained
+        (attacker slots replaced by their poisoned sends — what peers
+        consume NEXT round). theta feeds the adaptive theta_aware gate."""
         if scenario is not None:
             c["trained"] = attacks_mod.poison_sends(
                 c["k_noise"], scenario.kinds_present, scenario.attack_kind,
-                scenario.attack_scale, c["att_on"], c["agg"], c["trained"])
+                scenario.attack_scale, c["att_on"], c["agg"], c["trained"],
+                theta=c["theta"] if cfg.use_dts else None)
         else:
             # legacy path: the paper's aggregate+noise on ``malicious``
             poisoned = attacks_mod.noise(
@@ -411,10 +459,35 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["trained"] = tree_select(malicious_j, poisoned, c["trained"])
 
     def stage_trust_update(c):
+        """reads loss_agg, damaged, sampled, P, theta, state.{conf,
+        best_loss, last_loss} (+ trained, start, eff_adj, fire on the
+        geometric path); writes conf, backup, best_loss, last_loss. The
+        confidence update is ``c ← c − m ∘ p · signal`` where signal is
+        the loss delta (dts_signal="loss", Algorithm 3 line 12,
+        bit-exact), the centered update-geometry scores ("geom"), or
+        their λ-weighted sum ("both") — geometry scores each peer's
+        LOCAL-UPDATE delta ``trained − start`` (the step it applied on
+        top of its adopted aggregate; post attack injection, so the
+        poison is exactly what gets scored) at per-(receiver, peer)
+        resolution."""
         state = c["state"]
         loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
                                c["loss_agg"] - state.last_loss)
-        c["conf"] = state.conf - c["sampled"] * c["P"] * loss_trust[:, None]
+        if geom:
+            # non-firing peers (stragglers) are excluded: fire_merge
+            # discards their this-round delta, so peers never consume it
+            # — scoring it would drift trust on phantom updates
+            deltas = dts_mod.flatten_stacked(c["trained"]) \
+                - dts_mod.flatten_stacked(c["start"])
+            gmask = c["eff_adj"] & c["fire"][None, :] \
+                if scenario is not None else c["eff_adj"]
+            c["conf"] = dts_mod.geom_confidence_update(
+                cfg.dts_signal, cfg.dts_geom_weight, state.conf,
+                c["sampled"], c["P"], loss_trust, c["damaged"], deltas,
+                gmask, c["theta"])
+        else:
+            c["conf"] = state.conf - c["sampled"] * c["P"] \
+                * loss_trust[:, None]
 
         improved = (c["loss_agg"] < state.best_loss) & ~c["damaged"]
         # the time machine's compensation step RATCHETS: a damaged round
@@ -430,6 +503,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                                    c["loss_agg"])
 
     def stage_finalize(c):
+        """reads trained, backup, conf, best_loss, last_loss, key,
+        wire_err; writes next (the static-topology DeFTAState: every
+        worker advanced one epoch)."""
         state = c["state"]
         c["next"] = DeFTAState(
             params=c["trained"], backup=c["backup"], conf=c["conf"],
@@ -437,9 +513,10 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             key=c["key"], epoch=state.epoch + 1, wire_err=c["wire_err"])
 
     def stage_fire_merge(c):
-        # churn/straggler merge: non-firing workers freeze (dead workers
-        # are absent from eff_adj so nobody consumed them; stragglers
-        # expose their stale params and skip their own round)
+        """reads fire + everything finalize reads; writes next. The
+        churn/straggler merge: non-firing workers freeze (dead workers
+        are absent from eff_adj so nobody consumed them; stragglers
+        expose their stale params and skip their own round)."""
         state, fire = c["state"], c["fire"]
         params = tree_select(fire, c["trained"], state.params)
         backup = tree_select(fire, c["backup"], state.backup)
@@ -494,15 +571,19 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ltrain = local_train_fn(task, train, cfg.local_epochs)
 
     def stage_split_keys(c):
+        """reads state.key; writes key, k_sel, k_train, k_noise."""
         c["key"], c["k_sel"], c["k_train"], c["k_noise"] = \
             jax.random.split(c["state"].key, 4)
 
     def stage_star_broadcast(c):
+        """reads state.server; writes bcast — the star topology going
+        down: every worker starts from the server model."""
         c["bcast"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (w,) + x.shape),
             c["state"].server)
 
     def stage_local_train(c):
+        """reads bcast, data, k_train; writes trained."""
         data = c["data"]
         tkeys = jax.random.split(c["k_train"], w)
         c["trained"], _ = jax.vmap(
@@ -510,13 +591,16 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         )(tkeys, c["bcast"], data["x"], data["y"], data["mask"])
 
     def stage_attack_inject(c):
-        # malicious: send server + noise (repro.scenarios.attacks zoo —
-        # the undefended baseline keeps the paper's one attack model)
+        """reads trained, bcast, k_noise; writes trained — malicious
+        workers send server + noise (the paper's one attack model; the
+        undefended baseline)."""
         poisoned = noise_attack(c["k_noise"], c["bcast"], c["trained"],
                                 jnp.full((w,), noise_scale, jnp.float32))
         c["trained"] = tree_select(malicious_j, poisoned, c["trained"])
 
     def stage_star_aggregate(c):
+        """reads trained, k_sel; writes new_server — the size-weighted
+        mean over the (optionally sampled: CFL-S) worker cohort."""
         if sample_workers:
             sel = jax.random.choice(c["k_sel"], w, (sample_workers,),
                                     replace=False)
@@ -530,6 +614,8 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             c["trained"])
 
     def stage_server_update(c):
+        """reads new_server, state.{server,opt}; writes next — the server
+        optimizer (plain replacement, or FedAdam on the server delta)."""
         from repro.core.fedavg import FedAvgState
         state = c["state"]
         if server_opt == "fedadam":
@@ -754,16 +840,25 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
 class PodState:
     """Gossip-round state for the multi-pod path: DTS confidence, EF
     residuals and the round counter (local train state — params/opt —
-    lives outside, in the launcher's train loop)."""
+    lives outside, in the launcher's train loop). ``backup``/``best_loss``
+    are the pod time machine (held-out self-eval between gossip rounds,
+    the analog of the simulation engines' §3.3 damage check) — None when
+    the time machine is off."""
     conf: jnp.ndarray            # [npods, npods]
     last_loss: jnp.ndarray       # [npods]
     key: jnp.ndarray
     round: jnp.ndarray           # scalar int32 gossip-round counter
     wire_err: Any = None
+    backup: Any = None           # stacked [npods, ...] best-eval params
+    best_loss: Any = None        # [npods] best held-out self-eval loss
 
 
 def init_pod_state(key, npods: int, params=None, *,
-                   wire_error: bool = False) -> PodState:
+                   wire_error: bool = False,
+                   time_machine: bool = False) -> PodState:
+    if (wire_error or time_machine) and params is None:
+        raise ValueError("wire_error/time_machine pod state needs the "
+                         "stacked params to size its buffers")
     return PodState(
         conf=jnp.zeros((npods, npods)),
         last_loss=jnp.zeros((npods,)),
@@ -772,23 +867,35 @@ def init_pod_state(key, npods: int, params=None, *,
         wire_err=jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
         if wire_error else None,
+        backup=jax.tree.map(jnp.copy, params) if time_machine else None,
+        best_loss=jnp.full((npods,), jnp.inf) if time_machine else None,
     )
 
 
 def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                     transport: Transport, adj: np.ndarray,
-                    scenario=None, num_appended: int = 0):
+                    scenario=None, num_appended: int = 0, self_eval=None):
     """The multi-pod gossip round as the SAME stage pipeline over the pod
     axis: scenario_view -> peer_sample (DTS) -> transport (the full wire
-    stack, ppermute or in_jit) -> attack_inject -> trust_update. Local
-    training happens between gossip rounds in ``build_fl_train_step``;
-    there is no time machine (pods have no held-out self-eval between
-    rounds), so ``damage_check`` is the skipped stage of this selection.
+    stack, ppermute or in_jit) -> [damage_check] -> attack_inject ->
+    trust_update. Local training happens between gossip rounds in
+    ``build_fl_train_step``.
+
+    ``self_eval(stacked_params) -> [npods] losses`` is the pod TIME
+    MACHINE's held-out self-evaluation: with ``cfg.time_machine`` it is
+    run on the candidate aggregate between gossip rounds, damaged pods
+    (``dts.is_damaged`` vs their best eval loss) restore their backup
+    instead of adopting the mix, and the damage penalty feeds the trust
+    update — the simulation engines' §3.3 damage check mapped onto pods.
+    Without it (the default) ``damage_check`` stays the skipped stage of
+    this selection.
 
     Returns gossip_round(pstate, params, losses) -> (pstate, new_params):
     ``params`` is the stacked [npods, ...] pod pytree, ``losses`` [npods]
-    the pods' current train losses (the DTS trust signal). The scenario
-    epoch axis is the GOSSIP ROUND index (pstate.round).
+    the pods' current train losses (the loss-trust signal;
+    ``cfg.dts_signal`` adds/substitutes the geometric signal computed
+    from the pre-mix pod models). The scenario epoch axis is the GOSSIP
+    ROUND index (pstate.round).
 
     ``num_appended`` attackers from the scenario occupy the LAST pod slots
     (paper §4.3: attackers newly joined) — the caller sizes the mesh so
@@ -811,8 +918,16 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                          f"pods, mesh has {w}")
     regen = scenario is not None and scenario.adj_seg is not None
     use_ef = transport.use_ef
+    geom = resolve_dts_signal(cfg)
+    # the pod time machine needs BOTH the flag and a held-out evaluator;
+    # without self_eval the selection quietly stays TM-less (the
+    # pre-existing pod contract — sim configs default time_machine=True
+    # and are reused here)
+    time_machine = cfg.time_machine and self_eval is not None
 
     def stage_split_keys(c):
+        """reads pstate.key; writes key, k_sample, k_noise (+ k_wire on
+        the stochastic int8 wire)."""
         if transport.stochastic:
             c["key"], c["k_sample"], c["k_noise"], c["k_wire"] = \
                 jax.random.split(c["pstate"].key, 4)
@@ -822,6 +937,8 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
             c["k_wire"] = None
 
     def stage_scenario_view(c):
+        """reads pstate.round; writes eff_adj (+ alive/fire/att_on with a
+        scenario) — the gossip-round axis is the scenario's epoch axis."""
         if scenario is not None:
             view = epoch_view(scenario, c["pstate"].round)
             c["alive"], c["fire"], c["att_on"] = \
@@ -833,6 +950,9 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
             c["eff_adj"] = adj_j
 
     def stage_peer_sample(c):
+        """reads eff_adj, pstate.conf, k_sample; writes theta and sampled
+        (without DTS every live peer is listened to and theta is the
+        uniform row-normalized adjacency)."""
         if cfg.use_dts:
             theta = dts_mod.sample_weights(c["pstate"].conf, c["eff_adj"],
                                            cfg.crelu_slope)
@@ -841,9 +961,15 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                 lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
             )(skeys, theta)
         else:
+            theta = c["eff_adj"] / jnp.maximum(
+                c["eff_adj"].sum(1, keepdims=True), 1)
             c["sampled"] = c["eff_adj"]    # listen to every live peer
+        c["theta"] = theta
 
     def stage_transport(c):
+        """reads sampled, eff_adj, params, pstate.wire_err, k_wire; writes
+        P, agg, wire_err — the wire stack (fp32/bf16/int8 + EF21) over the
+        in_jit backends or the cross-pod ppermute ring, or a robust rule."""
         pstate = c["pstate"]
         mask = (c["sampled"] & c["eff_adj"]) | jnp.eye(w, dtype=bool)
         c["mask"] = mask
@@ -863,7 +989,20 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
             c["agg"] = transport.mix(P, c["params"], key=c["k_wire"])
             c["wire_err"] = pstate.wire_err
 
+    def stage_damage_check(c):
+        """reads agg, pstate.{backup,best_loss}; writes eval_loss (the
+        held-out self-eval of the candidate aggregate), damaged, and agg
+        (damaged pods restore their backup instead of adopting the mix —
+        the pod time machine)."""
+        pstate = c["pstate"]
+        c["eval_loss"] = self_eval(c["agg"])
+        c["damaged"] = dts_mod.is_damaged(c["eval_loss"], pstate.best_loss)
+        c["agg"] = tree_select(c["damaged"], pstate.backup, c["agg"])
+
     def stage_attack_inject(c):
+        """reads agg, params, att_on, theta, k_noise; writes out: actively
+        attacking slots ship their poisoned send, everyone else adopts the
+        aggregate."""
         if scenario is None:
             c["out"] = c["agg"]
             return
@@ -875,7 +1014,8 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         # actively attacking slots ship the poison, everyone else the mix
         poisoned = attacks_mod.poison_sends(
             c["k_noise"], scenario.kinds_present, scenario.attack_kind,
-            scenario.attack_scale, c["att_on"], c["agg"], c["params"])
+            scenario.attack_scale, c["att_on"], c["agg"], c["params"],
+            theta=c["theta"] if cfg.use_dts else None)
         att = jnp.zeros_like(c["att_on"])
         for kind in scenario.kinds_present:
             if kind in attacks_mod.MODEL_ATTACKS:
@@ -883,13 +1023,49 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         c["out"] = tree_select(att & c["att_on"], poisoned, c["agg"])
 
     def stage_trust_update(c):
+        """reads losses, sampled, P, theta, out, params, pstate.{conf,
+        last_loss}; writes conf — the same fused loss/geometry signal as
+        the simulation engines, with each pod's round displacement (this
+        round's send ``out`` minus last round's ``params``) as the
+        geometry's observable."""
         pstate = c["pstate"]
-        loss_trust = c["losses"] - pstate.last_loss
-        c["conf"] = pstate.conf - c["sampled"] * c["P"] \
-            * loss_trust[:, None]
+        damaged = c.get("damaged")
+        if damaged is None:
+            damaged = jnp.zeros((w,), bool)
+        loss_trust = jnp.where(damaged, dts_mod.DAMAGE_PENALTY,
+                               c["losses"] - pstate.last_loss)
+        if geom:
+            # same contract as the sim engines (geom_confidence_update):
+            # score the FULL live neighborhood (centering over only the
+            # ~2 sampled peers degenerates to a pairwise coin flip);
+            # non-firing pods' phantom deltas are excluded like
+            # stragglers
+            deltas = dts_mod.flatten_stacked(c["out"]) \
+                - dts_mod.flatten_stacked(c["params"])
+            gmask = c["eff_adj"] & c["fire"][None, :] \
+                if scenario is not None else c["eff_adj"]
+            c["conf"] = dts_mod.geom_confidence_update(
+                cfg.dts_signal, cfg.dts_geom_weight, pstate.conf,
+                c["sampled"], c["P"], loss_trust, damaged, deltas,
+                gmask, c["theta"])
+        else:
+            c["conf"] = pstate.conf - c["sampled"] * c["P"] \
+                * loss_trust[:, None]
 
     def stage_finalize(c):
+        """reads out, conf, losses, wire_err (+ fire/damaged/eval_loss);
+        writes next (PodState) and new_params. With a scenario, non-firing
+        pods freeze; with the time machine, improving rounds refresh the
+        backup (the ratchet: a damaged pod adopted its backup, trains on,
+        and re-backs-up once its held-out eval improves)."""
         pstate = c["pstate"]
+        if time_machine:
+            improved = (c["eval_loss"] < pstate.best_loss) & ~c["damaged"]
+            backup = tree_select(improved, c["out"], pstate.backup)
+            best_loss = jnp.where(improved, c["eval_loss"],
+                                  pstate.best_loss)
+        else:
+            backup, best_loss = pstate.backup, pstate.best_loss
         if scenario is not None:
             fire = c["fire"]
             out = tree_select(fire, c["out"], c["params"])
@@ -897,11 +1073,15 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                 if use_ef else pstate.wire_err
             conf = jnp.where(fire[:, None], c["conf"], pstate.conf)
             last_loss = jnp.where(fire, c["losses"], pstate.last_loss)
+            if time_machine:
+                backup = tree_select(fire, backup, pstate.backup)
+                best_loss = jnp.where(fire, best_loss, pstate.best_loss)
         else:
             out, wire_err = c["out"], c["wire_err"]
             conf, last_loss = c["conf"], c["losses"]
         c["next"] = PodState(conf=conf, last_loss=last_loss, key=c["key"],
-                             round=pstate.round + 1, wire_err=wire_err)
+                             round=pstate.round + 1, wire_err=wire_err,
+                             backup=backup, best_loss=best_loss)
         c["new_params"] = out
 
     stages = (
@@ -909,6 +1089,8 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         ("scenario_view", stage_scenario_view),
         ("peer_sample", stage_peer_sample),
         ("transport", stage_transport),
+    ) + ((("damage_check", stage_damage_check),) if time_machine
+         else ()) + (
         ("attack_inject", stage_attack_inject),
         ("trust_update", stage_trust_update),
         ("finalize", stage_finalize),

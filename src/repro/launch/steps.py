@@ -134,7 +134,8 @@ def build_gossip_step(cfg: ModelConfig, *, wire=None, backend: str = "einsum",
 def build_pod_gossip_step(cfg: ModelConfig, defta_cfg, npods: int, sizes, *,
                           adjacency, transport: str = "in_jit",
                           backend: str = "einsum", mesh=None,
-                          axis: str = "pod", scenario=None):
+                          axis: str = "pod", scenario=None,
+                          self_eval=None):
     """The multi-pod DeFTA gossip round as the unified engine's stage
     pipeline (``repro.core.engine.build_pod_round``): scenario_view →
     peer_sample (DTS) → transport → attack_inject → trust_update over the
@@ -146,7 +147,10 @@ def build_pod_gossip_step(cfg: ModelConfig, defta_cfg, npods: int, sizes, *,
     offset-skipping + nnz-row-selected ``collective_permute`` ring
     (requires ``mesh`` with the pod axis); ``"in_jit"`` uses the
     einsum/pallas/sparse/quant ``mix_pytree`` backends. The scenario's
-    epoch axis is the GOSSIP ROUND index.
+    epoch axis is the GOSSIP ROUND index. ``self_eval(stacked_params) ->
+    [npods] losses`` enables the pod time machine (held-out self-eval
+    damage check) when ``defta_cfg.time_machine`` is set; the trust
+    signal follows ``defta_cfg.dts_signal`` (loss / geom / both).
 
     Returns ``(gossip_round, pod_transport)`` where
     ``gossip_round(pstate, stacked_params, losses) ->
@@ -171,7 +175,7 @@ def build_pod_gossip_step(cfg: ModelConfig, defta_cfg, npods: int, sizes, *,
         robust=defta_cfg.aggregation in ROBUST_RULES)
     rnd = build_pod_round(defta_cfg, npods, sizes, transport=tr,
                           adj=np.asarray(adjacency, bool),
-                          scenario=scenario)
+                          scenario=scenario, self_eval=self_eval)
     return rnd, tr
 
 

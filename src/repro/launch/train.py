@@ -48,11 +48,19 @@ def run_scenario_sim(args) -> int:
     # table3_robustness.DEFENSES; crediting a classical baseline with
     # DeFTA's own rollback would inflate it (robust_agg.py docstring)
     robust = args.aggregation in ("trimmed_mean", "median", "krum")
+    if args.dts_signal != "loss" and args.aggregation != "defta":
+        # resolve_dts_signal gates the geometric channel on use_dts: a
+        # non-defta aggregation never runs DTS, so the flag would be
+        # silently inert — refuse rather than fake a defended run
+        raise SystemExit(f"--dts-signal {args.dts_signal} needs DTS "
+                         f"(--aggregation defta); aggregation="
+                         f"{args.aggregation} never runs a trust update")
     cfg = DeFTAConfig(num_workers=args.sim_workers, avg_peers=4,
                       num_sampled=2, local_epochs=args.sim_local_epochs,
                       aggregation=args.aggregation,
                       use_dts=args.aggregation == "defta",
-                      time_machine=not robust)
+                      time_machine=not robust,
+                      dts_signal=args.dts_signal)
     if args.aggregation != "defta":
         print(f"aggregation={args.aggregation}: use_dts={cfg.use_dts} "
               f"time_machine={cfg.time_machine} (baseline purity)")
@@ -123,6 +131,19 @@ def main():
     ap.add_argument("--pod-dts", action="store_true",
                     help="--fl: DTS peer sampling + trust reweighting "
                          "across pods (default: listen to all live peers)")
+    ap.add_argument("--dts-signal", default="loss",
+                    choices=["loss", "geom", "both"],
+                    help="DTS trust signal (core/dts.py): the paper's "
+                         "loss delta, the update-geometry scores "
+                         "(cosine-to-median / norm-ratio / "
+                         "sign-agreement), or both fused — applies to "
+                         "--scenario sim runs and to --fl --pod-dts")
+    ap.add_argument("--pod-time-machine", action="store_true",
+                    help="--fl: pod time machine — held-out self-eval "
+                         "between gossip rounds; a pod whose candidate "
+                         "aggregate explodes on the held-out batch "
+                         "restores its best-eval backup instead of "
+                         "adopting the mix")
     ap.add_argument("--debug-mesh", action="store_true",
                     help="2x2(x pods) host-device mesh for CPU")
     ap.add_argument("--checkpoint-dir", default="")
@@ -209,12 +230,20 @@ def main():
             sizes = np.full(pods, args.batch)
 
             robust = args.aggregation in ROBUST_RULES
+            if args.dts_signal != "loss" and not (args.pod_dts
+                                                  and not robust):
+                raise SystemExit(f"--dts-signal {args.dts_signal} needs "
+                                 f"--pod-dts (and a non-robust "
+                                 f"--aggregation): without DTS no trust "
+                                 f"update runs, the flag would be "
+                                 f"silently inert")
             dcfg = DeFTAConfig(
                 num_workers=pods, avg_peers=pods - 1,
                 num_sampled=min(2, pods - 1), topology="dense",
                 aggregation=args.aggregation,
                 use_dts=args.pod_dts and not robust,
-                time_machine=False,
+                dts_signal=args.dts_signal,
+                time_machine=args.pod_time_machine and not robust,
                 gossip_dtype="float32" if robust else args.gossip_wire,
                 gossip_error_feedback=not args.no_gossip_ef,
                 gossip_wire_round=args.gossip_wire_round)
@@ -238,16 +267,34 @@ def main():
                 print(f"--fl scenario {scenario.spec.name}: "
                       f"{scenario.summary(adj)}")
 
+            self_eval = None
+            if dcfg.time_machine:
+                # the held-out self-eval batch: an index the training
+                # loop never reaches (it consumes 0..steps-1), sliced to
+                # a per-pod-sized share — every pod evaluates the SAME
+                # slice (comparability) at 1/pods the full-batch cost
+                hb = batcher.batch_at(args.steps + 1)
+                hbatch = {k: jnp.asarray(v)[:args.batch // pods]
+                          for k, v in hb.items()}
+
+                def self_eval(stacked):
+                    return jax.vmap(
+                        lambda p: model_mod.loss_fn(p, cfg, hbatch)[0]
+                    )(stacked)
+
             gossip_rnd, pod_tr = build_pod_gossip_step(
                 cfg, dcfg, pods, sizes, adjacency=adj,
-                transport=args.transport, mesh=mesh, scenario=scenario)
+                transport=args.transport, mesh=mesh, scenario=scenario,
+                self_eval=self_eval)
             gossip = jax.jit(gossip_rnd, donate_argnums=(0, 1))
             pstate = init_pod_state(
                 jax.random.PRNGKey(101), pods, params,
-                wire_error=uses_error_feedback(dcfg) and not robust)
+                wire_error=uses_error_feedback(dcfg) and not robust,
+                time_machine=dcfg.time_machine)
             print(f"--fl pod pipeline: transport={pod_tr.kind} "
                   f"wire={pod_tr.wire or 'fp32'} ef={pod_tr.use_ef} "
-                  f"aggregation={args.aggregation} dts={dcfg.use_dts}")
+                  f"aggregation={args.aggregation} dts={dcfg.use_dts} "
+                  f"signal={dcfg.dts_signal} tm={dcfg.time_machine}")
 
             losses = jnp.zeros((pods,))
             for i in range(args.steps):

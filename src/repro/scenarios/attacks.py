@@ -27,6 +27,29 @@ Data attacks (transform what is trained on):
 * ``label_flip`` — the worker trains honestly on labels ``y → C−1−y``
                    (see ``flip_labels``); its protocol behaviour is clean,
                    only its updates push toward wrong classes.
+
+Adaptive attacks (observe the defense state, then dodge it — the
+stress-tests for the geometric DTS v2 trust signal):
+
+* ``dts_dodge``   — the inverted update with its magnitude RESCALED to
+                    stay just under the victim's observed detection
+                    margin: the population's median update norm (what a
+                    norm-ratio detector calibrates on) × ``DODGE_MARGIN``.
+                    Evades norm filters by construction; cosine and
+                    sign-agreement still see the flipped direction.
+* ``theta_aware`` — attacks (sign_flip) only while its mean observed DTS
+                    sampling weight θ across listeners is ≥
+                    ``THETA_FLOOR`` × the uniform weight; otherwise sends
+                    the honest trained model so loss-trust recovers. The
+                    oscillation defeats a scalar loss-delta signal (each
+                    quiet phase re-earns the confidence the attack
+                    spent); per-peer geometry catches the active phases.
+
+Both compile through the same device-side scenario arrays as the rest of
+the zoo (a new ATTACK_CODE each) — zero extra dispatches. ``theta_aware``
+additionally reads the round's θ matrix, which the engines pass via
+``poison_sends(theta=...)``; with no DTS running (θ=None) it degrades to
+an always-on sign_flip.
 """
 from __future__ import annotations
 
@@ -87,27 +110,80 @@ def alie(key, agg, trained, scale):
     return jax.tree.map(one, trained)
 
 
+DODGE_MARGIN = 0.9       # dts_dodge ships at 90% of the observed margin
+THETA_FLOOR = 0.5        # theta_aware attacks while θ ≥ floor × uniform
+
+
+def _update_norms(agg, trained):
+    """Per-worker L2 norm of the full-tree local update trained − agg."""
+    sq = None
+    for a, t in zip(jax.tree.leaves(agg), jax.tree.leaves(trained)):
+        d = (t.astype(jnp.float32) - a.astype(jnp.float32))
+        s = (d * d).reshape(d.shape[0], -1).sum(axis=1)
+        sq = s if sq is None else sq + s
+    return jnp.sqrt(sq)
+
+
+def dts_dodge(key, agg, trained, scale):
+    """Norm-capped inverted update: sign_flip whose magnitude is rescaled
+    to ``min(‖delta‖, scale·DODGE_MARGIN·median ‖delta‖)`` — just under
+    the detection margin a norm-ratio defense calibrates on the honest
+    population. The attacker observes the worker stack (same
+    simulation-level omniscience as ``alie``)."""
+    del key
+    n = _update_norms(agg, trained)                       # [W]
+    cap = scale * DODGE_MARGIN * jnp.median(n)
+    factor = jnp.where(n > 0, jnp.minimum(1.0, cap / (n + 1e-12)), 0.0)
+    return jax.tree.map(
+        lambda a, t: a - _per_worker(factor, a) * (t.astype(a.dtype) - a),
+        agg, trained)
+
+
+def theta_aware(key, agg, trained, scale, theta=None):
+    """Attack only while trusted: sign_flip gated on the attacker's mean
+    observed sampling weight θ relative to the uniform weight of each
+    listener's peer set. Below ``THETA_FLOOR`` × uniform it ships the
+    honest trained model, letting loss-trust recover before the next
+    active phase. ``theta=None`` (no DTS running) → plain sign_flip."""
+    poison = sign_flip(key, agg, trained, scale)
+    if theta is None:
+        return poison
+    deg = (theta > 0).sum(axis=1, keepdims=True)          # [W, 1] peers/rcv
+    rel = jnp.where(theta > 0, theta * deg, 0.0)          # θ / uniform
+    listeners = (theta > 0).sum(axis=0)                   # [W] per sender
+    rel_mean = rel.sum(axis=0) / jnp.maximum(listeners, 1)
+    active = rel_mean >= THETA_FLOOR                      # [W] bool
+    return tree_select(active, poison, trained)
+
+
 # model attacks only — label_flip acts on the data, not the payload
 MODEL_ATTACKS = {"noise": noise, "sign_flip": sign_flip, "scaling": scaling,
-                 "alie": alie}
+                 "alie": alie, "dts_dodge": dts_dodge,
+                 "theta_aware": theta_aware}
+
+# attacks that additionally observe the round's θ matrix
+THETA_ATTACKS = {"theta_aware"}
 
 
 def poison_sends(key, kinds_present, attack_kind, attack_scale, attack_on,
-                 agg, trained):
+                 agg, trained, theta=None):
     """Replace attackers' outgoing models. Only the attack kinds that are
     statically present compile into the round body; per-worker selection is
     ``attack_kind == code ∧ attack_on`` (the intermittent schedule).
 
     key: PRNG key for stochastic attacks; agg: this round's aggregate
-    (stacked); trained: post-local-training params (stacked). Returns the
-    stacked pytree that actually goes on the wire."""
+    (stacked); trained: post-local-training params (stacked); theta: the
+    round's [W, W] DTS sampling weights, observed by ``THETA_ATTACKS``
+    (None when DTS is off). Returns the stacked pytree that actually goes
+    on the wire."""
     sends = trained
     for kind in kinds_present:
         if kind not in MODEL_ATTACKS:
             continue                      # data attacks handled upstream
         code = ATTACK_CODE[kind]
+        kw = {"theta": theta} if kind in THETA_ATTACKS else {}
         poisoned = MODEL_ATTACKS[kind](jax.random.fold_in(key, code),
-                                       agg, trained, attack_scale)
+                                       agg, trained, attack_scale, **kw)
         sends = tree_select((attack_kind == code) & attack_on,
                             poisoned, sends)
     return sends

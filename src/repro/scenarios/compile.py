@@ -39,7 +39,12 @@ ATTACK_CODE = {k: i + 1 for i, k in enumerate(ATTACK_KINDS)}
 # default matches the engines' historical noise_scale=200; sign_flip 1.0
 # is the textbook inverted-update attack)
 DEFAULT_SCALE = {"noise": 200.0, "sign_flip": 1.0, "scaling": 10.0,
-                 "alie": 1.5, "label_flip": 1.0}
+                 "alie": 1.5, "label_flip": 1.0,
+                 # adaptive attacks: dts_dodge's scale multiplies the
+                 # norm cap (1.0 = exactly the observed median update
+                 # norm × DODGE_MARGIN); theta_aware's scale is the
+                 # underlying sign_flip magnitude while active
+                 "dts_dodge": 1.0, "theta_aware": 1.0}
 
 
 def _check_worker(idx: int, w: int, what: str) -> int:

@@ -44,6 +44,17 @@ Attack zoo (see ``scenarios.attacks`` for the transforms):
                    the identical mean − scale·std of the worker stack
 * ``label_flip`` — data poisoning: trains honestly on labels y → C−1−y
 
+Adaptive attacks (observe the defense, then dodge it):
+
+* ``dts_dodge``   — norm-capped inverted update: ships the sign-flipped
+                    update RESCALED to stay just under the population's
+                    median update norm — the detection margin a norm-ratio
+                    detector calibrates on (geometry still sees direction)
+* ``theta_aware`` — attacks only while its observed DTS sampling weight θ
+                    is above a floor; lies low (honest sends) once victims
+                    stop trusting it, so loss-trust never builds a stable
+                    negative trend
+
 Stragglers advance only a ``speed`` fraction of epochs (a deterministic
 schedule drawn from ``seed`` at compile time — device-side it is just a
 [E, W] fire mask). Dead/not-yet-joined workers are removed from the
@@ -63,7 +74,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Tuple
 
-ATTACK_KINDS = ("noise", "sign_flip", "scaling", "alie", "label_flip")
+# Order is load-bearing: ATTACK_CODE (scenarios.compile) assigns integer
+# codes by position, and compiled scenarios store those codes in device
+# arrays — only ever APPEND new kinds.
+ATTACK_KINDS = ("noise", "sign_flip", "scaling", "alie", "label_flip",
+                "dts_dodge", "theta_aware")
 
 
 @dataclass(frozen=True)

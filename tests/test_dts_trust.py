@@ -1,0 +1,424 @@
+"""DTS v2 tests: geometric trust signals, adaptive attackers, the pod
+time machine, and the sample_peers degenerate-row bugfix.
+
+* Golden parity: ``dts_signal="loss"`` (explicitly set) reproduces the
+  pre-PR DTS bit-identically on tests/golden_engine.json — the geometric
+  channel is a build-time gate, not a numeric change.
+* Invariance: the geometric scores are scale-invariant (cosine/ratio/sign
+  signals), permutation-equivariant over workers, and row-centered.
+* sample_peers: the old ``score >= top_k(...)[-1]`` threshold admitted
+  >k entries on exact ties and leaned on a guard at -inf; the index-based
+  ``topk_mask`` guarantees ≤ k unconditionally (regression-tested on
+  ties, isolated workers and peer sets smaller than num_sampled).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from capture_engine_goldens import defta_state_digest, setup
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core import dts
+from repro.core.defta import evaluate, run_defta
+from repro.scenarios import AttackSpec, ScenarioSpec, compile_scenario
+from repro.scenarios.attacks import (DODGE_MARGIN, THETA_FLOOR,
+                                     _update_norms, dts_dodge, sign_flip,
+                                     theta_aware)
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
+                                     "golden_engine.json")))
+
+
+@pytest.fixture(scope="module")
+def env():
+    return setup()
+
+
+# ---------------------------------------------------------------------------
+# sample_peers / topk_mask (the degenerate-row bugfix)
+# ---------------------------------------------------------------------------
+
+def test_topk_mask_exact_ties_stay_at_k():
+    # the old threshold compare returned BOTH tied entries for k=1
+    m = dts.topk_mask(jnp.asarray([1.0, 1.0, 0.5]), 1)
+    assert int(m.sum()) == 1
+    m = dts.topk_mask(jnp.asarray([2.0, 2.0, 2.0, 1.0]), 2)
+    assert int(m.sum()) == 2
+
+
+def test_topk_mask_drops_neg_inf_padding():
+    # fewer finite entries than k: -inf >= -inf is True, so the old
+    # threshold marked every slot; the finiteness gate keeps only real ones
+    m = dts.topk_mask(jnp.asarray([-jnp.inf, 3.0, -jnp.inf]), 3)
+    assert m.tolist() == [False, True, False]
+    m = dts.topk_mask(jnp.full((4,), -jnp.inf), 2)
+    assert int(m.sum()) == 0
+
+
+def test_sample_peers_peer_set_smaller_than_k():
+    theta = jnp.asarray([0.0, 0.7, 0.3, 0.0])
+    mask = dts.sample_peers(jax.random.PRNGKey(0), theta, 3)
+    assert mask.tolist() == [False, True, True, False]
+
+
+def test_sample_peers_isolated_worker_empty_mask():
+    # an all-dead neighborhood yields NaN sampling weights (softmax over
+    # an empty support); the mask must come back empty, not full
+    for bad in (jnp.full((4,), jnp.nan), jnp.zeros((4,))):
+        mask = dts.sample_peers(jax.random.PRNGKey(1), bad, 2)
+        assert int(mask.sum()) == 0
+
+
+def test_sample_peers_at_most_k_and_subset_of_support():
+    key = jax.random.PRNGKey(2)
+    for i in range(20):
+        k1, k2, key = jax.random.split(key, 3)
+        theta = jax.random.dirichlet(k1, jnp.ones(8))
+        theta = theta * (jax.random.uniform(k2, (8,)) > 0.4)
+        mask = dts.sample_peers(key, theta, 3)
+        assert int(mask.sum()) <= 3
+        assert bool((~mask | (theta > 0)).all())
+
+
+# ---------------------------------------------------------------------------
+# Geometric score invariances
+# ---------------------------------------------------------------------------
+
+def _toy(w=6, d=40, seed=1):
+    deltas = jax.random.normal(jax.random.PRNGKey(seed), (w, d))
+    mask = jnp.ones((w, w), bool)
+    return deltas, mask
+
+
+def test_geom_scale_invariance():
+    deltas, mask = _toy()
+    s1 = dts.geom_scores(deltas, mask)
+    s2 = dts.geom_scores(deltas * 37.5, mask)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+def test_geom_permutation_equivariance():
+    deltas, mask = _toy()
+    perm = jnp.asarray([2, 0, 1, 5, 4, 3])
+    s1 = dts.geom_scores(deltas, mask)
+    s2 = dts.geom_scores(deltas[perm], mask[perm][:, perm])
+    np.testing.assert_allclose(np.asarray(s1[perm][:, perm]),
+                               np.asarray(s2), atol=1e-5)
+
+
+def test_geom_rows_centered_and_masked():
+    deltas, mask = _toy()
+    mask = mask.at[0].set(False)          # receiver 0 hears nobody
+    wts = jax.random.uniform(jax.random.PRNGKey(3), mask.shape)
+    s = dts.geom_scores(deltas, mask, weights=wts)
+    # no-peer rows are all zero; scored rows are weight-centered
+    assert float(jnp.abs(s[0]).max()) == 0.0
+    wts_eff = jnp.where(mask & ~jnp.eye(6, dtype=bool), wts, 0.0)
+    np.testing.assert_allclose(np.asarray((wts_eff * s).sum(1)[1:]),
+                               0.0, atol=1e-5)
+    # and the diagonal (self) is never scored
+    assert float(jnp.abs(jnp.diagonal(s)).max()) == 0.0
+
+
+def test_geom_flags_inverted_and_outsized_peers():
+    # 5 aligned honest updates + one sign-flipped + one 50x-boosted:
+    # the flipped and boosted peers must carry the top suspicion scores
+    key = jax.random.PRNGKey(4)
+    base = jax.random.normal(key, (1, 32))
+    honest = base + 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                            (5, 32))
+    flipped = -base
+    boosted = 50.0 * (base + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (1, 32)))
+    deltas = jnp.concatenate([honest, flipped, boosted])
+    s = dts.geom_scores(deltas, jnp.ones((7, 7), bool))
+    honest_scores = np.asarray(s[:5, :5])[~np.eye(5, dtype=bool)]
+    flip_scores = np.asarray(s[:5, 5])
+    boost_scores = np.asarray(s[:5, 6])
+    assert flip_scores.min() > honest_scores.max()
+    assert boost_scores.min() > honest_scores.max()
+
+
+def test_weighted_median_zero_weights_excluded():
+    vals = jnp.asarray([[1.0], [100.0], [2.0], [3.0]])   # shared [P, D]
+    wts = jnp.asarray([[1.0, 0.0, 1.0, 1.0],
+                       [0.0, 1.0, 0.0, 0.0]])
+    med = dts.weighted_median(vals, wts)
+    assert float(med[0, 0]) == 2.0        # 100 excluded by zero weight
+    assert float(med[1, 0]) == 100.0      # per-receiver weights
+    # all-zero weights: defined (0), not inf/nan
+    assert float(dts.weighted_median(vals, jnp.zeros((1, 4)))[0, 0]) == 0.0
+
+
+def test_fused_trust_signal_validates():
+    with pytest.raises(ValueError, match="dts_signal"):
+        dts.fused_trust_signal("cosine", jnp.zeros(2), jnp.zeros((2, 2)),
+                               jnp.zeros(2, bool), 1.0)
+    from repro.core.engine import resolve_dts_signal
+    with pytest.raises(ValueError, match="dts_signal"):
+        resolve_dts_signal(dataclasses.replace(DeFTAConfig(),
+                                               dts_signal="geometry"))
+    assert not resolve_dts_signal(DeFTAConfig())          # default: loss
+    assert resolve_dts_signal(dataclasses.replace(DeFTAConfig(),
+                                                  dts_signal="both"))
+
+
+# ---------------------------------------------------------------------------
+# Golden parity + engine integration
+# ---------------------------------------------------------------------------
+
+def test_dts_signal_loss_is_bit_identical_to_golden(env):
+    data, task, cfg, train = env
+    cfg = dataclasses.replace(cfg, dts_signal="loss")    # explicit
+    stats = {}
+    st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                            epochs=6, stats=stats)
+    assert defta_state_digest(st, stats) == GOLDEN["defta_static"]
+
+
+def test_geom_signal_keeps_dispatch_parity_and_diverges(env):
+    data, task, cfg, train = env
+    stats_l, stats_g = {}, {}
+    st_l, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train,
+                              data, epochs=4, stats=stats_l)
+    cfg_g = dataclasses.replace(cfg, dts_signal="geom")
+    st_g, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg_g, train,
+                              data, epochs=4, stats=stats_g)
+    # geometry is data flow inside the scan: same dispatch count ...
+    assert stats_g["dispatches"] == stats_l["dispatches"]
+    # ... but a different trust state (the signal actually does something)
+    assert float(jnp.abs(st_g.conf - st_l.conf).max()) > 0
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(st_g.params))
+
+
+def test_geom_separates_label_flippers_better_than_loss():
+    """The headline regression at test scale: under label_flip × non-iid
+    the geometric signal must place LESS sampling weight on attackers
+    than the loss signal (fixed seed — deterministic)."""
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w, k = 12, 5
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=100, alpha=0.5)
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(name="lf", attacks=tuple(
+        AttackSpec("label_flip") for _ in range(k)))
+
+    shares = {}
+    for sig in ("loss", "geom"):
+        cfg = DeFTAConfig(num_workers=w, avg_peers=4, num_sampled=2,
+                          local_epochs=3, dts_signal=sig)
+        st, adj, mal, _ = run_defta(jax.random.PRNGKey(0), task, cfg,
+                                    train, data, epochs=24, scenario=spec)
+        theta = dts.sample_weights(st.conf, jnp.asarray(adj))
+        shares[sig] = float(np.asarray(theta)[~mal][:, mal].sum(1).mean())
+    assert shares["geom"] < shares["loss"], shares
+
+
+# ---------------------------------------------------------------------------
+# Adaptive attackers
+# ---------------------------------------------------------------------------
+
+def _stack(key, w=6, d=24):
+    agg = {"x": jax.random.normal(key, (w, d))}
+    trained = {"x": agg["x"] + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), (w, d))}
+    return agg, trained
+
+
+def test_dts_dodge_respects_norm_margin():
+    key = jax.random.PRNGKey(5)
+    agg, trained = _stack(key)
+    # give worker 0 a huge honest update — its dodge payload must be
+    # capped at DODGE_MARGIN x the population median norm
+    trained["x"] = trained["x"].at[0].add(100.0)
+    out = dts_dodge(key, agg, trained, jnp.ones(6))
+    norms = _update_norms(agg, out)
+    med = float(jnp.median(_update_norms(agg, trained)))
+    assert float(norms[0]) <= DODGE_MARGIN * med * 1.001
+    # direction stays inverted (it IS a sign flip)
+    d_in = trained["x"][1] - agg["x"][1]
+    d_out = out["x"][1] - agg["x"][1]
+    assert float(jnp.vdot(d_in, d_out)) < 0
+
+
+def test_theta_aware_attacks_only_while_trusted():
+    key = jax.random.PRNGKey(6)
+    agg, trained = _stack(key, w=3)
+    flipped = sign_flip(key, agg, trained, jnp.ones(3))
+    # worker 2's observed theta: uniform share for receiver 0 (trusted),
+    # near-zero for receiver 1 -> mean relative trust 0.5 == THETA_FLOOR
+    theta = jnp.asarray([[0.0, 0.5, 0.5],
+                         [0.5, 0.0, 0.5],
+                         [0.5, 0.5, 0.0]])
+    out = theta_aware(key, agg, trained, jnp.ones(3), theta=theta)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(flipped["x"]))
+    # crush worker 2's trust below the floor: it ships honest sends
+    theta_low = theta.at[:, 2].set(THETA_FLOOR / 3 * 0.9)
+    out = theta_aware(key, agg, trained, jnp.ones(3), theta=theta_low)
+    np.testing.assert_array_equal(np.asarray(out["x"][2]),
+                                  np.asarray(trained["x"][2]))
+    np.testing.assert_array_equal(np.asarray(out["x"][0]),
+                                  np.asarray(flipped["x"][0]))
+    # no DTS to observe -> always attack
+    out = theta_aware(key, agg, trained, jnp.ones(3), theta=None)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(flipped["x"]))
+
+
+def test_adaptive_attacks_compile_with_zero_extra_dispatches(env):
+    data, task, cfg, train = env
+    spec = ScenarioSpec(name="adaptive",
+                        attacks=(AttackSpec("dts_dodge"),
+                                 AttackSpec("theta_aware")))
+    stats = {}
+    st, _, mal, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train,
+                              data, epochs=5, scenario=spec, stats=stats)
+    assert stats["dispatches"] == 1
+    assert mal.sum() == 2
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(st.params))
+
+
+def test_adaptive_attack_codes_appended_not_reordered():
+    # compiled scenarios store ATTACK_CODE ints in device arrays: the
+    # legacy kinds must keep their codes forever
+    from repro.scenarios.compile import ATTACK_CODE
+    assert ATTACK_CODE == {"noise": 1, "sign_flip": 2, "scaling": 3,
+                           "alie": 4, "label_flip": 5, "dts_dodge": 6,
+                           "theta_aware": 7}
+
+
+# ---------------------------------------------------------------------------
+# Pod time machine + pod geometric trust
+# ---------------------------------------------------------------------------
+
+def _pod_setup(dts_signal="loss", time_machine=False, use_dts=True):
+    from repro.core.engine import (build_pod_round, init_pod_state,
+                                   make_transport)
+    from repro.core.topology import make_topology
+
+    pods = 4
+    cfg = DeFTAConfig(num_workers=pods, avg_peers=pods - 1, num_sampled=2,
+                      topology="dense", use_dts=use_dts,
+                      time_machine=time_machine, dts_signal=dts_signal)
+    adj = make_topology("dense", pods, pods - 1)
+    self_eval = None
+    if time_machine:
+        def self_eval(stacked):
+            return jax.vmap(lambda p: jnp.abs(p["w"]).mean())(stacked)
+    tr = make_transport(cfg, adjacency=adj)
+    rnd = build_pod_round(cfg, pods, np.full(pods, 8), transport=tr,
+                          adj=adj, self_eval=self_eval)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (pods, 16))}
+    pstate = init_pod_state(jax.random.PRNGKey(1), pods, params,
+                            time_machine=time_machine)
+    return rnd, pstate, params, pods
+
+
+def test_pod_time_machine_stage_selection():
+    from repro.core.engine import stage_names
+    rnd, _, _, _ = _pod_setup(time_machine=True)
+    assert "damage_check" in stage_names(rnd)
+    rnd, _, _, _ = _pod_setup(time_machine=False)
+    assert "damage_check" not in stage_names(rnd)
+
+
+def test_pod_time_machine_restores_backup_on_explosion():
+    rnd, pstate, params, pods = _pod_setup(time_machine=True)
+    rnd_j = jax.jit(rnd)
+    pstate, out = rnd_j(pstate, params, jnp.zeros((pods,)))
+    assert bool(jnp.isfinite(pstate.best_loss).all())
+    # poison one pod's params: listeners' candidate aggregates explode on
+    # the held-out eval and must restore their (finite, small) backup
+    bad = {"w": out["w"].at[3].set(1e8)}
+    pstate2, out2 = rnd_j(pstate, bad, jnp.zeros((pods,)))
+    assert float(jnp.abs(out2["w"][:3]).max()) < 1e3
+    # damaged pods carried the damage penalty into the trust update
+    assert float(pstate2.conf.min()) < -100.0
+    # best_loss only ratchets down (damaged rounds never refresh it)
+    assert bool((pstate2.best_loss <= pstate.best_loss).all())
+
+
+def test_pod_time_machine_needs_flag_and_self_eval():
+    # the TM engages only with BOTH the flag and a held-out evaluator:
+    # sim configs (time_machine=True by default) reused on the pod path
+    # without a self_eval keep the historical TM-less selection
+    from repro.core.engine import (build_pod_round, make_transport,
+                                   stage_names)
+    from repro.core.topology import make_topology
+    pods = 4
+    cfg = DeFTAConfig(num_workers=pods, avg_peers=pods - 1,
+                      topology="dense", time_machine=True)
+    adj = make_topology("dense", pods, pods - 1)
+    rnd = build_pod_round(cfg, pods, np.full(pods, 8),
+                          transport=make_transport(cfg, adjacency=adj),
+                          adj=adj)
+    assert "damage_check" not in stage_names(rnd)
+
+
+def test_init_pod_state_time_machine_needs_params():
+    from repro.core.engine import init_pod_state
+    with pytest.raises(ValueError, match="params"):
+        init_pod_state(jax.random.PRNGKey(0), 4, None, time_machine=True)
+
+
+def test_pod_geom_trust_runs_and_updates_conf():
+    rnd, pstate, params, pods = _pod_setup(dts_signal="geom")
+    rnd_j = jax.jit(rnd)
+    pstate, out = rnd_j(pstate, params, jnp.zeros((pods,)))
+    pstate, out = rnd_j(pstate, out, jnp.zeros((pods,)))
+    assert int(pstate.round) == 2
+    assert float(jnp.abs(pstate.conf).max()) > 0
+    assert bool(jnp.isfinite(out["w"]).all())
+
+
+# ---------------------------------------------------------------------------
+# Docs stay honest: stage docstrings + ARCHITECTURE.md match introspection
+# ---------------------------------------------------------------------------
+
+def _all_round_builders(env):
+    from repro.core.engine import (build_defta_round, build_fedavg_round,
+                                   build_pod_round, make_transport)
+    data, task, cfg, train = env
+    w = cfg.num_workers
+    adj = np.eye(w, k=1, dtype=bool) | np.eye(w, k=-1, dtype=bool)
+    sizes = np.full(w, 64)
+    mal = np.zeros(w, bool)
+    yield build_defta_round(task, cfg, train, adj, sizes, mal)
+    yield build_fedavg_round(task, cfg, train, sizes, mal)
+    yield build_pod_round(cfg, w, sizes,
+                          transport=make_transport(cfg, adjacency=adj),
+                          adj=adj)
+
+
+def test_stage_functions_document_their_context_contract(env):
+    for rnd in _all_round_builders(env):
+        for name, fn in rnd.stages:
+            assert fn.__doc__ and "reads" in fn.__doc__ \
+                and "writes" in fn.__doc__, \
+                f"stage {name} lacks a reads/writes docstring"
+
+
+def test_architecture_doc_covers_every_stage(env):
+    doc_path = os.path.join(os.path.dirname(__file__), "..", "docs",
+                            "ARCHITECTURE.md")
+    doc = open(doc_path).read()
+    from repro.core.engine import stage_names
+    for rnd in _all_round_builders(env):
+        for name in stage_names(rnd):
+            assert f"`{name}`" in doc, \
+                f"docs/ARCHITECTURE.md does not document stage {name}"
+    # and the README links both docs
+    readme = open(os.path.join(os.path.dirname(__file__), "..",
+                               "README.md")).read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/SCENARIOS.md" in readme
