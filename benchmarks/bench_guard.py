@@ -22,9 +22,19 @@ fails (exit 1) when the headline wins regress:
   keep DISPATCH PARITY with loss-only DTS and its superstep wall clock
   within ``1 + tolerance`` of the loss-only run — geometry is data flow
   inside the scanned round body, never extra dispatches;
+* the correlation trust channel (DTS v3, ``dts_signal="corr"``/``"all"``)
+  must keep the same dispatch parity with its sketch ring buffer carried
+  as scan state, and both variants' steady supersteps must stay within
+  ``1 + tolerance`` (the ≤ 1.25× sketch-overhead gate at default
+  tolerance);
 * the DTS v2 headline must hold: on the label_flip × non-iid trust-grid
   cells, geom or both must beat loss on final mean honest accuracy (the
-  PR-3 finding the geometric signal exists to fix).
+  PR-3 finding the geometric signal exists to fix);
+* the DTS v3 headline must hold: on the alie × non-iid cells (k=8
+  colluders on 20 vanilla workers ≈ 29% malicious), corr or all must
+  beat the best PR 5 signal (loss/geom/both) by ≥ 0.05 absolute honest
+  accuracy, and the best corr-family accuracy may not fall more than
+  0.05 below the committed baseline's (the alie accuracy floor).
 
 Interpret-mode timings are noisy; the guard compares RATIOS within one run
 (dense/sparse from the same process share the noise), not absolute times
@@ -147,6 +157,29 @@ def check(baseline, fresh, tolerance):
                 f"geom trust_update superstep {gt['ratio']:.2f}x slower "
                 f"than loss-only (gate {1 + tolerance:.2f}x)")
 
+    ct = fresh.get("corr_trust")
+    if not ct:
+        failures.append("fresh bench has no corr_trust entry")
+    else:
+        print(f"corr trust_update: corr {ct['ratio_corr']:.2f}x / all "
+              f"{ct['ratio_all']:.2f}x loss-only superstep (dispatches "
+              f"{ct['dispatches_loss']} / {ct['dispatches_corr']} / "
+              f"{ct['dispatches_all']})")
+        if not (ct["dispatches_corr"] == ct["dispatches_all"]
+                == ct["dispatches_loss"]):
+            failures.append(
+                f"corr trust_update changed the dispatch count: loss "
+                f"{ct['dispatches_loss']} vs corr "
+                f"{ct['dispatches_corr']} vs all {ct['dispatches_all']} "
+                f"— the sketch ring buffer must stay carried scan state, "
+                f"never control flow")
+        worst = max(ct["ratio_corr"], ct["ratio_all"])
+        if worst > 1 + tolerance:
+            failures.append(
+                f"corr trust_update superstep {worst:.2f}x slower than "
+                f"loss-only (gate {1 + tolerance:.2f}x) — the sketch "
+                f"rotation + sign-matmul overran its budget")
+
     tg = fresh.get("trust_grid")
     if not tg:
         failures.append("fresh bench has no trust_grid entry")
@@ -159,6 +192,28 @@ def check(baseline, fresh, tolerance):
                 "DTS v2 headline regressed: geom/both no longer beat "
                 "loss on label_flip × non-iid honest accuracy "
                 f"(accs: {accs})")
+        alie_accs = tg.get("alie_accs", {})
+        if alie_accs:
+            print("trust grid alie × non-iid: "
+                  + " ".join(f"{s}={a:.3f}" for s, a in alie_accs.items()))
+        if not tg.get("alie_headline_ok"):
+            failures.append(
+                "DTS v3 headline regressed: corr/all no longer beat the "
+                "best PR 5 signal by ≥0.05 on alie × non-iid honest "
+                f"accuracy (accs: {alie_accs})")
+        # the alie accuracy floor: best corr-family accuracy may not fall
+        # more than 0.05 below the committed baseline's
+        base_alie = (baseline.get("trust_grid") or {}).get("alie_accs", {})
+        floor_sigs = ("corr", "all")
+        base_best = max((base_alie.get(s, 0.0) for s in floor_sigs),
+                        default=0.0)
+        new_best = max((alie_accs.get(s, 0.0) for s in floor_sigs),
+                       default=0.0)
+        if base_best and new_best < base_best - 0.05:
+            failures.append(
+                f"alie accuracy floor broken: best corr-family honest "
+                f"accuracy {new_best:.3f} vs committed {base_best:.3f} "
+                f"(floor {base_best - 0.05:.3f})")
     return failures
 
 

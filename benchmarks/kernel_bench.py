@@ -6,10 +6,11 @@ trajectory over (world size, topology density) — now including the
 quantized wire sweep (bytes-on-wire by format + fused int8 kernel time) —
 plus the super-step driver check (dispatch count and per-epoch-driver loss
 agreement), the quantized-convergence parity check (int8 wire with EF21
-error feedback lands within tolerance of the fp32 run), the geometric
-trust_update cost contract (dispatch parity + superstep overhead vs
-loss-only DTS) and the DTS v2 headline cells (label_flip × signal on the
-non-iid partition, benchmarks/table_trust.py)."""
+error feedback lands within tolerance of the fp32 run), the geometric and
+correlation trust_update cost contracts (dispatch parity + superstep
+overhead vs loss-only DTS, sketch ring buffer included) and the DTS v2/v3
+headline cells (label_flip and alie × signal on the non-iid partition,
+benchmarks/table_trust.py)."""
 from __future__ import annotations
 
 import json
@@ -128,12 +129,14 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     scenario_overhead = bench_scenario_overhead()
     fedavg_dispatch = bench_fedavg_dispatch()
     geom_trust = bench_geom_trust()
+    corr_trust = bench_corr_trust()
     trust_grid = bench_trust_grid()
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
                    quant_convergence=quant_convergence,
                    scenario_overhead=scenario_overhead,
                    fedavg_dispatch=fedavg_dispatch,
-                   geom_trust=geom_trust, trust_grid=trust_grid)
+                   geom_trust=geom_trust, corr_trust=corr_trust,
+                   trust_grid=trust_grid)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -401,22 +404,115 @@ def bench_geom_trust(epochs: int = 20):
                 dispatches_geom=stats_g["dispatches"])
 
 
+def bench_corr_trust(epochs: int = 20):
+    """DTS v3 cost contract, CI-gated by bench_guard: the correlation
+    trust channel ("corr", and "all" = loss+geom+corr — per-round sketch
+    rotation plus the [W, W] sign-matmul over the flattened ring buffer)
+    must keep DISPATCH PARITY with loss-only DTS (sketches are carried
+    scan state, never control flow) and hold the STEADY-STATE scanned
+    superstep within the ≤ 1.25× overhead gate at the paper's round shape
+    (local_epochs=10). Same methodology as bench_geom_trust: compile
+    excluded, best-of-3 single-dispatch chunks, alie colluders in the
+    scenario so the sketch path scores real collusion."""
+    import dataclasses
+
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import (_pad_workers, build_round_fn, run_defta,
+                                  resolve_scenario)
+    from repro.core.engine import init_state, sketch_shape
+    from repro.core.tasks import mlp_task
+    from repro.core.topology import make_topology
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios import AttackSpec, ScenarioSpec
+
+    w, k = 8, 4
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(
+        name="corr_bench",
+        attacks=tuple(AttackSpec("alie") for _ in range(k)))
+
+    def measure(signal):
+        cfg = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                          local_epochs=10, dts_signal=signal)
+        scn = resolve_scenario(spec, cfg, epochs)
+        d2, sizes = _pad_workers(data, data["sizes"], k)
+        jdata = {kk: jnp.asarray(v) for kk, v in d2.items()
+                 if kk in ("x", "y", "mask")}
+        adj = make_topology(cfg.topology, scn.num_workers, cfg.avg_peers,
+                            cfg.seed)
+        rnd = build_round_fn(task, cfg, train, adj, sizes,
+                             scn.malicious.copy(), scenario=scn,
+                             num_classes=10)
+
+        @jax.jit
+        def chunk(st, jd):
+            return jax.lax.scan(lambda s, e: (rnd(s, jd, e), None), st,
+                                jnp.arange(epochs))[0]
+
+        st = init_state(jax.random.PRNGKey(0), task, scn.num_workers,
+                        sketch=sketch_shape(cfg))
+        t0 = time.time()
+        jax.block_until_ready(chunk(st, jdata))      # trace + compile
+        compile_s = time.time() - t0
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(chunk(st, jdata))  # one XLA dispatch
+            best = min(best, time.time() - t0)
+        return best, compile_s
+
+    loss_s, _ = measure("loss")
+    corr_s, _ = measure("corr")
+    all_s, _ = measure("all")
+    ratio_corr, ratio_all = corr_s / loss_s, all_s / loss_s
+    # dispatch parity on the end-to-end driver (stats accounting)
+    base = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                       local_epochs=1)
+    stats = {}
+    dispatches = {}
+    for sig in ("loss", "corr", "all"):
+        stats = {}
+        run_defta(jax.random.PRNGKey(0), task,
+                  dataclasses.replace(base, dts_signal=sig), train, data,
+                  epochs=6, scenario=spec, stats=stats)
+        dispatches[sig] = stats["dispatches"]
+    print(f"corr trust overhead {epochs}x10-local-epoch supersteps: "
+          f"loss {loss_s:.2f}s vs corr {corr_s:.2f}s ({ratio_corr:.2f}x) "
+          f"vs all {all_s:.2f}s ({ratio_all:.2f}x); dispatches "
+          f"{dispatches['loss']} / {dispatches['corr']} / "
+          f"{dispatches['all']}")
+    return dict(epochs=epochs, loss_s=loss_s, corr_s=corr_s, all_s=all_s,
+                ratio_corr=ratio_corr, ratio_all=ratio_all,
+                dispatches_loss=dispatches["loss"],
+                dispatches_corr=dispatches["corr"],
+                dispatches_all=dispatches["all"])
+
+
 def bench_trust_grid(epochs: int = 40):
-    """The DTS v2 headline cells for the BENCH trajectory: label_flip ×
-    (loss / geom / both) on the non-iid partition — the PR-3 failure case
-    the geometric signal exists to fix. Full grid (more attacks, iid
+    """The DTS v2+v3 headline cells for the BENCH trajectory:
+    (label_flip, alie) × (loss / geom / both / corr / all) on the non-iid
+    partition — the PR-3 failure case the geometric signal fixes plus the
+    alie collusion case the correlation signal fixes (k=8 attackers on 20
+    vanilla workers ≈ 29% malicious). Full grid (more attacks, iid
     column, trust trajectories) in benchmarks/table_trust.py; this
     compact slice rides BENCH_gossip.json so bench_guard and the
-    dashboard track the headline across PRs."""
+    dashboard track both headlines across PRs."""
     try:
-        from benchmarks.table_trust import headline_check, sweep
+        from benchmarks.table_trust import (alie_headline_check,
+                                            headline_check, sweep)
     except ImportError:                    # run as benchmarks/kernel_bench.py
-        from table_trust import headline_check, sweep
+        from table_trust import alie_headline_check, headline_check, sweep
 
-    rows = sweep(epochs=epochs, attacks=("label_flip",),
+    rows = sweep(epochs=epochs, attacks=("label_flip", "alie"),
                  partitions=(("non_iid", 0.5),))
     ok, accs = headline_check(rows, verbose=False)
-    return dict(epochs=epochs, headline_ok=bool(ok), accs=accs, rows=rows)
+    alie_ok, alie_accs = alie_headline_check(rows, verbose=False)
+    return dict(epochs=epochs, headline_ok=bool(ok), accs=accs,
+                alie_headline_ok=bool(alie_ok), alie_accs=alie_accs,
+                rows=rows)
 
 
 def run():

@@ -4,9 +4,11 @@ trajectory dashboard: one row per bench file (the committed baseline, the
 fresh CI run, and any stashed history), tracking the CI-guarded headline
 numbers — sparse-kernel win, fused-quant slowdown, int8 wire-byte ratio,
 superstep dispatches, quantized-convergence delta, scenario-engine
-overhead and the FedAvg dispatch parity — across PRs, and the DTS v2
+overhead and the FedAvg dispatch parity — across PRs, the DTS v2
 trust panel (label_flip × non-iid honest accuracy per trust signal +
-the geometric trust_update overhead).
+the geometric trust_update overhead) and the DTS v3 collusion panel
+(alie × non-iid honest accuracy per signal + the sketch/correlation
+trust_update overhead).
 
     python benchmarks/render_experiments.py                  # dry-run tables
     python benchmarks/render_experiments.py --bench-dashboard [paths...]
@@ -134,6 +136,7 @@ def render_bench_dashboard(paths=()) -> str:
         lines.append(_bench_row(os.path.basename(p), payload))
         payloads.append((os.path.basename(p), payload))
     lines += _trust_panel(payloads)
+    lines += _collusion_panel(payloads)
     return "\n".join(lines)
 
 
@@ -165,6 +168,43 @@ def _trust_panel(payloads) -> list:
             + (f"{theta:.3f}" if theta is not None else "—")
             + f" | {'OK' if tg.get('headline_ok') else 'REGRESSED'} | "
             + (f"{gt['ratio']:.2f}x" if gt else "—") + " |")
+    return lines
+
+
+def _collusion_panel(payloads) -> list:
+    """The DTS v3 collusion panel: per bench file, the alie × non-iid
+    honest accuracy by trust signal (k=8 colluders on 20 vanilla ≈ 29%
+    malicious), the final attacker-θ share of the best correlation-family
+    signal, the alie headline verdict, and the sketch/correlation
+    trust_update overhead (worst of corr/all vs loss-only) — blank for
+    pre-DTS-v3 history files."""
+    lines = [
+        "",
+        "## DTS v3 collusion panel (alie × non-iid, 29% malicious)",
+        "",
+        "| bench file | acc loss | acc geom | acc both | acc corr | "
+        "acc all | attacker-θ (best corr) | alie headline | "
+        "corr overhead |",
+        "|" + "---|" * 9,
+    ]
+    for label, payload in payloads:
+        tg = payload.get("trust_grid") or {}
+        ct = payload.get("corr_trust") or {}
+        accs = tg.get("alie_accs", {})
+        if not accs:
+            lines.append(f"| {label} " + "| — " * 8 + "|")
+            continue
+        theta = min((r["attacker_theta"] for r in tg.get("rows", ())
+                     if r["attack"] == "alie"
+                     and r["signal"] in ("corr", "all")), default=None)
+        overhead = max(ct["ratio_corr"], ct["ratio_all"]) if ct else None
+        lines.append(
+            f"| {label} | " + " | ".join(
+                f"{accs.get(s, 0):.3f}"
+                for s in ("loss", "geom", "both", "corr", "all"))
+            + " | " + (f"{theta:.3f}" if theta is not None else "—")
+            + f" | {'OK' if tg.get('alie_headline_ok') else 'REGRESSED'} | "
+            + (f"{overhead:.2f}x" if overhead is not None else "—") + " |")
     return lines
 
 

@@ -1,4 +1,4 @@
-"""Attack × trust-signal grid: the DTS v2 acceptance bench.
+"""Attack × trust-signal grid: the DTS v2/v3 acceptance bench.
 
 PR 3's finding (ROADMAP "DTS finding"): the paper's loss-delta trust
 signal cannot separate ``label_flip`` attackers from honest peers under
@@ -6,18 +6,22 @@ non-iid heterogeneity — the loss delta is a scalar per receiver, so every
 sampled peer of a bad round is penalized alike, and a flipper's damage
 hides inside non-iid loss noise. DTS v2 (``core/dts.geom_scores``,
 ``DeFTAConfig.dts_signal``) adds per-(receiver, peer) update-geometry
-signals. This bench runs the closing grid:
+signals; DTS v3 (``core/dts.colluder_scores``) adds the cross-round
+correlation signal that finally sees ``alie`` colluders — the one attack
+geometry can't, because they hide inside the honest variance envelope.
+This bench runs the closing grid:
 
-    attacks   × label_flip / alie / dts_dodge / theta_aware
-    signals   × loss / geom / both
+    attacks   × label_flip / alie / alie_decor / dts_dodge / theta_aware
+    signals   × loss / geom / both / corr / all
     partition × iid (Dirichlet α=100) / non-iid (α=0.5, the PR-3 case)
 
 recording final mean honest accuracy and the TRUST TRAJECTORY — the mean
 sampling-weight mass honest workers place on attackers (θ share) at each
-eval point; a working defense drives it toward 0. The headline claim
-(checked by ``headline_check`` and gated in ``BENCH_gossip.json`` via
-``benchmarks/bench_guard.py``): geom/both beat loss on final honest
-accuracy under label_flip × non-iid, where loss-only provably fails.
+eval point; a working defense drives it toward 0. The headline claims
+(checked by ``headline_check`` / ``alie_headline_check`` and gated in
+``BENCH_gossip.json`` via ``benchmarks/bench_guard.py``): geom/both beat
+loss under label_flip × non-iid, and corr/all beat every PR 5 signal
+under alie × non-iid at k=8 on 20 vanilla workers (29% malicious).
 
     PYTHONPATH=src python benchmarks/table_trust.py
 """
@@ -34,15 +38,15 @@ from repro.config import DeFTAConfig, TrainConfig
 from repro.core import dts
 from repro.core.defta import (_pad_workers, build_round_fn, evaluate,
                               resolve_scenario)
-from repro.core.engine import drive_epochs, init_state
+from repro.core.engine import drive_epochs, init_state, sketch_shape
 from repro.core.gossip import uses_error_feedback
 from repro.core.tasks import mlp_task
 from repro.core.topology import make_topology
 from repro.data.synthetic import federated_dataset
 from repro.scenarios import AttackSpec, ScenarioSpec
 
-ATTACKS = ("label_flip", "alie", "dts_dodge", "theta_aware")
-SIGNALS = ("loss", "geom", "both")
+ATTACKS = ("label_flip", "alie", "alie_decor", "dts_dodge", "theta_aware")
+SIGNALS = ("loss", "geom", "both", "corr", "all")
 PARTITIONS = (("iid", 100.0), ("non_iid", 0.5))
 
 
@@ -67,7 +71,8 @@ def run_cell(key, task, cfg: DeFTAConfig, train: TrainConfig, data, spec,
     num_classes = int(np.max(data["y"])) + 1
     adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
     data, sizes = _pad_workers(data, data["sizes"], w - cfg.num_workers)
-    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg),
+                       sketch=sketch_shape(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
@@ -125,6 +130,7 @@ def sweep(epochs: int = 40, k: int = 8, num_workers: int = 20,
                           f"{cell['attacker_theta']:.3f} "
                           f"({time.time() - t0:.0f}s)")
     headline_check(rows, verbose=verbose)
+    alie_headline_check(rows, verbose=verbose)
     return rows
 
 
@@ -144,6 +150,26 @@ def headline_check(rows, verbose: bool = True):
         print(f"trust headline label_flip × non-iid: loss "
               f"{accs['loss']:.3f} vs best geom-signal "
               f"{max(geom_accs):.3f} -> {'OK' if ok else 'REGRESSION'}")
+    return ok, accs
+
+
+def alie_headline_check(rows, margin: float = 0.05, verbose: bool = True):
+    """The DTS v3 acceptance claim: corr or all beats the best PR 5
+    signal (loss/geom/both — against which alie is fully stealthy) by
+    ≥ ``margin`` absolute honest accuracy under alie × non-iid.
+    Returns (ok, by_signal); (None, accs) when the sweep lacks either
+    signal family."""
+    accs = {r["signal"]: r["acc"] for r in rows
+            if r["attack"] == "alie" and r["partition"] == "non_iid"}
+    old = [a for s, a in accs.items() if s in ("loss", "geom", "both")]
+    new = [a for s, a in accs.items() if s in ("corr", "all")]
+    if not old or not new:
+        return None, accs
+    ok = max(new) >= max(old) + margin
+    if verbose:
+        print(f"trust headline alie × non-iid: best pre-corr signal "
+              f"{max(old):.3f} vs best corr-signal {max(new):.3f} "
+              f"(need +{margin:.2f}) -> {'OK' if ok else 'REGRESSION'}")
     return ok, accs
 
 

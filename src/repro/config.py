@@ -227,8 +227,25 @@ class DeFTAConfig:
                                      #   outlier, sign-agreement), per-peer
                                      #   resolution the loss delta lacks;
                                      # "both" — loss_trust + λ·geom_trust
-                                     #   fused (λ = dts_geom_weight)
-    dts_geom_weight: float = 1.0     # λ scaling the geometric trust term
+                                     #   fused (λ = dts_geom_weight);
+                                     # "corr" — cross-round collusion
+                                     #   suspicion from sign-sketch
+                                     #   correlation clustering (DTS v3,
+                                     #   the anti-ALIE signal);
+                                     # "all"  — loss + λg·geom + λc·corr,
+                                     #   the full fusion
+    dts_geom_weight: float = 1.0     # λg scaling the geometric trust term
+    dts_corr_weight: float = 4.0     # λc scaling the correlation trust
+                                     # term (suspicion scores are O(1)
+                                     # cluster masses, smaller than loss
+                                     # deltas under attack — the default
+                                     # rebalances them)
+    dts_sketch_rounds: int = 8       # R: sketch ring-buffer depth (rounds
+                                     # of update history the correlation
+                                     # signal sees)
+    dts_sketch_dim: int = 64         # S: count-sketch width per round
+                                     # (sketch state is [W, R, S] — tiny
+                                     # next to the model params)
     time_machine: bool = True        # §3.3 damage check + backup rollback.
                                      # Off for the classical robust-agg
                                      # baselines: those algorithms have no

@@ -76,8 +76,10 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     rng = np.random.default_rng(cfg.seed + 17)
     speeds = jnp.asarray(rng.uniform(*speed_range, size=w))
 
+    from repro.core.engine import sketch_shape
     from repro.core.gossip import uses_error_feedback
-    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg),
+                       sketch=sketch_shape(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             scenario=scenario, num_classes=num_classes)
     jdata = {k: jnp.asarray(v) for k, v in data.items()

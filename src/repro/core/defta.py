@@ -154,8 +154,10 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     # attacker slots need (unused) data slots — pad stacked data
     data, sizes = _pad_workers(data, data["sizes"], w - cfg.num_workers)
 
+    from repro.core.engine import sketch_shape
     from repro.core.gossip import uses_error_feedback
-    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg))
+    state = init_state(key, task, w, wire_error=uses_error_feedback(cfg),
+                       sketch=sketch_shape(cfg))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             gossip_backend=gossip_backend,
                             scenario=scenario, num_classes=num_classes)

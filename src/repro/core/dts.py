@@ -52,16 +52,45 @@ update becomes ``c_i ← c_i − m_i ∘ p_i · (loss_trust + λ·geom_trust)``
 (``DeFTAConfig.dts_signal = "loss" | "geom" | "both"``, λ =
 ``dts_geom_weight``; "loss" is bit-identical to the paper's update).
 
+**Collusion-aware correlation trust (DTS v3).** ALIE-style colluders
+defeat both signals above BY CONSTRUCTION: they hide inside the honest
+variance envelope, so no single-round, single-peer statistic separates
+them. But collusion has a cross-round signature no honest cohort shows —
+the colluders' updates correlate with *each other*, round after round,
+far more than non-iid honest workers do (the sybil/collusion threat model
+of the DFL security surveys; DeTrust-FL's argument that decentralized
+trust must live at the aggregation layer). ``update_sketch`` keeps a
+device-side ring buffer of SIGN-SKETCHES (count-sketch projection →
+sign) of the per-peer update deltas over the last R rounds;
+``colluder_scores`` computes the pairwise peer×peer correlation matrix
+via a sign-matmul over the flattened sketch history, calibrates a
+median+MAD baseline of the off-diagonal correlations, and clusters the
+high-mutual-correlation group with one power-iteration step on the
+excess-correlation graph. The resulting cluster-membership suspicion is
+folded into the confidence update as a third channel
+
+    c_i ← c_i − m_i ∘ p_i · (loss_trust + λg·geom + λc·corr)
+
+(``dts_signal = "corr"`` for the correlation channel alone, ``"all"`` for
+the full fusion; λc = ``dts_corr_weight``). The sketch hash/sign plan is
+drawn with numpy at trace time (``_sketch_plan``) — the sketches consume
+ZERO jax PRNG keys, so the frozen key-split layout (and the ``"loss"``
+golden) is untouched, and the whole pipeline rides the existing scan
+supersteps with zero extra dispatches.
+
 In the unified round-program engine (``core.engine``) these primitives are
 the ``peer_sample`` (sample_weights/sample_peers), ``damage_check``
 (is_damaged + backup select) and ``trust_update`` (confidence update,
-loss and/or geometric signal) stages — shared verbatim by the sync, async
-and multi-pod selections.
+loss / geometric / correlation signal) stages — shared verbatim by the
+sync, async and multi-pod selections.
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DAMAGE_PENALTY = 1e3       # finite stand-in for the paper's +inf loss_trust
 EXPLOSION_FACTOR = 10.0    # loss > factor * best  => damaged
@@ -274,15 +303,117 @@ def geom_scores(deltas, mask, weights=None, *,
     return jnp.where(mask, score - mean_s, 0.0)
 
 
+# ---------------------------------------------------------------------------
+# Cross-round correlation trust (DTS v3)
+# ---------------------------------------------------------------------------
+
+SKETCH_ROUNDS = 8          # default ring-buffer depth R (rounds of history)
+SKETCH_DIM = 64            # default count-sketch width S per round
+
+
+@lru_cache(maxsize=32)
+def _sketch_plan(seed: int, dim: int, sketch_dim: int):
+    """Count-sketch hash plan: bucket assignment h [D] and Rademacher
+    signs s [D], drawn with NUMPY at trace time and embedded as
+    constants — the sketches consume zero jax PRNG keys, keeping the
+    engines' frozen key-split layout (and the "loss" golden) untouched.
+    Cached per (seed, D, S): every engine tracing the same config shares
+    one plan, so sim and pod sketches of the same delta agree."""
+    rng = np.random.default_rng(seed * 1_000_003 + 0xC0DE)
+    bucket = rng.integers(0, sketch_dim, size=dim)
+    sign = rng.integers(0, 2, size=dim) * 2 - 1
+    return (np.asarray(bucket, np.int32), np.asarray(sign, np.float32))
+
+
+def sketch_deltas(deltas, sketch_dim: int, *, seed: int = 0):
+    """Sign-sketch of per-worker update deltas: count-sketch projection
+    [W, D] → [W, S] (signed bucket sums — an AMS/count-sketch linear map,
+    so inner products of sketches estimate inner products of deltas) then
+    ``sign`` — the {−1, 0, +1} codes whose cross-round sign-matmul is the
+    correlation estimator in ``colluder_scores``. D is static at trace
+    time, so the hash plan is a host-side constant."""
+    bucket, sign = _sketch_plan(seed, deltas.shape[1], sketch_dim)
+    proj = jax.ops.segment_sum(
+        (deltas * jnp.asarray(sign)).T, jnp.asarray(bucket),
+        num_segments=sketch_dim)                        # [S, W]
+    return jnp.sign(proj.T)                             # [W, S]
+
+
+def update_sketch(hist, deltas, *, seed: int = 0):
+    """Rotate the sketch ring buffer: drop the oldest round, append this
+    round's sign-sketch. hist: [W, R, S]; deltas: [W, D]. Shift-based
+    (no pointer) so per-worker freeze/fire merging is a plain
+    ``where`` over rows — a frozen worker's whole history stays put."""
+    new = sketch_deltas(deltas, hist.shape[2], seed=seed)
+    return jnp.concatenate([hist[:, 1:, :], new[:, None, :]], axis=1)
+
+
+def correlation_matrix(hist, *, eps: float = 1e-12):
+    """Pairwise peer×peer cross-round correlation: cosine similarity of
+    the flattened [W, R·S] sign-sketch histories via one sign-matmul.
+    Zero rows (unfilled history) correlate 0 with everything; the
+    diagonal is zeroed (self-correlation is not evidence)."""
+    w = hist.shape[0]
+    flat = hist.reshape(w, -1)
+    n = jnp.sqrt((flat * flat).sum(-1))
+    corr = (flat @ flat.T) / (n[:, None] * n[None, :] + eps)
+    return jnp.where(jnp.eye(w, dtype=bool), 0.0, corr)
+
+
+def colluder_scores(hist, mask, weights=None, *, eps: float = 1e-12):
+    """Cluster-membership suspicion per (receiver i, peer j) from the
+    cross-round correlation structure of the sketch history.
+
+    hist: [W, R, S] sign-sketch ring buffer (``update_sketch``); mask /
+    weights as in ``geom_scores``. Colluders (ALIE et al.) must emit
+    near-identical payloads to coordinate their shift, so their pairwise
+    correlation sits far above the honest baseline — which non-iid
+    heterogeneity keeps LOW (honest workers' local steps scatter).
+
+    Calibration is self-normalizing, not max-normalized: the baseline is
+    the median off-diagonal correlation and the spread its MAD, so in a
+    clean run (no cluster) the excess graph is ~empty and the scores ~0 —
+    clean-run accuracy is unharmed by construction. The high-mutual-
+    correlation CLUSTER is extracted with one power-iteration step on the
+    excess graph (v = row-mean, s = E·v): a peer scores high only when
+    its excess correlations point at peers that themselves have excess
+    correlations — one stray correlated pair does not an attacker make.
+
+    Returns [W, W]: the per-peer suspicion s_j centered over each
+    receiver's peer set under ``weights`` (same contract as
+    ``geom_scores`` — conforming peers ≲ 0, cluster members > 0, rows
+    with no peers all-zero)."""
+    w = hist.shape[0]
+    eye = jnp.eye(w, dtype=bool)
+    corr = correlation_matrix(hist, eps=eps)
+    offd = jnp.where(eye, jnp.nan, corr)
+    base = jnp.nanmedian(offd)
+    spread = jnp.nanmedian(jnp.abs(offd - base))
+    excess = jnp.where(eye, 0.0, jax.nn.relu(corr - base - spread))
+    v = excess.mean(axis=1)                             # [W] first pass
+    s = excess @ v                                      # [W] cluster mass
+
+    mask = mask & ~eye
+    wts = jnp.where(mask, weights if weights is not None else 1.0, 0.0)
+    wts = jnp.maximum(wts, 0.0)
+    tot = wts.sum(1, keepdims=True)
+    score = jnp.broadcast_to(s[None, :], (w, w))
+    mean_s = (wts * score).sum(1, keepdims=True) / jnp.maximum(tot, eps)
+    return jnp.where(mask, score - mean_s, 0.0)
+
+
 def fused_trust_signal(dts_signal: str, loss_trust, geom, damaged,
-                       lam: float):
+                       lam: float, corr=None, lam_corr: float = 0.0):
     """The trust_update stage's fused per-(receiver, peer) signal.
 
     ``loss_trust``: [W] (already carries DAMAGE_PENALTY on damaged rows);
-    ``geom``: [W, W] from ``geom_scores`` (or None); ``damaged``: [W] bool.
+    ``geom``: [W, W] from ``geom_scores`` (or None); ``damaged``: [W] bool;
+    ``corr``: [W, W] from ``colluder_scores`` (or None).
     Returns [W, W]. ``"loss"`` reproduces Algorithm 3 line 12 bit-exactly
-    (a pure broadcast, no geometry ops traced); ``"geom"`` keeps only the
-    damage penalty from the loss channel; ``"both"`` sums the channels.
+    (a pure broadcast, no geometry ops traced); ``"geom"`` / ``"corr"``
+    keep only the damage penalty from the loss channel plus their own
+    score; ``"both"`` fuses loss + geometry; ``"all"`` fuses all three:
+    loss_trust + λg·geom + λc·corr.
     """
     if dts_signal == "loss":
         return loss_trust[:, None]
@@ -291,17 +422,30 @@ def fused_trust_signal(dts_signal: str, loss_trust, geom, damaged,
         return damage_only[:, None] + lam * geom
     if dts_signal == "both":
         return loss_trust[:, None] + lam * geom
+    if dts_signal == "corr":
+        damage_only = jnp.where(damaged, DAMAGE_PENALTY, 0.0)
+        return damage_only[:, None] + lam_corr * corr
+    if dts_signal == "all":
+        return loss_trust[:, None] + lam * geom + lam_corr * corr
     raise ValueError(f"unknown dts_signal {dts_signal!r} "
-                     f"(one of: loss, geom, both)")
+                     f"(one of: loss, geom, both, corr, all)")
 
 
 def geom_confidence_update(dts_signal: str, lam: float, conf, sampled, P,
-                           loss_trust, damaged, deltas, mask, weights):
-    """The geometric trust_update branch, shared verbatim by the sync/
-    async round and the pod round (the two selections differ only in
-    which deltas and mask they pass): score the deltas, fuse with the
-    loss channel per ``dts_signal``, and apply Algorithm 3's masked
-    update ``c ← c − m ∘ p · signal``."""
-    gs = geom_scores(deltas, mask, weights=weights)
-    signal = fused_trust_signal(dts_signal, loss_trust, gs, damaged, lam)
+                           loss_trust, damaged, deltas, mask, weights,
+                           sketch=None, lam_corr: float = 0.0):
+    """The geometric/correlation trust_update branch, shared verbatim by
+    the sync/async round and the pod round (the selections differ only in
+    which deltas, mask and sketch history they pass): score the deltas
+    (geometry) and/or the sketch history (cross-round correlation), fuse
+    with the loss channel per ``dts_signal``, and apply Algorithm 3's
+    masked update ``c ← c − m ∘ p · signal``. ``sketch`` is the
+    ALREADY-ROTATED [W, R, S] ring buffer (this round's sketch included),
+    required for the "corr"/"all" variants."""
+    gs = (geom_scores(deltas, mask, weights=weights)
+          if dts_signal in ("geom", "both", "all") else None)
+    cs = (colluder_scores(sketch, mask, weights=weights)
+          if dts_signal in ("corr", "all") else None)
+    signal = fused_trust_signal(dts_signal, loss_trust, gs, damaged, lam,
+                                corr=cs, lam_corr=lam_corr)
     return conf - sampled * P * signal

@@ -31,8 +31,15 @@ Each execution mode is a *stage selection* over this pipeline:
 The ``trust_update`` stage is itself a selection
 (``DeFTAConfig.dts_signal``): the paper's loss-delta signal (``"loss"``,
 bit-exact), the update-geometry signal of ``core.dts.geom_scores``
-(``"geom"``), or their fused sum (``"both"``) — one stage variant shared
-by every mode; see docs/ARCHITECTURE.md for the full stage contract.
+(``"geom"``), the cross-round collusion-correlation signal of
+``core.dts.colluder_scores`` (``"corr"`` — DTS v3, scored over the
+[W, R, S] sign-sketch ring buffer the state carries), or their fusions
+(``"both"`` = loss+geom, ``"all"`` = loss+geom+corr) — one stage variant
+shared by every mode; see docs/ARCHITECTURE.md for the full stage
+contract. The sketch history is plain carried state (``DeFTAState.sketch``
+/ ``PodState.sketch``): it rotates inside ``trust_update`` and merges
+through finalize/fire/tick like every other buffer, so the correlation
+signal rides the scan supersteps with zero extra dispatches.
 
 Transports are a pluggable stage (``make_transport``): ``in_jit`` wraps the
 einsum/pallas/sparse/quant backends of ``core.gossip.mix_pytree``;
@@ -89,10 +96,17 @@ class DeFTAState:
     wire_err: Any = None         # EF21 quantization residuals (stacked
                                  # like params; None when wire is lossless
                                  # or error feedback is off)
+    sketch: Any = None           # [W, R, S] sign-sketch ring buffer for
+                                 # the DTS v3 correlation trust signal
+                                 # (None unless dts_signal needs it — the
+                                 # "loss" golden state is unchanged)
 
 
 def init_state(key, task: Task, num_workers: int, *,
-               wire_error: bool = False) -> DeFTAState:
+               wire_error: bool = False, sketch=None) -> DeFTAState:
+    """``sketch``: the (R, S) ring-buffer dims from ``sketch_shape(cfg)``
+    when the correlation trust channel is on (zeros-initialized — empty
+    history self-calibrates to zero suspicion), else None."""
     keys = jax.random.split(key, num_workers + 1)
     params = jax.vmap(task.init)(keys[:num_workers])
     return DeFTAState(
@@ -108,6 +122,8 @@ def init_state(key, task: Task, num_workers: int, *,
         wire_err=jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
         if wire_error else None,
+        sketch=jnp.zeros((num_workers,) + tuple(sketch), jnp.float32)
+        if sketch else None,
     )
 
 
@@ -231,16 +247,34 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
 # Round programs: stage pipelines over a round context
 # ---------------------------------------------------------------------------
 
-def resolve_dts_signal(cfg: DeFTAConfig) -> bool:
-    """Validate ``cfg.dts_signal`` at build time and return whether the
-    geometric trust channel is traced into the round body. ``"loss"``
-    (the default) compiles to the bit-exact legacy trust_update — no
-    geometry ops, no extra PRNG splits — which is what the golden-parity
-    tests pin."""
-    if cfg.dts_signal not in ("loss", "geom", "both"):
+_DTS_CHANNELS = {"loss": (), "geom": ("geom",), "both": ("geom",),
+                 "corr": ("corr",), "all": ("geom", "corr")}
+
+
+def resolve_dts_signal(cfg: DeFTAConfig) -> frozenset:
+    """Validate ``cfg.dts_signal`` at build time and return the frozenset
+    of EXTRA trust channels traced into the round body: ``{"geom"}``
+    (geometry), ``{"corr"}`` (cross-round correlation), both for
+    ``"all"``. Falsy (empty) exactly when the legacy loss-only
+    trust_update compiles — ``"loss"`` (the default) traces no geometry
+    or sketch ops and no extra PRNG splits, which is what the
+    golden-parity tests pin."""
+    if cfg.dts_signal not in _DTS_CHANNELS:
         raise ValueError(f"unknown dts_signal {cfg.dts_signal!r} "
-                         f"(one of: loss, geom, both)")
-    return cfg.use_dts and cfg.dts_signal != "loss"
+                         f"(one of: {', '.join(_DTS_CHANNELS)})")
+    if not cfg.use_dts:
+        return frozenset()
+    return frozenset(_DTS_CHANNELS[cfg.dts_signal])
+
+
+def sketch_shape(cfg: DeFTAConfig):
+    """The (R, S) sketch ring-buffer dims the state needs under this
+    config, or None when the correlation channel is off — pass straight
+    to ``init_state(..., sketch=sketch_shape(cfg))`` (and the pod
+    analog) so state sizing and round building can never disagree."""
+    if "corr" in resolve_dts_signal(cfg):
+        return (cfg.dts_sketch_rounds, cfg.dts_sketch_dim)
+    return None
 
 
 def run_pipeline(stages, ctx: dict) -> dict:
@@ -288,7 +322,8 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     malicious_j = jnp.asarray(malicious)
     ltrain = local_train_fn(task, train, cfg.local_epochs,
                             dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
-    geom = resolve_dts_signal(cfg)
+    channels = resolve_dts_signal(cfg)
+    corr = "corr" in channels
 
     from repro.scenarios import attacks as attacks_mod
     from repro.scenarios.compile import ATTACK_CODE, epoch_view
@@ -461,19 +496,23 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     def stage_trust_update(c):
         """reads loss_agg, damaged, sampled, P, theta, state.{conf,
         best_loss, last_loss} (+ trained, start, eff_adj, fire on the
-        geometric path); writes conf, backup, best_loss, last_loss. The
+        geometric/correlation path, + state.sketch on "corr"/"all");
+        writes conf, backup, best_loss, last_loss (+ sketch: the rotated
+        ring buffer with this round's sign-sketch appended). The
         confidence update is ``c ← c − m ∘ p · signal`` where signal is
         the loss delta (dts_signal="loss", Algorithm 3 line 12,
-        bit-exact), the centered update-geometry scores ("geom"), or
-        their λ-weighted sum ("both") — geometry scores each peer's
-        LOCAL-UPDATE delta ``trained − start`` (the step it applied on
-        top of its adopted aggregate; post attack injection, so the
-        poison is exactly what gets scored) at per-(receiver, peer)
-        resolution."""
+        bit-exact), the centered update-geometry scores ("geom"), the
+        cross-round collusion-correlation scores ("corr"), or their
+        fusions ("both"/"all") — geometry and the sketches both observe
+        each peer's LOCAL-UPDATE delta ``trained − start`` (the step it
+        applied on top of its adopted aggregate; post attack injection,
+        so the poison is exactly what gets scored) at per-(receiver,
+        peer) resolution."""
         state = c["state"]
         loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
                                c["loss_agg"] - state.last_loss)
-        if geom:
+        c["sketch"] = state.sketch
+        if channels:
             # non-firing peers (stragglers) are excluded: fire_merge
             # discards their this-round delta, so peers never consume it
             # — scoring it would drift trust on phantom updates
@@ -481,10 +520,19 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                 - dts_mod.flatten_stacked(c["start"])
             gmask = c["eff_adj"] & c["fire"][None, :] \
                 if scenario is not None else c["eff_adj"]
+            if corr:
+                if state.sketch is None:
+                    raise ValueError(
+                        f"dts_signal={cfg.dts_signal!r} needs the sketch "
+                        f"ring buffer — build the state with "
+                        f"init_state(..., sketch=sketch_shape(cfg))")
+                c["sketch"] = dts_mod.update_sketch(state.sketch, deltas,
+                                                    seed=cfg.seed)
             c["conf"] = dts_mod.geom_confidence_update(
                 cfg.dts_signal, cfg.dts_geom_weight, state.conf,
                 c["sampled"], c["P"], loss_trust, c["damaged"], deltas,
-                gmask, c["theta"])
+                gmask, c["theta"], sketch=c["sketch"],
+                lam_corr=cfg.dts_corr_weight)
         else:
             c["conf"] = state.conf - c["sampled"] * c["P"] \
                 * loss_trust[:, None]
@@ -504,31 +552,36 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     def stage_finalize(c):
         """reads trained, backup, conf, best_loss, last_loss, key,
-        wire_err; writes next (the static-topology DeFTAState: every
-        worker advanced one epoch)."""
+        wire_err, sketch; writes next (the static-topology DeFTAState:
+        every worker advanced one epoch)."""
         state = c["state"]
         c["next"] = DeFTAState(
             params=c["trained"], backup=c["backup"], conf=c["conf"],
             best_loss=c["best_loss"], last_loss=c["last_loss"],
-            key=c["key"], epoch=state.epoch + 1, wire_err=c["wire_err"])
+            key=c["key"], epoch=state.epoch + 1, wire_err=c["wire_err"],
+            sketch=c["sketch"])
 
     def stage_fire_merge(c):
         """reads fire + everything finalize reads; writes next. The
         churn/straggler merge: non-firing workers freeze (dead workers
         are absent from eff_adj so nobody consumed them; stragglers
-        expose their stale params and skip their own round)."""
+        expose their stale params and skip their own round — including
+        their sketch-history row, which must not rotate on a round whose
+        delta peers never consumed)."""
         state, fire = c["state"], c["fire"]
         params = tree_select(fire, c["trained"], state.params)
         backup = tree_select(fire, c["backup"], state.backup)
         wire_err = tree_select(fire, c["wire_err"], state.wire_err) \
             if use_ef else state.wire_err
+        sketch = jnp.where(fire[:, None, None], c["sketch"],
+                           state.sketch) if corr else state.sketch
         c["next"] = DeFTAState(
             params=params, backup=backup,
             conf=jnp.where(fire[:, None], c["conf"], state.conf),
             best_loss=jnp.where(fire, c["best_loss"], state.best_loss),
             last_loss=jnp.where(fire, c["last_loss"], state.last_loss),
             key=c["key"], epoch=state.epoch + fire.astype(jnp.int32),
-            wire_err=wire_err)
+            wire_err=wire_err, sketch=sketch)
 
     stages = (
         ("split_keys", stage_split_keys),
@@ -680,13 +733,16 @@ def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
             backup = tree_select(fired, nxt.backup, state.backup)
             wire_err = tree_select(fired, nxt.wire_err, state.wire_err)
             conf = jnp.where(fired[:, None], nxt.conf, state.conf)
+            sketch = jnp.where(fired[:, None, None], nxt.sketch,
+                               state.sketch) \
+                if state.sketch is not None else state.sketch
             return DeFTAState(
                 params=params, backup=backup, conf=conf,
                 best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
                 last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
                 key=nxt.key,
                 epoch=jnp.where(fired, nxt.epoch, state.epoch),
-                wire_err=wire_err)
+                wire_err=wire_err, sketch=sketch)
 
         return jax.lax.cond(live, run, lambda s: s, state), None
 
@@ -851,11 +907,15 @@ class PodState:
     wire_err: Any = None
     backup: Any = None           # stacked [npods, ...] best-eval params
     best_loss: Any = None        # [npods] best held-out self-eval loss
+    sketch: Any = None           # [npods, R, S] sign-sketch ring buffer
+                                 # (DTS v3 correlation trust)
 
 
 def init_pod_state(key, npods: int, params=None, *,
                    wire_error: bool = False,
-                   time_machine: bool = False) -> PodState:
+                   time_machine: bool = False, sketch=None) -> PodState:
+    """``sketch``: the (R, S) dims from ``sketch_shape(cfg)`` when the
+    correlation trust channel is on, else None."""
     if (wire_error or time_machine) and params is None:
         raise ValueError("wire_error/time_machine pod state needs the "
                          "stacked params to size its buffers")
@@ -869,6 +929,8 @@ def init_pod_state(key, npods: int, params=None, *,
         if wire_error else None,
         backup=jax.tree.map(jnp.copy, params) if time_machine else None,
         best_loss=jnp.full((npods,), jnp.inf) if time_machine else None,
+        sketch=jnp.zeros((npods,) + tuple(sketch), jnp.float32)
+        if sketch else None,
     )
 
 
@@ -890,12 +952,18 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
     Without it (the default) ``damage_check`` stays the skipped stage of
     this selection.
 
-    Returns gossip_round(pstate, params, losses) -> (pstate, new_params):
-    ``params`` is the stacked [npods, ...] pod pytree, ``losses`` [npods]
-    the pods' current train losses (the loss-trust signal;
-    ``cfg.dts_signal`` adds/substitutes the geometric signal computed
-    from the pre-mix pod models). The scenario epoch axis is the GOSSIP
-    ROUND index (pstate.round).
+    Returns gossip_round(pstate, params, losses, start_params=None) ->
+    (pstate, new_params): ``params`` is the stacked [npods, ...] pod
+    pytree, ``losses`` [npods] the pods' current train losses (the
+    loss-trust signal; ``cfg.dts_signal`` adds/substitutes the
+    geometric/correlation signals). ``start_params`` — the stacked params
+    the pods DEPARTED from this round (last round's adopted
+    ``new_params``) — makes the geometry/correlation observables the true
+    local-train deltas ``sent − start``, matching the simulation engines
+    exactly (the launcher threads it); when omitted the signals fall back
+    to the round displacement ``out − params``, the legacy pod
+    approximation. The scenario epoch axis is the GOSSIP ROUND index
+    (pstate.round).
 
     ``num_appended`` attackers from the scenario occupy the LAST pod slots
     (paper §4.3: attackers newly joined) — the caller sizes the mesh so
@@ -918,7 +986,8 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                          f"pods, mesh has {w}")
     regen = scenario is not None and scenario.adj_seg is not None
     use_ef = transport.use_ef
-    geom = resolve_dts_signal(cfg)
+    channels = resolve_dts_signal(cfg)
+    corr = "corr" in channels
     # the pod time machine needs BOTH the flag and a held-out evaluator;
     # without self_eval the selection quietly stays TM-less (the
     # pre-existing pod contract — sim configs default time_machine=True
@@ -1000,11 +1069,14 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         c["agg"] = tree_select(c["damaged"], pstate.backup, c["agg"])
 
     def stage_attack_inject(c):
-        """reads agg, params, att_on, theta, k_noise; writes out: actively
+        """reads agg, params, att_on, theta, k_noise; writes out (actively
         attacking slots ship their poisoned send, everyone else adopts the
-        aggregate."""
+        aggregate) and att_active (the [W] mask of slots that actually
+        poisoned — what trust_update needs to reconstruct the true
+        sends)."""
         if scenario is None:
             c["out"] = c["agg"]
+            c["att_active"] = jnp.zeros((w,), bool)
             return
         # attackers replace their post-mix state with the poisoned send
         # (based on the aggregate + their own pre-mix params, same
@@ -1020,44 +1092,66 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         for kind in scenario.kinds_present:
             if kind in attacks_mod.MODEL_ATTACKS:
                 att = att | (scenario.attack_kind == ATTACK_CODE[kind])
-        c["out"] = tree_select(att & c["att_on"], poisoned, c["agg"])
+        c["att_active"] = att & c["att_on"]
+        c["out"] = tree_select(c["att_active"], poisoned, c["agg"])
 
     def stage_trust_update(c):
-        """reads losses, sampled, P, theta, out, params, pstate.{conf,
-        last_loss}; writes conf — the same fused loss/geometry signal as
-        the simulation engines, with each pod's round displacement (this
-        round's send ``out`` minus last round's ``params``) as the
-        geometry's observable."""
+        """reads losses, sampled, P, theta, out, params, att_active,
+        start_params, pstate.{conf, last_loss} (+ pstate.sketch on
+        "corr"/"all"); writes conf (+ sketch: the rotated ring buffer).
+        The same fused loss/geometry/correlation signal as the simulation
+        engines. The observable: with ``start_params`` it is each pod's
+        TRUE local-train delta — the post-attack send (poison for active
+        attackers, the trained params peers actually consume otherwise)
+        minus the params the pod departed from — exact parity with the
+        sim engines' ``trained − start``; without it, the legacy round
+        displacement ``out − params``."""
         pstate = c["pstate"]
         damaged = c.get("damaged")
         if damaged is None:
             damaged = jnp.zeros((w,), bool)
         loss_trust = jnp.where(damaged, dts_mod.DAMAGE_PENALTY,
                                c["losses"] - pstate.last_loss)
-        if geom:
+        c["sketch"] = pstate.sketch
+        if channels:
             # same contract as the sim engines (geom_confidence_update):
             # score the FULL live neighborhood (centering over only the
             # ~2 sampled peers degenerates to a pairwise coin flip);
             # non-firing pods' phantom deltas are excluded like
             # stragglers
-            deltas = dts_mod.flatten_stacked(c["out"]) \
-                - dts_mod.flatten_stacked(c["params"])
+            if c["start_params"] is not None:
+                sent = tree_select(c["att_active"], c["out"], c["params"])
+                deltas = dts_mod.flatten_stacked(sent) \
+                    - dts_mod.flatten_stacked(c["start_params"])
+            else:
+                deltas = dts_mod.flatten_stacked(c["out"]) \
+                    - dts_mod.flatten_stacked(c["params"])
             gmask = c["eff_adj"] & c["fire"][None, :] \
                 if scenario is not None else c["eff_adj"]
+            if corr:
+                if pstate.sketch is None:
+                    raise ValueError(
+                        f"dts_signal={cfg.dts_signal!r} needs the sketch "
+                        f"ring buffer — build the pod state with "
+                        f"init_pod_state(..., sketch=sketch_shape(cfg))")
+                c["sketch"] = dts_mod.update_sketch(pstate.sketch, deltas,
+                                                    seed=cfg.seed)
             c["conf"] = dts_mod.geom_confidence_update(
                 cfg.dts_signal, cfg.dts_geom_weight, pstate.conf,
                 c["sampled"], c["P"], loss_trust, damaged, deltas,
-                gmask, c["theta"])
+                gmask, c["theta"], sketch=c["sketch"],
+                lam_corr=cfg.dts_corr_weight)
         else:
             c["conf"] = pstate.conf - c["sampled"] * c["P"] \
                 * loss_trust[:, None]
 
     def stage_finalize(c):
-        """reads out, conf, losses, wire_err (+ fire/damaged/eval_loss);
-        writes next (PodState) and new_params. With a scenario, non-firing
-        pods freeze; with the time machine, improving rounds refresh the
-        backup (the ratchet: a damaged pod adopted its backup, trains on,
-        and re-backs-up once its held-out eval improves)."""
+        """reads out, conf, losses, wire_err, sketch (+ fire/damaged/
+        eval_loss); writes next (PodState) and new_params. With a
+        scenario, non-firing pods freeze (sketch rows included); with the
+        time machine, improving rounds refresh the backup (the ratchet: a
+        damaged pod adopted its backup, trains on, and re-backs-up once
+        its held-out eval improves)."""
         pstate = c["pstate"]
         if time_machine:
             improved = (c["eval_loss"] < pstate.best_loss) & ~c["damaged"]
@@ -1066,6 +1160,7 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
                                   pstate.best_loss)
         else:
             backup, best_loss = pstate.backup, pstate.best_loss
+        sketch = c["sketch"]
         if scenario is not None:
             fire = c["fire"]
             out = tree_select(fire, c["out"], c["params"])
@@ -1076,12 +1171,16 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
             if time_machine:
                 backup = tree_select(fire, backup, pstate.backup)
                 best_loss = jnp.where(fire, best_loss, pstate.best_loss)
+            if corr:
+                sketch = jnp.where(fire[:, None, None], c["sketch"],
+                                   pstate.sketch)
         else:
             out, wire_err = c["out"], c["wire_err"]
             conf, last_loss = c["conf"], c["losses"]
         c["next"] = PodState(conf=conf, last_loss=last_loss, key=c["key"],
                              round=pstate.round + 1, wire_err=wire_err,
-                             backup=backup, best_loss=best_loss)
+                             backup=backup, best_loss=best_loss,
+                             sketch=sketch)
         c["new_params"] = out
 
     stages = (
@@ -1096,8 +1195,9 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         ("finalize", stage_finalize),
     )
 
-    def gossip_round(pstate: PodState, params, losses):
-        c = {"pstate": pstate, "params": params, "losses": losses}
+    def gossip_round(pstate: PodState, params, losses, start_params=None):
+        c = {"pstate": pstate, "params": params, "losses": losses,
+             "start_params": start_params}
         run_pipeline(stages, c)
         return c["next"], c["new_params"]
 

@@ -150,12 +150,18 @@ def build_pod_gossip_step(cfg: ModelConfig, defta_cfg, npods: int, sizes, *,
     epoch axis is the GOSSIP ROUND index. ``self_eval(stacked_params) ->
     [npods] losses`` enables the pod time machine (held-out self-eval
     damage check) when ``defta_cfg.time_machine`` is set; the trust
-    signal follows ``defta_cfg.dts_signal`` (loss / geom / both).
+    signal follows ``defta_cfg.dts_signal`` (loss / geom / both / corr /
+    all — "corr"/"all" need the pod state built with
+    ``init_pod_state(..., sketch=sketch_shape(defta_cfg))``).
 
     Returns ``(gossip_round, pod_transport)`` where
-    ``gossip_round(pstate, stacked_params, losses) ->
+    ``gossip_round(pstate, stacked_params, losses, start_params=None) ->
     (pstate', stacked_params')`` (see ``engine.PodState`` /
-    ``engine.init_pod_state``)."""
+    ``engine.init_pod_state``). Pass ``start_params`` — the stacked
+    params the pods departed from this gossip interval — so the
+    geometry/correlation signals score TRUE local-train deltas
+    (``sent − start``), matching the simulation engines; omitted, they
+    fall back to the legacy round-displacement approximation."""
     del cfg                                    # model config not needed —
                                                # kept for signature parity
                                                # with build_gossip_step

@@ -132,12 +132,16 @@ def main():
                     help="--fl: DTS peer sampling + trust reweighting "
                          "across pods (default: listen to all live peers)")
     ap.add_argument("--dts-signal", default="loss",
-                    choices=["loss", "geom", "both"],
+                    choices=["loss", "geom", "both", "corr", "all"],
                     help="DTS trust signal (core/dts.py): the paper's "
                          "loss delta, the update-geometry scores "
                          "(cosine-to-median / norm-ratio / "
-                         "sign-agreement), or both fused — applies to "
-                         "--scenario sim runs and to --fl --pod-dts")
+                         "sign-agreement), the cross-round collusion-"
+                         "correlation scores (sign-sketch clustering, "
+                         "the anti-ALIE signal), or their fusions "
+                         "(both = loss+geom, all = loss+geom+corr) — "
+                         "applies to --scenario sim runs and to "
+                         "--fl --pod-dts")
     ap.add_argument("--pod-time-machine", action="store_true",
                     help="--fl: pod time machine — held-out self-eval "
                          "between gossip rounds; a pod whose candidate "
@@ -214,7 +218,9 @@ def main():
             import dataclasses as _dc
 
             from repro.config import DeFTAConfig
-            from repro.core.engine import init_pod_state
+            from repro.core.engine import (init_pod_state,
+                                           resolve_dts_signal,
+                                           sketch_shape)
             from repro.core.gossip import normalize_wire, \
                 uses_error_feedback
             from repro.launch.steps import build_pod_gossip_step
@@ -290,11 +296,20 @@ def main():
             pstate = init_pod_state(
                 jax.random.PRNGKey(101), pods, params,
                 wire_error=uses_error_feedback(dcfg) and not robust,
-                time_machine=dcfg.time_machine)
+                time_machine=dcfg.time_machine,
+                sketch=sketch_shape(dcfg))
             print(f"--fl pod pipeline: transport={pod_tr.kind} "
                   f"wire={pod_tr.wire or 'fp32'} ef={pod_tr.use_ef} "
                   f"aggregation={args.aggregation} dts={dcfg.use_dts} "
                   f"signal={dcfg.dts_signal} tm={dcfg.time_machine}")
+
+            # geometry/correlation trust signals score TRUE local-train
+            # deltas: snapshot what the pods depart from each gossip
+            # interval (jnp.copy — fl_step donates the params buffer, so
+            # a bare alias would be invalidated by the next train step)
+            track_start = bool(resolve_dts_signal(dcfg))
+            gossip_start = jax.tree.map(jnp.copy, params) \
+                if track_start else None
 
             losses = jnp.zeros((pods,))
             for i in range(args.steps):
@@ -305,7 +320,10 @@ def main():
                 params, opt_state, step, losses = fl_step(
                     params, opt_state, step, batch)
                 if (i + 1) % args.gossip_every == 0:
-                    pstate, params = gossip(pstate, params, losses)
+                    pstate, params = gossip(pstate, params, losses,
+                                            gossip_start)
+                    if track_start:
+                        gossip_start = jax.tree.map(jnp.copy, params)
                 print(f"step {i:4d} losses="
                       f"{[round(float(x), 4) for x in losses]} "
                       f"({time.time() - t0:.2f}s)"

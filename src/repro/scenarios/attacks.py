@@ -44,6 +44,15 @@ stress-tests for the geometric DTS v2 trust signal):
                     oscillation defeats a scalar loss-delta signal (each
                     quiet phase re-earns the confidence the attack
                     spent); per-peer geometry catches the active phases.
+* ``alie_decor``  — the counter-attack to DTS v3's correlation trust:
+                    alie colluders that each add INDEPENDENT decorrelation
+                    noise (``DECOR_FRAC`` × the stack std, per attacker)
+                    on top of the shared mean − z·std payload. The noise
+                    lowers their pairwise cross-round correlation toward
+                    the honest baseline — but collusion is load-bearing
+                    for ALIE: the noise also scatters the coordinated
+                    shift, so the attack trades detection-evasion against
+                    its own bite (the tradeoff docs/SCENARIOS.md reports).
 
 Both compile through the same device-side scenario arrays as the rest of
 the zoo (a new ATTACK_CODE each) — zero extra dispatches. ``theta_aware``
@@ -110,6 +119,27 @@ def alie(key, agg, trained, scale):
     return jax.tree.map(one, trained)
 
 
+DECOR_FRAC = 0.5         # alie_decor noise std as a fraction of stack std
+
+
+def alie_decor(key, agg, trained, scale):
+    """ALIE plus per-attacker decorrelation noise: each colluder ships
+    the shared ``mean − z·std`` payload perturbed by an INDEPENDENT
+    ``DECOR_FRAC·std·N(0,1)`` draw. Staying inside the variance envelope
+    (the noise is a fraction of the very std the shift hides in) keeps
+    the single-round stealth; the independent draws decorrelate the
+    colluders' sketches across rounds — at the cost of scattering the
+    coordinated shift that gives ALIE its bite."""
+    base = alie(key, agg, trained, scale)
+    leaves, treedef = jax.tree.flatten(base)
+    tleaves = jax.tree.leaves(trained)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        b + DECOR_FRAC * t.astype(b.dtype).std(axis=0, keepdims=True)
+        * jax.random.normal(k, b.shape, b.dtype)
+        for k, b, t in zip(keys, leaves, tleaves)])
+
+
 DODGE_MARGIN = 0.9       # dts_dodge ships at 90% of the observed margin
 THETA_FLOOR = 0.5        # theta_aware attacks while θ ≥ floor × uniform
 
@@ -159,7 +189,7 @@ def theta_aware(key, agg, trained, scale, theta=None):
 # model attacks only — label_flip acts on the data, not the payload
 MODEL_ATTACKS = {"noise": noise, "sign_flip": sign_flip, "scaling": scaling,
                  "alie": alie, "dts_dodge": dts_dodge,
-                 "theta_aware": theta_aware}
+                 "theta_aware": theta_aware, "alie_decor": alie_decor}
 
 # attacks that additionally observe the round's θ matrix
 THETA_ATTACKS = {"theta_aware"}

@@ -43,8 +43,10 @@ DEFAULT_SCALE = {"noise": 200.0, "sign_flip": 1.0, "scaling": 10.0,
                  # adaptive attacks: dts_dodge's scale multiplies the
                  # norm cap (1.0 = exactly the observed median update
                  # norm × DODGE_MARGIN); theta_aware's scale is the
-                 # underlying sign_flip magnitude while active
-                 "dts_dodge": 1.0, "theta_aware": 1.0}
+                 # underlying sign_flip magnitude while active;
+                 # alie_decor's scale is the underlying alie z-shift (its
+                 # decorrelation noise is DECOR_FRAC of the stack std)
+                 "dts_dodge": 1.0, "theta_aware": 1.0, "alie_decor": 1.5}
 
 
 def _check_worker(idx: int, w: int, what: str) -> int:

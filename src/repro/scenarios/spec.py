@@ -54,6 +54,11 @@ Adaptive attacks (observe the defense, then dodge it):
                     is above a floor; lies low (honest sends) once victims
                     stop trusting it, so loss-trust never builds a stable
                     negative trend
+* ``alie_decor``  — alie colluders that add per-attacker decorrelation
+                    noise to their shared payload, trading attack
+                    coherence for a lower cross-round correlation
+                    signature (the counter-attack to the DTS v3
+                    correlation-clustering signal)
 
 Stragglers advance only a ``speed`` fraction of epochs (a deterministic
 schedule drawn from ``seed`` at compile time — device-side it is just a
@@ -78,7 +83,7 @@ from typing import Tuple
 # codes by position, and compiled scenarios store those codes in device
 # arrays — only ever APPEND new kinds.
 ATTACK_KINDS = ("noise", "sign_flip", "scaling", "alie", "label_flip",
-                "dts_dodge", "theta_aware")
+                "dts_dodge", "theta_aware", "alie_decor")
 
 
 @dataclass(frozen=True)

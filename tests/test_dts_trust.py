@@ -1,11 +1,17 @@
-"""DTS v2 tests: geometric trust signals, adaptive attackers, the pod
-time machine, and the sample_peers degenerate-row bugfix.
+"""DTS v2/v3 tests: geometric trust signals, cross-round correlation
+trust (sketch ring buffer + colluder clustering), adaptive attackers,
+the pod time machine, and the sample_peers degenerate-row bugfix.
 
 * Golden parity: ``dts_signal="loss"`` (explicitly set) reproduces the
-  pre-PR DTS bit-identically on tests/golden_engine.json — the geometric
-  channel is a build-time gate, not a numeric change.
+  pre-PR DTS bit-identically on tests/golden_engine.json — the
+  geometric/correlation channels are build-time gates, not numeric
+  changes; the golden holds even with sketch buffers ALLOCATED.
 * Invariance: the geometric scores are scale-invariant (cosine/ratio/sign
   signals), permutation-equivariant over workers, and row-centered.
+* Correlation trust: the sketch ring buffer rotates (oldest round out,
+  newest in), planted colluder clusters score above the non-iid honest
+  spread, clean runs self-calibrate to ~0 suspicion, and isolated
+  workers / empty histories stay all-zero.
 * sample_peers: the old ``score >= top_k(...)[-1]`` threshold admitted
   >k entries on exact ties and leaned on a guard at -inf; the index-based
   ``topk_mask`` guarantees ≤ k unconditionally (regression-tested on
@@ -223,6 +229,214 @@ def test_geom_separates_label_flippers_better_than_loss():
 
 
 # ---------------------------------------------------------------------------
+# DTS v3: sketch ring buffer + cross-round correlation trust
+# ---------------------------------------------------------------------------
+
+def test_resolve_dts_signal_channels_and_sketch_shape():
+    from repro.core.engine import resolve_dts_signal, sketch_shape
+
+    def mk(sig, **kw):
+        return dataclasses.replace(DeFTAConfig(), dts_signal=sig, **kw)
+
+    assert resolve_dts_signal(mk("geom")) == frozenset({"geom"})
+    assert resolve_dts_signal(mk("both")) == frozenset({"geom"})
+    assert resolve_dts_signal(mk("corr")) == frozenset({"corr"})
+    assert resolve_dts_signal(mk("all")) == frozenset({"geom", "corr"})
+    assert not resolve_dts_signal(mk("corr", use_dts=False))
+    cfg = mk("corr")
+    assert sketch_shape(cfg) == (cfg.dts_sketch_rounds, cfg.dts_sketch_dim)
+    assert sketch_shape(mk("all")) is not None
+    for sig in ("loss", "geom", "both"):
+        assert sketch_shape(mk(sig)) is None
+
+
+def test_sketch_deltas_signed_deterministic_scale_free():
+    deltas = jax.random.normal(jax.random.PRNGKey(7), (5, 200))
+    s1 = dts.sketch_deltas(deltas, 16, seed=0)
+    assert s1.shape == (5, 16)
+    assert set(np.unique(np.asarray(s1))) <= {-1.0, 0.0, 1.0}
+    # deterministic per seed (the hash plan is trace-time numpy, cached)
+    np.testing.assert_array_equal(np.asarray(s1),
+                                  np.asarray(dts.sketch_deltas(deltas, 16,
+                                                               seed=0)))
+    # a different seed re-draws the projection
+    s3 = dts.sketch_deltas(deltas, 16, seed=1)
+    assert np.abs(np.asarray(s1) - np.asarray(s3)).max() > 0
+    # sign sketches are magnitude-free: scaling cannot hide collusion
+    np.testing.assert_array_equal(
+        np.asarray(dts.sketch_deltas(deltas * 100.0, 16, seed=0)),
+        np.asarray(s1))
+
+
+def test_update_sketch_ring_rotation():
+    w, r, s, d = 3, 4, 8, 64
+    hist = jnp.zeros((w, r, s))
+    rounds = []
+    for i in range(r + 2):                 # overfill: oldest must drop out
+        deltas = jax.random.normal(jax.random.PRNGKey(10 + i), (w, d))
+        rounds.append(dts.sketch_deltas(deltas, s, seed=0))
+        hist = dts.update_sketch(hist, deltas, seed=0)
+        assert hist.shape == (w, r, s)
+    # newest in the last slot, shift-concat keeps exactly the last r rounds
+    want = jnp.stack(rounds[-r:], axis=1)
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(want))
+
+
+def _colluder_history(w=10, k=3, r=8, s=32, d=128, noise=0.15, seed=0):
+    """Ring buffer after r rounds: the first k workers collude (a shared
+    per-round base delta + small per-colluder jitter); the rest draw
+    independent directions (non-iid honest spread)."""
+    hist = jnp.zeros((w, r, s))
+    key = jax.random.PRNGKey(seed)
+    for _ in range(r):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        shared = jax.random.normal(k1, (1, d))
+        coll = shared + noise * jax.random.normal(k2, (k, d))
+        honest = jax.random.normal(k3, (w - k, d))
+        hist = dts.update_sketch(hist, jnp.concatenate([coll, honest]),
+                                 seed=0)
+    return hist
+
+
+def test_colluder_scores_flags_planted_cluster():
+    w, k = 10, 3
+    hist = _colluder_history(w=w, k=k)
+    s = np.asarray(dts.colluder_scores(hist, jnp.ones((w, w), bool)))
+    # every honest receiver ranks every colluder above every honest peer
+    for i in range(w - k):
+        row = s[k + i]
+        honest_cols = np.delete(row[k:], i)      # drop the (zero) diagonal
+        assert row[:k].min() > honest_cols.max(), (i, row)
+
+
+def test_colluder_scores_clean_run_self_calibrates():
+    # all-honest non-iid history: the median+MAD baseline absorbs the
+    # natural correlation spread, so suspicion stays near zero — the
+    # planted-cluster signal is an order of magnitude larger
+    w = 10
+    clean = np.asarray(dts.colluder_scores(
+        _colluder_history(w=w, k=0), jnp.ones((w, w), bool)))
+    planted = np.asarray(dts.colluder_scores(
+        _colluder_history(w=w, k=3), jnp.ones((w, w), bool)))
+    assert np.abs(clean).max() < 0.1 * planted.max(), (
+        np.abs(clean).max(), planted.max())
+
+
+def test_colluder_scores_edge_cases():
+    w = 6
+    hist = _colluder_history(w=w, k=2, r=4, s=16, d=64)
+    mask = jnp.ones((w, w), bool).at[0].set(False)   # 0 hears nobody
+    s = dts.colluder_scores(hist, mask)
+    assert bool(jnp.isfinite(s).all())
+    # isolated receivers and the diagonal (self) are never scored
+    assert float(jnp.abs(s[0]).max()) == 0.0
+    assert float(jnp.abs(jnp.diagonal(s)).max()) == 0.0
+    # scored rows are centered over each receiver's peer set
+    wts = jnp.where(mask & ~jnp.eye(w, dtype=bool), 1.0, 0.0)
+    np.testing.assert_allclose(np.asarray((wts * s).sum(1)[1:]), 0.0,
+                               atol=1e-4)
+    # cold start: an all-zero ring buffer accuses nobody
+    z = dts.colluder_scores(jnp.zeros((w, 4, 16)), jnp.ones((w, w), bool))
+    assert float(jnp.abs(z).max()) == 0.0
+    # tiny peer set (2 workers): MAD collapses to 0, stays finite/zero
+    s2 = dts.colluder_scores(hist[:2], jnp.ones((2, 2), bool))
+    assert bool(jnp.isfinite(s2).all())
+
+
+def test_loss_golden_bit_identical_with_sketch_allocated(env):
+    """Allocating the sketch buffers must not perturb the "loss" path:
+    the ring buffer is dead state there (never read, never rotated) and
+    the digest stays bit-identical to the golden."""
+    from repro.core.defta import _pad_workers, build_round_fn
+    from repro.core.engine import drive_epochs, init_state
+    from repro.core.gossip import uses_error_feedback
+    from repro.core.topology import make_topology
+
+    data, task, cfg, train = env
+    cfg = dataclasses.replace(cfg, dts_signal="loss")
+    w = cfg.num_workers
+    adj = make_topology(cfg.topology, w, cfg.avg_peers, cfg.seed)
+    data, sizes = _pad_workers(data, data["sizes"], 0)
+    state = init_state(jax.random.PRNGKey(0), task, w,
+                       wire_error=uses_error_feedback(cfg),
+                       sketch=(cfg.dts_sketch_rounds, cfg.dts_sketch_dim))
+    assert state.sketch is not None
+    rnd_fn = build_round_fn(task, cfg, train, adj, sizes,
+                            np.zeros(w, bool))
+    jdata = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("x", "y", "mask")}
+    stats = {}
+    st, _ = drive_epochs(rnd_fn, state, jdata, 6, stats=stats)
+    # the loss path never rotated the buffer ...
+    assert float(jnp.abs(st.sketch).max()) == 0.0
+    # ... and everything it DOES compute matches the golden bit-for-bit
+    assert defta_state_digest(st, stats) == GOLDEN["defta_static"]
+
+
+def test_corr_signal_keeps_dispatch_parity_and_rotates_sketch(env):
+    data, task, cfg, train = env
+    stats_l, stats_c = {}, {}
+    st_l, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train,
+                              data, epochs=4, stats=stats_l)
+    cfg_c = dataclasses.replace(cfg, dts_signal="corr")
+    st_c, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg_c, train,
+                              data, epochs=4, stats=stats_c)
+    # correlation trust is data flow inside the scan: same dispatch count
+    assert stats_c["dispatches"] == stats_l["dispatches"]
+    assert st_l.sketch is None and st_c.sketch is not None
+    # the buffer rotates: 4 rounds into an R-deep ring, the newest slot
+    # carries signs and the oldest is still cold
+    assert float(jnp.abs(st_c.sketch[:, -1, :]).max()) > 0
+    assert float(jnp.abs(st_c.sketch[:, 0, :]).max()) == 0.0
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(st_c.params))
+
+
+def test_corr_signal_requires_sketch_state(env):
+    from repro.core.engine import init_state
+    data, task, cfg, train = env
+    cfg = dataclasses.replace(cfg, dts_signal="corr")
+    w = cfg.num_workers
+    adj = np.eye(w, k=1, dtype=bool) | np.eye(w, k=-1, dtype=bool)
+    from repro.core.defta import build_round_fn
+    rnd = build_round_fn(task, cfg, train, adj, np.full(w, 64),
+                         np.zeros(w, bool))
+    state = init_state(jax.random.PRNGKey(0), task, w)     # no sketch
+    jdata = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("x", "y", "mask")}
+    with pytest.raises(ValueError, match="sketch"):
+        rnd(state, jdata)
+
+
+def test_corr_separates_alie_colluders_better_than_loss_and_geom():
+    """The v3 headline at test scale: under alie × non-iid the colluders'
+    identical payloads give near-1 cross-round sketch correlation, so the
+    correlation signal must place LESS sampling weight on them than both
+    the loss and the geometric signal (fixed seed — deterministic)."""
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+
+    w, k = 12, 5
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=100, alpha=0.5)
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(name="alie", attacks=tuple(
+        AttackSpec("alie") for _ in range(k)))
+
+    shares = {}
+    for sig in ("loss", "geom", "corr"):
+        cfg = DeFTAConfig(num_workers=w, avg_peers=4, num_sampled=2,
+                          local_epochs=3, dts_signal=sig)
+        st, adj, mal, _ = run_defta(jax.random.PRNGKey(0), task, cfg,
+                                    train, data, epochs=24, scenario=spec)
+        theta = dts.sample_weights(st.conf, jnp.asarray(adj))
+        shares[sig] = float(np.asarray(theta)[~mal][:, mal].sum(1).mean())
+    assert shares["corr"] < shares["loss"], shares
+    assert shares["corr"] < shares["geom"], shares
+
+
+# ---------------------------------------------------------------------------
 # Adaptive attackers
 # ---------------------------------------------------------------------------
 
@@ -274,6 +488,22 @@ def test_theta_aware_attacks_only_while_trusted():
                                   np.asarray(flipped["x"]))
 
 
+def test_alie_decor_per_attacker_noise_inside_envelope():
+    from repro.scenarios.attacks import DECOR_FRAC, alie, alie_decor
+    key = jax.random.PRNGKey(8)
+    agg, trained = _stack(key, w=6)
+    base = alie(key, agg, trained, jnp.ones(6))
+    out = alie_decor(key, agg, trained, jnp.ones(6))
+    # alie colluders are IDENTICAL; alie_decor breaks the tie per attacker
+    assert np.abs(np.asarray(base["x"][0] - base["x"][1])).max() == 0.0
+    assert np.abs(np.asarray(out["x"][0] - out["x"][1])).max() > 0.0
+    # but the decorrelation noise stays inside the variance envelope the
+    # shared payload hides in (DECOR_FRAC × stack std, per coordinate)
+    sd = np.asarray(trained["x"].std(axis=0, keepdims=True))
+    dev = np.abs(np.asarray(out["x"]) - np.asarray(base["x"]))
+    assert (dev <= 6.0 * DECOR_FRAC * sd + 1e-6).all()
+
+
 def test_adaptive_attacks_compile_with_zero_extra_dispatches(env):
     data, task, cfg, train = env
     spec = ScenarioSpec(name="adaptive",
@@ -294,7 +524,7 @@ def test_adaptive_attack_codes_appended_not_reordered():
     from repro.scenarios.compile import ATTACK_CODE
     assert ATTACK_CODE == {"noise": 1, "sign_flip": 2, "scaling": 3,
                            "alie": 4, "label_flip": 5, "dts_dodge": 6,
-                           "theta_aware": 7}
+                           "theta_aware": 7, "alie_decor": 8}
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +533,7 @@ def test_adaptive_attack_codes_appended_not_reordered():
 
 def _pod_setup(dts_signal="loss", time_machine=False, use_dts=True):
     from repro.core.engine import (build_pod_round, init_pod_state,
-                                   make_transport)
+                                   make_transport, sketch_shape)
     from repro.core.topology import make_topology
 
     pods = 4
@@ -320,7 +550,8 @@ def _pod_setup(dts_signal="loss", time_machine=False, use_dts=True):
                           adj=adj, self_eval=self_eval)
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (pods, 16))}
     pstate = init_pod_state(jax.random.PRNGKey(1), pods, params,
-                            time_machine=time_machine)
+                            time_machine=time_machine,
+                            sketch=sketch_shape(cfg))
     return rnd, pstate, params, pods
 
 
@@ -379,6 +610,32 @@ def test_pod_geom_trust_runs_and_updates_conf():
     assert int(pstate.round) == 2
     assert float(jnp.abs(pstate.conf).max()) > 0
     assert bool(jnp.isfinite(out["w"]).all())
+
+
+def test_pod_corr_trust_runs_and_rotates_sketch():
+    rnd, pstate, params, pods = _pod_setup(dts_signal="corr")
+    assert pstate.sketch is not None
+    rnd_j = jax.jit(rnd)
+    pstate, out = rnd_j(pstate, params, jnp.zeros((pods,)))
+    # this round's sign-sketch landed in the newest ring slot
+    assert float(jnp.abs(pstate.sketch[:, -1, :]).max()) > 0
+    assert float(jnp.abs(pstate.sketch[:, 0, :]).max()) == 0.0
+    assert bool(jnp.isfinite(out["w"]).all())
+    assert bool(jnp.isfinite(pstate.conf).all())
+
+
+def test_pod_gossip_start_params_changes_geometry():
+    # the parity fix: passing start_params makes the pod path score the
+    # TRUE local-train delta (sent − start) instead of the legacy
+    # out − params displacement — a genuinely different signal
+    rnd, pstate, params, pods = _pod_setup(dts_signal="geom")
+    rnd_j = jax.jit(rnd)
+    start = {"w": params["w"] + 0.5 * jax.random.normal(
+        jax.random.PRNGKey(9), params["w"].shape)}
+    p_legacy, _ = rnd_j(pstate, params, jnp.zeros((pods,)))
+    p_parity, _ = rnd_j(pstate, params, jnp.zeros((pods,)), start)
+    assert float(jnp.abs(p_legacy.conf - p_parity.conf).max()) > 0
+    assert bool(jnp.isfinite(p_parity.conf).all())
 
 
 # ---------------------------------------------------------------------------
