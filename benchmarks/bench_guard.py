@@ -34,7 +34,13 @@ fails (exit 1) when the headline wins regress:
   colluders on 20 vanilla workers ≈ 29% malicious), corr or all must
   beat the best PR 5 signal (loss/geom/both) by ≥ 0.05 absolute honest
   accuracy, and the best corr-family accuracy may not fall more than
-  0.05 below the committed baseline's (the alie accuracy floor).
+  0.05 below the committed baseline's (the alie accuracy floor);
+* the cross-device participation engine must keep its contracts: every
+  sampled-cohort run stays within the superstep dispatch budget
+  (gather/scatter fused into the scan), clean cross-device lands within
+  0.05 of clean full-participation, and the best corr-family probe
+  accuracy under 29%-of-enrolled label_flip+alie stays within 0.05 of
+  the dense alie × non-iid headline (the sparse-observation trust gate).
 
 Interpret-mode timings are noisy; the guard compares RATIOS within one run
 (dense/sparse from the same process share the noise), not absolute times
@@ -214,6 +220,54 @@ def check(baseline, fresh, tolerance):
                 f"alie accuracy floor broken: best corr-family honest "
                 f"accuracy {new_best:.3f} vs committed {base_best:.3f} "
                 f"(floor {base_best - 0.05:.3f})")
+
+    cd = fresh.get("cross_device")
+    if not cd:
+        failures.append("fresh bench has no cross_device entry")
+    else:
+        budget = cd["dispatch_budget"]
+        runs = {"clean": cd["clean"], **{f"attacked:{s}": r for s, r
+                                         in cd["attacked"].items()}}
+        print("cross-device dispatches: "
+              + " ".join(f"{n}={r['dispatches']}" for n, r in runs.items())
+              + f" (budget {budget})")
+        for name, r in runs.items():
+            if r["dispatches"] > budget:
+                failures.append(
+                    f"cross-device {name} run took {r['dispatches']} "
+                    f"dispatches > budget {budget} — the gather/scatter "
+                    f"participation stage must stay fused in the scanned "
+                    f"superstep, never a per-round host round-trip")
+        clean_gap = cd["clean_dense_acc"] - cd["clean"]["acc"]
+        print(f"cross-device clean parity: sampled {cd['clean']['acc']:.3f}"
+              f" vs full-participation {cd['clean_dense_acc']:.3f} "
+              f"(gap {clean_gap:+.3f})")
+        if clean_gap > 0.05:
+            failures.append(
+                f"clean cross-device accuracy {cd['clean']['acc']:.3f} "
+                f"fell more than 0.05 below clean full-participation "
+                f"{cd['clean_dense_acc']:.3f} — sampled-cohort training "
+                f"is no longer equivalent to the dense world")
+        # the sparse-observation trust headline: best corr-family probe
+        # accuracy under 29%-of-enrolled label_flip+alie may not fall
+        # more than 0.05 below the DENSE alie × non-iid headline cell
+        dense_ref = max((cd.get("dense_alie_accs", {}).get(s, 0.0)
+                         for s in ("corr", "all")), default=0.0)
+        cd_best = max(r["acc"] for r in cd["attacked"].values())
+        if dense_ref:
+            print(f"cross-device sparse-trust headline: best attacked "
+                  f"probe acc {cd_best:.3f} vs dense headline "
+                  f"{dense_ref:.3f} (floor {dense_ref - 0.05:.3f})")
+            if cd_best < dense_ref - 0.05:
+                failures.append(
+                    f"sparse-observation trust headline broken: best "
+                    f"cross-device attacked accuracy {cd_best:.3f} fell "
+                    f"more than 0.05 below the dense alie headline "
+                    f"{dense_ref:.3f} — DTS no longer survives sparse "
+                    f"observation of the colluders")
+        else:
+            failures.append("cross_device entry has no dense_alie_accs "
+                            "reference to gate the sparse-trust headline")
     return failures
 
 

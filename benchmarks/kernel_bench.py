@@ -8,9 +8,11 @@ plus the super-step driver check (dispatch count and per-epoch-driver loss
 agreement), the quantized-convergence parity check (int8 wire with EF21
 error feedback lands within tolerance of the fp32 run), the geometric and
 correlation trust_update cost contracts (dispatch parity + superstep
-overhead vs loss-only DTS, sketch ring buffer included) and the DTS v2/v3
+overhead vs loss-only DTS, sketch ring buffer included), the DTS v2/v3
 headline cells (label_flip and alie × signal on the non-iid partition,
-benchmarks/table_trust.py)."""
+benchmarks/table_trust.py) and the cross-device participation
+acceptance runs (dispatch parity, clean sampled-vs-dense parity, the
+sparse-observation trust headline)."""
 from __future__ import annotations
 
 import json
@@ -38,6 +40,23 @@ def _time(fn, *args, iters=9):
         jax.block_until_ready(fn(*args))
         best = min(best, time.time() - t0)
     return best * 1e6
+
+
+def _interleaved_best(runners, iters=3):
+    """Best-of-``iters`` seconds for each runner, with the timed runs
+    INTERLEAVED round-robin (a, b, a, b, ...) instead of blocked. The
+    trust-overhead gates in bench_guard are RATIOS between runners; when
+    each runner's runs are blocked together, CPU frequency scaling and
+    cache-warmth drift between the blocks (each separated by seconds of
+    compilation) leaks straight into the ratio. Interleaving makes every
+    runner sample the same machine states."""
+    best = [float("inf")] * len(runners)
+    for _ in range(iters):
+        for i, run in enumerate(runners):
+            t0 = time.time()
+            run()
+            best[i] = min(best[i], time.time() - t0)
+    return best
 
 
 def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
@@ -131,12 +150,13 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     geom_trust = bench_geom_trust()
     corr_trust = bench_corr_trust()
     trust_grid = bench_trust_grid()
+    cross_device = bench_cross_device(trust_grid=trust_grid)
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
                    quant_convergence=quant_convergence,
                    scenario_overhead=scenario_overhead,
                    fedavg_dispatch=fedavg_dispatch,
                    geom_trust=geom_trust, corr_trust=corr_trust,
-                   trust_grid=trust_grid)
+                   trust_grid=trust_grid, cross_device=cross_device)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -330,7 +350,9 @@ def bench_geom_trust(epochs: int = 20):
     local_epochs=1 microbench where any fixed cost looks huge. Compile
     is excluded (the one-off trace/compile delta is reported separately):
     the two signals compile DIFFERENT graphs, and compile-time variance
-    across CI machines would swamp a ratio gate."""
+    across CI machines would swamp a ratio gate. The best-of-3 timed
+    runs are INTERLEAVED across the two signals (see _interleaved_best)
+    so machine-state drift cancels out of the ratio."""
     import dataclasses
 
     from repro.config import DeFTAConfig, TrainConfig
@@ -373,15 +395,12 @@ def bench_geom_trust(epochs: int = 20):
         t0 = time.time()
         jax.block_until_ready(chunk(st, jdata))      # trace + compile
         compile_s = time.time() - t0
-        best = float("inf")
-        for _ in range(3):
-            t0 = time.time()
-            jax.block_until_ready(chunk(st, jdata))  # one XLA dispatch
-            best = min(best, time.time() - t0)
-        return best, compile_s
+        # one XLA dispatch per call; timing happens interleaved below
+        return (lambda: jax.block_until_ready(chunk(st, jdata))), compile_s
 
-    loss_s, loss_compile = measure("loss")
-    geom_s, geom_compile = measure("geom")
+    run_loss, loss_compile = measure("loss")
+    run_geom, geom_compile = measure("geom")
+    loss_s, geom_s = _interleaved_best([run_loss, run_geom])
     ratio = geom_s / loss_s
     # dispatch parity on the end-to-end driver (stats accounting)
     from repro.core.defta import run_defta
@@ -412,8 +431,10 @@ def bench_corr_trust(epochs: int = 20):
     scan state, never control flow) and hold the STEADY-STATE scanned
     superstep within the ≤ 1.25× overhead gate at the paper's round shape
     (local_epochs=10). Same methodology as bench_geom_trust: compile
-    excluded, best-of-3 single-dispatch chunks, alie colluders in the
-    scenario so the sketch path scores real collusion."""
+    excluded, best-of-3 single-dispatch chunks timed INTERLEAVED across
+    the three signals (so CPU frequency/cache drift cancels out of the
+    ratios), alie colluders in the scenario so the sketch path scores
+    real collusion."""
     import dataclasses
 
     from repro.config import DeFTAConfig, TrainConfig
@@ -457,16 +478,13 @@ def bench_corr_trust(epochs: int = 20):
         t0 = time.time()
         jax.block_until_ready(chunk(st, jdata))      # trace + compile
         compile_s = time.time() - t0
-        best = float("inf")
-        for _ in range(3):
-            t0 = time.time()
-            jax.block_until_ready(chunk(st, jdata))  # one XLA dispatch
-            best = min(best, time.time() - t0)
-        return best, compile_s
+        # one XLA dispatch per call; timing happens interleaved below
+        return (lambda: jax.block_until_ready(chunk(st, jdata))), compile_s
 
-    loss_s, _ = measure("loss")
-    corr_s, _ = measure("corr")
-    all_s, _ = measure("all")
+    run_loss, _ = measure("loss")
+    run_corr, _ = measure("corr")
+    run_all, _ = measure("all")
+    loss_s, corr_s, all_s = _interleaved_best([run_loss, run_corr, run_all])
     ratio_corr, ratio_all = corr_s / loss_s, all_s / loss_s
     # dispatch parity on the end-to-end driver (stats accounting)
     base = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
@@ -513,6 +531,104 @@ def bench_trust_grid(epochs: int = 40):
     return dict(epochs=epochs, headline_ok=bool(ok), accs=accs,
                 alie_headline_ok=bool(alie_ok), alie_accs=alie_accs,
                 rows=rows)
+
+
+def bench_cross_device(rounds: int = 120, dense_epochs: int = 40,
+                       trust_grid=None):
+    """Cross-device acceptance bench, CI-gated by bench_guard: the
+    churn-as-default participation engine (enrolled population, sampled
+    cohorts, default-on dropout/stragglers, sparsely-observed DTS with
+    lazy confidence decay) must
+
+    * keep DISPATCH PARITY — a T-round world is ceil(T / eval_every)
+      XLA dispatches, gather/scatter fused into the scan body;
+    * match clean full-participation: an all-honest cross-device world
+      (participation rate ~0.43, so ``rounds`` gives each user at least
+      the ``dense_epochs`` training budget) lands within the margin of
+      the dense clean run; and
+    * hold the DTS v3 headline under sparse observation: label_flip +
+      alie at ~29% of the ENROLLED population (so ~29% of every cohort
+      in expectation, but any one attacker is only observed every ~1/rate
+      rounds) must keep final honest probe accuracy within the margin of
+      the DENSE alie × non-iid headline cell (``trust_grid``).
+    """
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.cross_device import (evaluate_probe, probe_indices,
+                                         run_cross_device)
+    from repro.core.defta import evaluate, run_defta
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios.cross_device import CrossDeviceSpec, compile_world
+
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    eval_every = 30
+    budget = -(-rounds // eval_every)
+
+    def cd_run(enrolled, k, attacks, signal, *, avg_peers=4,
+               num_sampled=2):
+        cfg = DeFTAConfig(num_workers=enrolled, avg_peers=avg_peers,
+                          num_sampled=num_sampled, local_epochs=3,
+                          dts_signal=signal, dts_conf_decay=0.98, seed=0)
+        data = federated_dataset("vector", enrolled,
+                                 np.random.default_rng(0),
+                                 n_per_worker=120, alpha=0.5)
+        spec = CrossDeviceSpec(enrolled=enrolled, sample_k=k,
+                               avg_peers=avg_peers, availability=0.7,
+                               dropout=0.05, straggle=0.10,
+                               attacks=attacks, seed=0)
+        world = compile_world(spec, rounds)
+        stats = {}
+        t0 = time.time()
+        state, _ = run_cross_device(
+            jax.random.PRNGKey(0), task, cfg, train, data, world=world,
+            epochs=rounds, eval_every=eval_every,
+            test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+        pix = probe_indices(world, 32, seed=0)
+        m, s = evaluate_probe(task, state, data["test_x"],
+                              data["test_y"], pix)
+        return dict(acc=m, std=s, dispatches=stats["dispatches"],
+                    wall_s=time.time() - t0,
+                    participation_rate=world.summary()
+                    ["participation_rate"])
+
+    # clean full-participation reference: dense run_defta, same shards
+    data_d = federated_dataset("vector", 20, np.random.default_rng(0),
+                               n_per_worker=120, alpha=0.5)
+    cfg_d = DeFTAConfig(num_workers=20, avg_peers=4, num_sampled=2,
+                        local_epochs=3, seed=0)
+    st, _, mal, _ = run_defta(jax.random.PRNGKey(0), task, cfg_d, train,
+                              data_d, epochs=dense_epochs)
+    clean_dense_acc, _, _ = evaluate(task, st, data_d["test_x"],
+                                     data_d["test_y"], mal)
+
+    clean = cd_run(20, 10, (), "loss")
+    # 20 honest + 4 label_flip + 4 alie = 28.6% of enrolled malicious —
+    # the dense headline's attacker fraction, now sparsely observed.
+    # The attacked cohort listens wider (degree 6, sample 3) than the
+    # dense world's 4/2: with any one peer observed only every ~1/rate
+    # rounds, per-pair trust evidence accrues 1/rate as fast, and a
+    # denser cohort graph buys the evidence back without touching the
+    # threat model.
+    attacks = (("label_flip", 4 / 28), ("alie", 4 / 28))
+    attacked = {sig: cd_run(28, 14, attacks, sig, avg_peers=6,
+                            num_sampled=3)
+                for sig in ("corr", "all")}
+
+    dense_alie_accs = (trust_grid or {}).get("alie_accs", {})
+    print(f"cross-device clean: dense {clean_dense_acc:.3f} vs sampled "
+          f"{clean['acc']:.3f} (rate {clean['participation_rate']:.2f}, "
+          f"{clean['dispatches']} dispatches, budget {budget})")
+    for sig, r in attacked.items():
+        ref = dense_alie_accs.get(sig)
+        print(f"cross-device attacked 29% × {sig}: probe acc "
+              f"{r['acc']:.3f} (dense headline "
+              f"{'n/a' if ref is None else format(ref, '.3f')}, "
+              f"{r['dispatches']} dispatches, {r['wall_s']:.0f}s)")
+    return dict(rounds=rounds, dense_epochs=dense_epochs,
+                eval_every=eval_every, dispatch_budget=budget,
+                clean_dense_acc=float(clean_dense_acc), clean=clean,
+                attacked=attacked, dense_alie_accs=dense_alie_accs)
 
 
 def run():

@@ -246,6 +246,35 @@ class DeFTAConfig:
     dts_sketch_dim: int = 64         # S: count-sketch width per round
                                      # (sketch state is [W, R, S] — tiny
                                      # next to the model params)
+    dts_conf_decay: float = 1.0      # per-round multiplicative decay of a
+                                     # worker's confidence row toward the
+                                     # uninformative prior (0). 1.0 = off
+                                     # (dense-participation default, keeps
+                                     # the "loss" goldens bit-identical);
+                                     # cross-device worlds default it on so
+                                     # a peer last seen 400 rounds ago is
+                                     # not trusted on stale evidence —
+                                     # applied lazily at gather time as
+                                     # decay ** (rounds since last fired)
+    dts_min_obs: int = 2             # minimum stamp-matched sketch-slot
+                                     # pairs before a (i, j) correlation
+                                     # entry feeds the colluder suspicion
+                                     # score (cross-device sparse
+                                     # observation: peers seen together in
+                                     # fewer than this many common rounds
+                                     # contribute neither suspicion nor
+                                     # baseline — colluders can't hide in
+                                     # sampling noise, singletons can't be
+                                     # framed by it)
+    max_staleness: int = 0           # drop a peer's contribution from the
+                                     # merge when its model is more than
+                                     # this many rounds older than the
+                                     # receiver's (0 = off). Sync engines
+                                     # compare per-worker epoch counters
+                                     # (stragglers/churn open gaps); the
+                                     # cross-device path compares global
+                                     # rounds since the peer last fired.
+                                     # Build-time gated: 0 adds no ops
     time_machine: bool = True        # §3.3 damage check + backup rollback.
                                      # Off for the classical robust-agg
                                      # baselines: those algorithms have no

@@ -1,0 +1,106 @@
+"""Cross-device runner: drive the participation round program end to end.
+
+``run_cross_device`` is the cross-device analog of ``run_defta``: build
+the population state (every buffer sized to the enrolled N), build the
+gather → dense-k-block → scatter round program
+(``engine.build_cross_device_round``), and hand it to the SAME
+``drive_epochs`` superstep driver — a T-round run with eval windows is
+ceil(T / eval_every) XLA dispatches, gather/scatter fused into the scan
+body.
+
+Evaluation at population scale can't afford to test-forward 10k models
+every eval point, so it probes a fixed random subset of HONEST users
+(``probe``): mean/std test accuracy over the probe is the headline
+statistic (with non-iid shards and uniform participation the probe is an
+unbiased estimate of the honest-population mean).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core.engine import (build_cross_device_round, drive_epochs,
+                               init_cross_device_state, sketch_shape)
+from repro.core.gossip import uses_error_feedback
+from repro.core.tasks import Task
+from repro.scenarios.cross_device import (CompiledWorld, CrossDeviceSpec,
+                                          compile_world)
+
+
+def resolve_world(world, epochs: int) -> CompiledWorld:
+    """Accept a CrossDeviceSpec (compiled here over ``epochs``) or an
+    already-compiled CompiledWorld (rejected if shorter than the run —
+    the per-round schedules would index out of range)."""
+    if isinstance(world, CrossDeviceSpec):
+        world = compile_world(world, epochs)
+    if not isinstance(world, CompiledWorld):
+        raise TypeError(f"world must be a CrossDeviceSpec or "
+                        f"CompiledWorld, got {type(world).__name__}")
+    if world.epochs < epochs:
+        raise ValueError(f"world compiled for {world.epochs} rounds, "
+                         f"run wants {epochs}")
+    return world
+
+
+def probe_indices(world: CompiledWorld, probe: int,
+                  seed: int = 0) -> np.ndarray:
+    """A fixed random subset of HONEST users to evaluate."""
+    honest = np.flatnonzero(~world.malicious)
+    if honest.size == 0:
+        raise ValueError("no honest users to probe")
+    rng = np.random.default_rng(seed + 0x9E3779B9)
+    take = min(probe, honest.size)
+    return np.sort(rng.permutation(honest)[:take]).astype(np.int32)
+
+
+def evaluate_probe(task: Task, state, test_x, test_y, probe_ix):
+    """Mean/std test accuracy over the probe users' models."""
+    p = jax.tree.map(lambda x: x[jnp.asarray(probe_ix)], state.params)
+    accs = jax.vmap(lambda pp: task.accuracy(
+        pp, test_x, test_y, jnp.ones(test_x.shape[0])))(p)
+    accs = np.asarray(accs)
+    return float(accs.mean()), float(accs.std())
+
+
+def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
+                     data, *, world, epochs: int,
+                     gossip_backend: str = "einsum", eval_every: int = 0,
+                     test_x=None, test_y=None, probe: int = 32,
+                     superstep: bool = True, stats=None):
+    """Train a cross-device world for ``epochs`` global rounds.
+
+    ``data``: the federated dataset dict sharded over the ENROLLED
+    population (``data["x"]`` is [N, n, ...]). ``world``: a
+    ``CrossDeviceSpec`` or precompiled ``CompiledWorld``. Returns
+    ``(state, history)`` with history entries
+    ``(done_rounds, probe_acc_mean, probe_acc_std)`` at eval boundaries.
+    """
+    world = resolve_world(world, epochs)
+    if data["x"].shape[0] != world.enrolled:
+        raise ValueError(f"data sharded over {data['x'].shape[0]} users, "
+                         f"world enrolled {world.enrolled}")
+    num_classes = int(np.max(data["y"])) + 1
+    state = init_cross_device_state(
+        key, task, world.enrolled,
+        wire_error=uses_error_feedback(cfg), sketch=sketch_shape(cfg))
+    rnd = build_cross_device_round(task, cfg, train, world, data["sizes"],
+                                   gossip_backend=gossip_backend,
+                                   num_classes=num_classes)
+    jdata = {kk: jnp.asarray(v) for kk, v in data.items()
+             if kk in ("x", "y", "mask")}
+
+    eval_fn = None
+    if eval_every and test_x is not None:
+        pix = probe_indices(world, probe, seed=cfg.seed)
+        tx, ty = jnp.asarray(test_x), jnp.asarray(test_y)
+
+        def eval_fn(st, done):
+            m, s = evaluate_probe(task, st, tx, ty, pix)
+            return (done, m, s)
+
+    state, hist = drive_epochs(rnd, state, jdata, epochs,
+                               eval_every=eval_every, eval_fn=eval_fn,
+                               superstep=superstep, stats=stats)
+    return state, hist

@@ -103,10 +103,16 @@ def crelu(x, slope: float = 0.2):
 
 def sample_weights(conf, peer_mask, slope: float = 0.2):
     """θ_i = softmax(cRELU(c_i)) over actual peers. conf: [...,W]; mask:
-    [...,W] bool. Non-peers get 0."""
+    [...,W] bool. Non-peers get 0. A row with NO peers at all (an isolated
+    worker — partitioned away, all neighbors dead, or a cross-device
+    cohort where everyone else dropped) returns the all-zero row instead
+    of softmax's NaN over all-(−inf) logits: downstream, zero θ means
+    ``sample_peers`` selects nobody and the mixing matrix falls back to
+    the identity self-loop, so the worker self-trains for the round."""
     z = crelu(conf, slope)
     z = jnp.where(peer_mask, z, -jnp.inf)
-    return jax.nn.softmax(z, axis=-1)
+    t = jax.nn.softmax(z, axis=-1)
+    return jnp.where(peer_mask.any(axis=-1, keepdims=True), t, 0.0)
 
 
 def topk_mask(score, k: int):
@@ -383,13 +389,40 @@ def colluder_scores(hist, mask, weights=None, *, eps: float = 1e-12):
     receiver's peer set under ``weights`` (same contract as
     ``geom_scores`` — conforming peers ≲ 0, cluster members > 0, rows
     with no peers all-zero)."""
-    w = hist.shape[0]
-    eye = jnp.eye(w, dtype=bool)
     corr = correlation_matrix(hist, eps=eps)
+    return correlation_suspicion(corr, mask, weights=weights, eps=eps)
+
+
+def correlation_suspicion(corr, mask, weights=None, *, valid=None,
+                          eps: float = 1e-12):
+    """The median+MAD calibration + power-iteration clustering tail of
+    ``colluder_scores``, factored out so the dense path (``corr`` from
+    ``correlation_matrix``) and the cross-device sparse path (``corr``
+    from ``stamped_correlation``) share one scoring rule.
+
+    ``valid`` (optional [W, W] bool) marks correlation entries backed by
+    enough common observations to be evidence: invalid entries contribute
+    NEITHER to the median/MAD baseline NOR to the excess graph — under
+    sparse cross-device sampling a pair never co-observed reads as "no
+    evidence", not "zero correlation" (a zero would sit below a negative
+    baseline and manufacture phantom excess). When every entry is invalid
+    (early rounds) the baseline falls back to 0 and all scores are 0.
+    ``valid=None`` is the dense path and traces the exact pre-refactor
+    op sequence — the committed corr_trust bench numbers are unchanged.
+    """
+    w = corr.shape[0]
+    eye = jnp.eye(w, dtype=bool)
     offd = jnp.where(eye, jnp.nan, corr)
+    if valid is not None:
+        offd = jnp.where(valid, offd, jnp.nan)
     base = jnp.nanmedian(offd)
     spread = jnp.nanmedian(jnp.abs(offd - base))
+    if valid is not None:
+        base = jnp.where(jnp.isnan(base), 0.0, base)
+        spread = jnp.where(jnp.isnan(spread), 0.0, spread)
     excess = jnp.where(eye, 0.0, jax.nn.relu(corr - base - spread))
+    if valid is not None:
+        excess = jnp.where(valid & ~eye, excess, 0.0)
     v = excess.mean(axis=1)                             # [W] first pass
     s = excess @ v                                      # [W] cluster mass
 
@@ -400,6 +433,46 @@ def colluder_scores(hist, mask, weights=None, *, eps: float = 1e-12):
     score = jnp.broadcast_to(s[None, :], (w, w))
     mean_s = (wts * score).sum(1, keepdims=True) / jnp.maximum(tot, eps)
     return jnp.where(mask, score - mean_s, 0.0)
+
+
+def stamped_correlation(hist, stamps, *, min_obs: int = 2,
+                        eps: float = 1e-12):
+    """Observation-aligned cross-round correlation for SPARSELY observed
+    peers (the cross-device path).
+
+    Under partial participation each worker's ring buffer rotates only on
+    the rounds IT fired, so slot r of worker i and slot r of worker j
+    generally hold sketches from DIFFERENT global rounds — the dense
+    flattened-cosine of ``correlation_matrix`` would compare unrelated
+    rounds and wash out exactly the colluder signature it exists to find.
+    Each slot therefore carries a global-round STAMP (−1 = never filled),
+    and the correlation is the mean per-slot-pair cosine over stamp-
+    MATCHED pairs only: rounds both peers actually participated in.
+
+    hist: [W, R, S] sign-sketch ring buffer; stamps: [W, R] int32.
+    Returns ``(corr [W, W], valid [W, W])`` where ``valid[i, j]`` is True
+    iff i and j share ≥ ``min_obs`` stamped common rounds — below that,
+    a high correlation is sampling noise, not collusion evidence (one
+    common round ALWAYS correlates alie colluders at 1.0, but so does one
+    lucky honest pair; the gate is the per-peer observation count the
+    sparse threat model requires). Pairs never co-observed get corr 0 and
+    valid False; feed both into ``correlation_suspicion``.
+    """
+    filled = stamps >= 0                                # [W, R]
+    match = (stamps[:, None, :, None] == stamps[None, :, None, :]) \
+        & filled[:, None, :, None] & filled[None, :, None, :]  # [W,W,R,R]
+    # per-slot-pair cosine of sign-sketches
+    dots = jnp.einsum("irs,jps->ijrp", hist, hist)      # [W, W, R, R]
+    n = jnp.sqrt((hist * hist).sum(-1))                 # [W, R] slot norms
+    denom = n[:, None, :, None] * n[None, :, None, :] + eps
+    cos = dots / denom
+    m = match.astype(hist.dtype)
+    nmatch = m.sum((2, 3))                              # [W, W]
+    corr = (m * cos).sum((2, 3)) / jnp.maximum(nmatch, 1.0)
+    valid = nmatch >= min_obs
+    w = hist.shape[0]
+    eye = jnp.eye(w, dtype=bool)
+    return jnp.where(eye, 0.0, corr), valid & ~eye
 
 
 def fused_trust_signal(dts_signal: str, loss_trust, geom, damaged,

@@ -324,6 +324,7 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                             dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
     channels = resolve_dts_signal(cfg)
     corr = "corr" in channels
+    max_staleness = int(cfg.max_staleness)
 
     from repro.scenarios import attacks as attacks_mod
     from repro.scenarios.compile import ATTACK_CODE, epoch_view
@@ -376,7 +377,13 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     def stage_scenario_view(c):
         """reads epoch; writes eff_adj (and alive/fire/att_on with a
         scenario): the round's effective topology = (per-segment or static)
-        adjacency ∧ link_ok ∧ alive on both endpoints."""
+        adjacency ∧ link_ok ∧ alive on both endpoints. With
+        ``cfg.max_staleness > 0`` (build-time gated: the default 0 traces
+        no extra ops) edges from peers whose epoch counter lags the
+        receiver's by more than S rounds are additionally dropped — a
+        straggler's S-rounds-old model is excluded from the merge instead
+        of silently mixed (async ticks and straggler scenarios open
+        exactly these gaps)."""
         if scenario is not None:
             view = epoch_view(scenario, c["epoch"])
             c["alive"], c["fire"], c["att_on"] = \
@@ -386,6 +393,10 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                 & c["alive"][None, :] & c["alive"][:, None]
         else:
             c["eff_adj"] = adj_j
+        if max_staleness:
+            ep = c["state"].epoch
+            fresh = (ep[:, None] - ep[None, :]) <= max_staleness
+            c["eff_adj"] = c["eff_adj"] & fresh
 
     def stage_peer_sample(c):
         """reads eff_adj, state.conf, k_sample; writes theta [W,W] (DTS
@@ -1203,3 +1214,389 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
 
     gossip_round.stages = stages
     return gossip_round
+
+
+# ---------------------------------------------------------------------------
+# Cross-device participation: enrolled population, sampled cohorts
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class CrossDeviceState:
+    """Population state for the cross-device path: every per-worker buffer
+    the dense engines carry, sized to the ENROLLED population [N] instead
+    of the round cohort [k], plus the participation bookkeeping the
+    gather/scatter drivers need (when a user last fired, how often it has
+    been observed, which global round each sketch slot came from)."""
+    params: Any                  # stacked [N, ...] per-user models
+    backup: Any                  # stacked [N, ...] time-machine backups
+    conf: jnp.ndarray            # [N, N] trust confidences
+    best_loss: jnp.ndarray       # [N]
+    last_loss: jnp.ndarray       # [N]
+    key: jnp.ndarray
+    epoch: jnp.ndarray           # [N] per-user completed-round counters
+    last_part: jnp.ndarray       # [N] int32 global round of the user's
+                                 # last COMPLETED participation (anchor for
+                                 # lazy confidence decay + staleness)
+    obs: jnp.ndarray             # [N] int32 completed-participation count
+    wire_err: Any = None         # EF21 residuals [N, ...]
+    sketch: Any = None           # [N, R, S] sign-sketch ring buffer
+    sketch_round: Any = None     # [N, R] int32 global-round stamps per
+                                 # ring slot (−1 = never filled) — the
+                                 # alignment evidence sparse correlation
+                                 # trust needs (dts.stamped_correlation)
+
+
+def init_cross_device_state(key, task: Task, enrolled: int, *,
+                            wire_error: bool = False,
+                            sketch=None) -> CrossDeviceState:
+    """``sketch``: the (R, S) dims from ``sketch_shape(cfg)`` when the
+    correlation channel is on, else None. Stamps start at −1: an empty
+    ring slot can never stamp-match, so fresh users carry zero correlation
+    evidence by construction."""
+    keys = jax.random.split(key, enrolled + 1)
+    params = jax.vmap(task.init)(keys[:enrolled])
+    return CrossDeviceState(
+        params=params,
+        backup=jax.tree.map(jnp.copy, params),
+        conf=jnp.zeros((enrolled, enrolled)),
+        best_loss=jnp.full((enrolled,), jnp.inf),
+        last_loss=jnp.zeros((enrolled,)),
+        key=keys[-1],
+        epoch=jnp.zeros((enrolled,), jnp.int32),
+        last_part=jnp.zeros((enrolled,), jnp.int32),
+        obs=jnp.zeros((enrolled,), jnp.int32),
+        wire_err=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if wire_error else None,
+        sketch=jnp.zeros((enrolled,) + tuple(sketch), jnp.float32)
+        if sketch else None,
+        sketch_round=jnp.full((enrolled, sketch[0]), -1, jnp.int32)
+        if sketch else None,
+    )
+
+
+def build_cross_device_round(task: Task, cfg: DeFTAConfig,
+                             train: TrainConfig, world, sizes, *,
+                             gossip_backend: str = "einsum",
+                             num_classes: int = 0,
+                             transport: Optional[Transport] = None):
+    """The cross-device round program: ``participation`` gathers the
+    round's k-member cohort out of the enrolled population, the dense
+    stages the engine already runs execute on the k-block, and
+    ``scatter_merge`` writes the survivors' state back — one scannable
+    body, so ``drive_epochs`` fuses a whole eval window of gather →
+    superstep → scatter into a single XLA dispatch exactly like the dense
+    path.
+
+    ``world`` is a ``repro.scenarios.cross_device.CompiledWorld``: the
+    per-round cohort indices, mid-round dropout / straggler-timeout draws,
+    cohort topology, and the enrolled-population attack assignment, all
+    compiled host-side once. Graceful-degradation semantics:
+
+    * mid-round dropout (``world.survive`` False): the slot's partial
+      contribution is masked out of ``eff_adj`` BEFORE the mixing-matrix
+      row normalization — survivors renormalize over who actually shipped
+      (DeceFL-style) — and the dropper's own state does not fire;
+    * straggler timeout (``world.complete`` False): the slot trains and
+      is consumed by peers, but its own update misses the round's merge
+      (it does not fire), the async tick semantics mapped to cohorts;
+    * fewer than ``world.k_min`` surviving sampled peers: the row's
+      mixing degrades to the identity — the worker self-trains for the
+      round, no NaN weights, no error;
+    * vacancy (fewer available users than k): pad slots carry
+      ``filled=False``, never fire, and are masked out of everything.
+
+    Trust stays calibrated under sparse observation: gathered confidence
+    rows decay toward the uninformative prior (0) by
+    ``cfg.dts_conf_decay ** (rounds since the row's user last fired)`` —
+    applied lazily at gather, written back only on fire, so absent users'
+    rows stay bit-unchanged — and the correlation channel scores
+    stamp-ALIGNED sketch slots gated on ≥ ``cfg.dts_min_obs`` common
+    observations (``dts.stamped_correlation``). ``cfg.max_staleness``
+    additionally drops peers whose model is > S rounds old (including
+    never-participated users once t > S, whose "model" is still the
+    round-0 init).
+    """
+    n = int(world.enrolled)
+    k = int(world.sample_k)
+    ltrain = local_train_fn(task, train, cfg.local_epochs,
+                            dp_clip=cfg.dp_clip, dp_sigma=cfg.dp_sigma)
+    channels = resolve_dts_signal(cfg)
+    corr = "corr" in channels
+    decay = float(cfg.dts_conf_decay)
+    max_staleness = int(cfg.max_staleness)
+    k_min = int(world.k_min)
+    sizes_j = jnp.asarray(np.asarray(sizes, np.float32))
+
+    from repro.scenarios import attacks as attacks_mod
+    from repro.scenarios.compile import ATTACK_CODE
+    from repro.scenarios.robust_agg import ROBUST_RULES
+
+    if world.epochs <= 0:
+        raise ValueError("cross-device world compiled for 0 rounds")
+    if "label_flip" in world.kinds_present and num_classes <= 0:
+        raise ValueError("label_flip cross-device world needs "
+                         "num_classes > 0")
+    if cfg.aggregation in ROBUST_RULES:
+        raise ValueError(
+            f"robust aggregation ({cfg.aggregation!r}) has no "
+            f"cross-device selection yet — use defta/defl/uniform")
+    if transport is None:
+        # the cohort block is dense [k, k]: no sparse adjacency support
+        transport = make_transport(cfg, backend=gossip_backend,
+                                   adjacency=None)
+    use_ef = transport.use_ef
+    stochastic = transport.stochastic
+
+    part_ix = jnp.asarray(world.part_ix)        # [T, k] int32, per-round
+    filled_t = jnp.asarray(world.filled)        # [T, k] bool
+    survive_t = jnp.asarray(world.survive)      # [T, k] bool
+    complete_t = jnp.asarray(world.complete)    # [T, k] bool
+    adj_t = jnp.asarray(world.adj)              # [T, k, k] bool
+    att_kind_u = jnp.asarray(world.attack_kind)     # [N] int32
+    att_scale_u = jnp.asarray(world.attack_scale)   # [N] float32
+    eye_k = jnp.eye(k, dtype=bool)
+
+    # ---- stages -----------------------------------------------------------
+
+    def stage_participation(c):
+        """reads epoch (the global round t), state.*, data; writes ix (the
+        cohort), active/fire (dropout ∧ straggler ∧ filled), eff_adj (the
+        survivor-masked cohort topology), the gathered g_* k-blocks of
+        every population buffer (confidence rows decayed by the time since
+        their user last fired), and the gathered data shards / attack
+        assignment. The gather: one x[ix] per buffer — XLA fuses it into
+        the scan body, no extra dispatch."""
+        state, t = c["state"], c["epoch"]
+        ix = part_ix[t]
+        c["ix"] = ix
+        active = filled_t[t] & survive_t[t]
+        c["active"] = active
+        c["fire"] = active & complete_t[t]
+        c["g_params"] = jax.tree.map(lambda x: x[ix], state.params)
+        c["g_backup"] = jax.tree.map(lambda x: x[ix], state.backup)
+        c["g_wire_err"] = jax.tree.map(lambda x: x[ix], state.wire_err) \
+            if use_ef else None
+        c["g_last_part"] = state.last_part[ix]
+        c["g_conf_raw"] = state.conf[ix]                 # [k, N]
+        rows = c["g_conf_raw"]
+        if decay < 1.0:
+            gap = jnp.maximum(t - c["g_last_part"], 0).astype(jnp.float32)
+            rows = rows * jnp.power(jnp.float32(decay), gap)[:, None]
+        c["g_conf_rows"] = rows
+        c["conf"] = rows[:, ix]                          # the [k, k] block
+        c["g_best"] = state.best_loss[ix]
+        c["g_last"] = state.last_loss[ix]
+        c["g_obs"] = state.obs[ix]
+        if corr:
+            c["g_sketch"] = state.sketch[ix]
+            c["g_stamp"] = state.sketch_round[ix]
+        data = c["data"]
+        c["g_x"] = data["x"][ix]
+        c["g_y"] = data["y"][ix]
+        c["g_mask"] = data["mask"][ix]
+        c["g_sizes"] = sizes_j[ix]
+        c["att_kind"] = att_kind_u[ix]
+        c["att_scale"] = att_scale_u[ix]
+        c["att_on"] = active & (c["att_kind"] > 0)
+        eff = adj_t[t] & active[None, :] & active[:, None]
+        if max_staleness:
+            fresh = (t - c["g_last_part"]) <= max_staleness
+            eff = eff & fresh[None, :]
+        c["eff_adj"] = eff
+
+    def stage_split_keys(c):
+        """reads state.key; writes key, k_sample, k_train, k_noise
+        (+ k_wire on the stochastic int8 wire) — the same frozen split
+        layout as the dense round."""
+        state = c["state"]
+        if stochastic:
+            c["key"], c["k_sample"], c["k_train"], c["k_noise"], \
+                c["k_wire"] = jax.random.split(state.key, 5)
+        else:
+            c["key"], c["k_sample"], c["k_train"], c["k_noise"] = \
+                jax.random.split(state.key, 4)
+            c["k_wire"] = None
+
+    def stage_peer_sample(c):
+        """reads conf (the decayed k-block), eff_adj, k_sample; writes
+        theta and sampled over the cohort."""
+        if cfg.use_dts:
+            theta = dts_mod.sample_weights(c["conf"], c["eff_adj"],
+                                           cfg.crelu_slope)
+        else:
+            theta = c["eff_adj"] / jnp.maximum(
+                c["eff_adj"].sum(1, keepdims=True), 1)
+        c["theta"] = theta
+        skeys = jax.random.split(c["k_sample"], k)
+        c["sampled"] = jax.vmap(
+            lambda kk, th: dts_mod.sample_peers(kk, th, cfg.num_sampled)
+        )(skeys, theta)
+
+    def stage_transport(c):
+        """reads sampled, eff_adj, g_params, g_wire_err; writes P, agg,
+        wire_err. The mixing matrix renormalizes over SURVIVORS (dropped
+        slots left eff_adj in participation) and rows with < k_min
+        surviving sampled peers degrade to the identity self-loop."""
+        P = dynamic_mixing_matrix(c["sampled"], c["eff_adj"], c["g_sizes"],
+                                  cfg.aggregation)
+        if k_min > 1:
+            npeers = (c["sampled"] & c["eff_adj"] & ~eye_k).sum(axis=1)
+            P = jnp.where((npeers >= k_min)[:, None], P,
+                          eye_k.astype(P.dtype))
+        c["P"] = P
+        if use_ef:
+            c["agg"], c["wire_err"] = transport.mix(
+                P, c["g_params"], residual=c["g_wire_err"],
+                key=c["k_wire"])
+        else:
+            c["agg"] = transport.mix(P, c["g_params"], key=c["k_wire"])
+            c["wire_err"] = c["g_wire_err"]
+
+    def stage_damage_check(c):
+        """reads agg, g_y, g_x, g_mask, g_best, g_backup, att_kind,
+        att_on; writes y_data, loss_agg, damaged, start — identical to
+        the dense round, on the gathered cohort block."""
+        y = c["g_y"]
+        if "label_flip" in world.kinds_present:
+            lf = (c["att_kind"] == ATTACK_CODE["label_flip"]) & c["att_on"]
+            y = attacks_mod.flip_labels(y, lf, num_classes)
+        c["y_data"] = y
+        c["loss_agg"] = jax.vmap(task.loss)(c["agg"], c["g_x"], y,
+                                            c["g_mask"])
+        if cfg.time_machine:
+            c["damaged"] = dts_mod.is_damaged(c["loss_agg"], c["g_best"])
+            c["start"] = tree_select(c["damaged"], c["g_backup"], c["agg"])
+        else:
+            c["damaged"] = jnp.zeros_like(c["loss_agg"], bool)
+            c["start"] = c["agg"]
+
+    def stage_local_train(c):
+        """reads start, g_x, y_data, g_mask, k_train; writes trained,
+        train_loss — the dense stage body vmapped over the k cohort."""
+        tkeys = jax.random.split(c["k_train"], k)
+        c["trained"], c["train_loss"] = jax.vmap(
+            lambda kk, p, x, y, m: ltrain(kk, p, x, y, m)
+        )(tkeys, c["start"], c["g_x"], c["y_data"], c["g_mask"])
+
+    def stage_attack_inject(c):
+        """reads trained, agg, att_kind, att_scale, att_on, theta,
+        k_noise; writes trained. Attackers attack whenever they
+        participate — attack_on is the participation mask itself,
+        gathered from the enrolled-population assignment (29% of
+        ENROLLED means ~29% of every cohort in expectation)."""
+        if world.kinds_present:
+            c["trained"] = attacks_mod.poison_sends(
+                c["k_noise"], world.kinds_present, c["att_kind"],
+                c["att_scale"], c["att_on"], c["agg"], c["trained"],
+                theta=c["theta"] if cfg.use_dts else None)
+
+    def stage_trust_update(c):
+        """reads conf, sampled, P, theta, eff_adj, fire, loss_agg,
+        damaged, g_last, g_best, g_backup, trained, start (+ g_sketch,
+        g_stamp on the corr channel); writes conf_new, backup,
+        best_loss, last_loss (+ sketch, stamp). The dense trust_update
+        on the cohort block, with the correlation channel swapped for
+        its sparse-observation variant: ring buffers rotate WITH a
+        global-round stamp, correlation is scored over stamp-matched
+        slot pairs only, and pairs with < cfg.dts_min_obs common
+        observations are excluded from both the suspicion and its
+        median+MAD baseline."""
+        loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
+                               c["loss_agg"] - c["g_last"])
+        if channels:
+            deltas = dts_mod.flatten_stacked(c["trained"]) \
+                - dts_mod.flatten_stacked(c["start"])
+            gmask = c["eff_adj"] & c["fire"][None, :]
+            gs = dts_mod.geom_scores(deltas, gmask, weights=c["theta"]) \
+                if "geom" in channels else None
+            cs = None
+            if corr:
+                c["sketch"] = dts_mod.update_sketch(c["g_sketch"], deltas,
+                                                    seed=cfg.seed)
+                c["stamp"] = jnp.concatenate(
+                    [c["g_stamp"][:, 1:],
+                     jnp.full((k, 1), c["epoch"], jnp.int32)], axis=1)
+                cmat, valid = dts_mod.stamped_correlation(
+                    c["sketch"], c["stamp"], min_obs=cfg.dts_min_obs)
+                cs = dts_mod.correlation_suspicion(
+                    cmat, gmask, weights=c["theta"], valid=valid)
+            signal = dts_mod.fused_trust_signal(
+                cfg.dts_signal, loss_trust, gs, c["damaged"],
+                cfg.dts_geom_weight, corr=cs,
+                lam_corr=cfg.dts_corr_weight)
+            c["conf_new"] = c["conf"] - c["sampled"] * c["P"] * signal
+        else:
+            c["conf_new"] = c["conf"] - c["sampled"] * c["P"] \
+                * loss_trust[:, None]
+
+        improved = (c["loss_agg"] < c["g_best"]) & ~c["damaged"]
+        c["backup"] = tree_select(improved | c["damaged"], c["trained"],
+                                  c["g_backup"])
+        c["best_loss"] = jnp.where(improved, c["loss_agg"], c["g_best"])
+        c["last_loss"] = jnp.where(c["damaged"], c["g_last"],
+                                   c["loss_agg"])
+
+    def stage_scatter_merge(c):
+        """reads fire + every updated cohort buffer; writes next (the
+        population state). Fire-gated: non-firing cohort members and
+        absent users scatter back their ORIGINAL (undecayed) rows, so
+        every carried buffer — trust, EF residuals, sketch history,
+        stamps — is bit-unchanged across rounds a user misses. Cohort
+        indices are distinct within a round, so the row scatters never
+        conflict."""
+        state, t, ix, fire = c["state"], c["epoch"], c["ix"], c["fire"]
+
+        def scat_tree(full, new_rows, old_rows):
+            sel = tree_select(fire, new_rows, old_rows)
+            return jax.tree.map(lambda f, s: f.at[ix].set(s), full, sel)
+
+        params = scat_tree(state.params, c["trained"], c["g_params"])
+        backup = scat_tree(state.backup, c["backup"], c["g_backup"])
+        wire_err = scat_tree(state.wire_err, c["wire_err"],
+                             c["g_wire_err"]) if use_ef else state.wire_err
+        rows_new = c["g_conf_rows"].at[:, ix].set(c["conf_new"])
+        conf = state.conf.at[ix].set(
+            jnp.where(fire[:, None], rows_new, c["g_conf_raw"]))
+        if corr:
+            sketch = state.sketch.at[ix].set(
+                jnp.where(fire[:, None, None], c["sketch"],
+                          c["g_sketch"]))
+            stamps = state.sketch_round.at[ix].set(
+                jnp.where(fire[:, None], c["stamp"], c["g_stamp"]))
+        else:
+            sketch, stamps = state.sketch, state.sketch_round
+        c["next"] = CrossDeviceState(
+            params=params, backup=backup, conf=conf,
+            best_loss=state.best_loss.at[ix].set(
+                jnp.where(fire, c["best_loss"], c["g_best"])),
+            last_loss=state.last_loss.at[ix].set(
+                jnp.where(fire, c["last_loss"], c["g_last"])),
+            key=c["key"],
+            epoch=state.epoch.at[ix].add(fire.astype(jnp.int32)),
+            last_part=state.last_part.at[ix].set(
+                jnp.where(fire, t, c["g_last_part"])),
+            obs=state.obs.at[ix].set(
+                jnp.where(fire, c["g_obs"] + 1, c["g_obs"])),
+            wire_err=wire_err, sketch=sketch, sketch_round=stamps)
+
+    stages = (
+        ("participation", stage_participation),
+        ("split_keys", stage_split_keys),
+        ("peer_sample", stage_peer_sample),
+        ("transport", stage_transport),
+        ("damage_check", stage_damage_check),
+        ("local_train", stage_local_train),
+        ("attack_inject", stage_attack_inject),
+        ("trust_update", stage_trust_update),
+        ("scatter_merge", stage_scatter_merge),
+    )
+
+    def round(state: CrossDeviceState, data, epoch=None):
+        c = {"state": state, "data": data, "epoch": epoch}
+        return run_pipeline(stages, c)["next"]
+
+    round.stages = stages
+    round.cohort = (n, k)
+    return round

@@ -73,6 +73,52 @@ def gossip_cost(cfg: ModelConfig, fl_pods: int, *, wire=None,
     }
 
 
+def participation_cost(cfg: ModelConfig, enrolled: int, sample_k: int, *,
+                       wire=None, avg_peers: int = 4,
+                       dropout: float = 0.0,
+                       straggle: float = 0.0) -> Dict[str, float]:
+    """Cross-device participation wire cost: enrolled vs sampled.
+
+    In the cross-device world (``scenarios.cross_device``) only the
+    ``sample_k``-user cohort is on the wire each round — the other
+    ``enrolled - sample_k`` users hold state but ship nothing. Per round
+    each cohort member sends one serialized payload to each of its
+    ``avg_peers`` outbound cohort peers (priced by the gossip wire format,
+    as in ``gossip_cost``); full participation would put every enrolled
+    user on the wire at the same degree. ``expected_round_bytes``
+    additionally discounts mid-round dropout (a departed slot's partial
+    payload is masked out of the mix; we price the expectation at half a
+    payload) — straggler timeouts do NOT cut wire bytes, the slot is
+    consumed by peers and only its own merge is skipped.
+    """
+    import numpy as np
+
+    from repro.launch.roofline import gossip_wire_bytes
+
+    sds = model_mod.abstract_params(cfg)
+    leaves = jax.tree.leaves(sds)
+    n_params = sum(int(np.prod(s.shape)) for s in leaves)
+    deg = min(avg_peers, sample_k - 1)
+    payload = float(gossip_wire_bytes(n_params, wire, rows=len(leaves)))
+    cohort_bytes = sample_k * deg * payload
+    full_bytes = enrolled * min(avg_peers, enrolled - 1) * payload
+    rate = sample_k / enrolled
+    return {
+        "wire": wire or "fp32",
+        "enrolled": enrolled,
+        "sample_k": sample_k,
+        "sampling_rate": rate,
+        "payload_bytes": payload,
+        "round_bytes": cohort_bytes,
+        "round_bytes_full_participation": full_bytes,
+        "wire_reduction": full_bytes / max(cohort_bytes, 1.0),
+        "expected_round_bytes": cohort_bytes * (1.0 - 0.5 * dropout),
+        # how sparsely DTS observes any one peer: expected rounds between
+        # a user's appearances in the cohort
+        "rounds_between_participations": 1.0 / max(rate, 1e-12),
+    }
+
+
 def scenario_gossip_cost(cfg: ModelConfig, fl_pods: int, compiled_scn, *,
                          wire=None, out_degree: float = 0.0) -> Dict:
     """Scenario-adjusted gossip wire cost: the static per-round bytes of

@@ -84,7 +84,8 @@ def effective_config(arch: str, shape: ShapeConfig,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                variant: str = "baseline", optimizer: str = "",
                accum_dtype: str = "float32", fl: bool = True,
-               scenario: str = "", verbose: bool = True):
+               scenario: str = "", cd_enrolled: int = 10_000,
+               cd_sample_k: int = 64, verbose: bool = True):
     """Lower + compile one (arch, shape, mesh). Returns result dict.
 
     ``fl=False`` with multi_pod lowers the FedAvg-across-pods baseline:
@@ -192,6 +193,40 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "ppermute_dense_rotation_gbytes_per_round":
                 g_costs[None]["ring_bytes_dense_rotation"] / 1e9,
         }
+        # cross-device participation column: what the same model costs per
+        # round when only a sampled cohort (not the enrolled population)
+        # is on the wire — the churn-as-default deployment shape
+        from repro.launch.costing import participation_cost
+        p_costs = {fmt: participation_cost(
+            cfg, cd_enrolled, cd_sample_k, wire=fmt,
+            dropout=0.05, straggle=0.10)
+            for fmt in (None, "bf16", "int8")}
+        p0 = p_costs[None]
+        gossip_info["participation"] = {
+            "enrolled": p0["enrolled"],
+            "sample_k": p0["sample_k"],
+            "sampling_rate": p0["sampling_rate"],
+            "rounds_between_participations":
+                p0["rounds_between_participations"],
+            "wire_reduction_vs_full": p0["wire_reduction"],
+            "cohort_wire_gbytes_per_round": {
+                fmt or "fp32": pc["round_bytes"] / 1e9
+                for fmt, pc in p_costs.items()},
+            "expected_wire_gbytes_per_round": {
+                fmt or "fp32": pc["expected_round_bytes"] / 1e9
+                for fmt, pc in p_costs.items()},
+            "full_participation_wire_gbytes_per_round":
+                p0["round_bytes_full_participation"] / 1e9,
+        }
+        if verbose:
+            print(f"  participation: {p0['sample_k']}/{p0['enrolled']} "
+                  f"sampled ({p0['sampling_rate']:.2%}) -> "
+                  f"{p0['round_bytes'] / 1e9:.2f} GB/round vs "
+                  f"{p0['round_bytes_full_participation'] / 1e9:.2f} "
+                  f"full-participation "
+                  f"({p0['wire_reduction']:.0f}x wire cut; a user is "
+                  f"observed every "
+                  f"~{p0['rounds_between_participations']:.0f} rounds)")
         if scenario:
             # scenario summary + cost delta: compile the named event
             # timeline over the pod workers and report how churn /
@@ -296,6 +331,12 @@ def main():
                     help="attach a named scenario's summary + gossip cost "
                     "delta to multi-pod FL dry-runs (paper_noise[@K], "
                     "churn_signflip, storm)")
+    ap.add_argument("--cd-enrolled", type=int, default=10_000,
+                    help="cross-device participation column: enrolled "
+                    "population size (multi-pod FL dry-runs)")
+    ap.add_argument("--cd-sample-k", type=int, default=64,
+                    help="cross-device participation column: per-round "
+                    "cohort size")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -323,7 +364,9 @@ def main():
                              optimizer=args.optimizer,
                              accum_dtype=args.accum_dtype,
                              fl=not args.fedavg_baseline,
-                             scenario=args.scenario)
+                             scenario=args.scenario,
+                             cd_enrolled=args.cd_enrolled,
+                             cd_sample_k=args.cd_sample_k)
         except Exception as e:  # record failures; they are bugs to fix
             traceback.print_exc()
             res = {"arch": arch, "shape": shape, "status": "FAILED",

@@ -21,6 +21,14 @@ Three modes:
   ``--async-ticks`` routes it through ``run_async_defta`` instead of
   ``run_defta``; ``--assert-acc X`` exits nonzero if final vanilla
   accuracy < X (the CI smoke hook).
+* cross-device (``--cross-device``): churn-as-default participation — an
+  enrolled population of ``--enrolled`` users, ``--sample-k`` gathered
+  per round under ``--cd-availability`` with default-on mid-round dropout
+  (``--cd-dropout``) and straggler timeouts (``--cd-straggle``);
+  ``--cd-attacks kind:frac[,kind:frac]`` assigns attackers as a fraction
+  of the ENROLLED population. The run exits 1 if the dispatch count ever
+  exceeds ceil(rounds / eval_every) — the gather/scatter-fused superstep
+  contract the CI smoke gates.
 
 On this CPU container use tiny configs (e.g. --arch paper-small --debug-mesh)
 — the full meshes are exercised by dryrun.py.
@@ -93,6 +101,75 @@ def run_scenario_sim(args) -> int:
           f"{time.time() - t0:.1f}s, epochs={np.asarray(st.epoch).tolist()})")
     if args.assert_acc and m < args.assert_acc:
         print(f"FAIL: vanilla accuracy {m:.3f} < --assert-acc "
+              f"{args.assert_acc}")
+        return 1
+    return 0
+
+
+def parse_cd_attacks(text: str):
+    """``"label_flip:0.15,alie:0.14"`` → ((kind, frac), ...)."""
+    if not text:
+        return ()
+    out = []
+    for part in text.split(","):
+        kind, _, frac = part.partition(":")
+        out.append((kind.strip(), float(frac)))
+    return tuple(out)
+
+
+def run_cross_device_sim(args) -> int:
+    """--cross-device: an enrolled population with k sampled per round."""
+    import jax
+
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.cross_device import (evaluate_probe, probe_indices,
+                                         resolve_world, run_cross_device)
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios.cross_device import CrossDeviceSpec
+
+    cfg = DeFTAConfig(num_workers=args.enrolled, avg_peers=4,
+                      num_sampled=2, local_epochs=args.sim_local_epochs,
+                      dts_signal=args.dts_signal,
+                      dts_conf_decay=args.cd_conf_decay,
+                      max_staleness=args.max_staleness)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    data = federated_dataset("vector", args.enrolled,
+                             np.random.default_rng(cfg.seed),
+                             n_per_worker=args.cd_shard_size, alpha=0.5)
+    task = mlp_task(32, 10)
+    spec = CrossDeviceSpec(
+        enrolled=args.enrolled, sample_k=args.sample_k,
+        availability=args.cd_availability, dropout=args.cd_dropout,
+        straggle=args.cd_straggle,
+        attacks=parse_cd_attacks(args.cd_attacks), seed=cfg.seed)
+    world = resolve_world(spec, args.sim_epochs)
+    print(f"cross-device world: {world.summary()}")
+
+    eval_every = max(args.sim_epochs // 4, 1)
+    budget = -(-args.sim_epochs // eval_every)
+    stats: dict = {}
+    t0 = time.time()
+    state, hist = run_cross_device(
+        jax.random.PRNGKey(cfg.seed), task, cfg, train, data, world=world,
+        epochs=args.sim_epochs, eval_every=eval_every,
+        test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+    for e, m, s in hist:
+        print(f"  round {e:4d}: honest probe acc {m:.3f} ± {s:.3f}")
+    pix = probe_indices(world, 32, seed=cfg.seed)
+    m, s = evaluate_probe(task, state, data["test_x"], data["test_y"], pix)
+    mean_part = float(np.asarray(state.obs).mean())
+    print(f"final honest probe acc {m:.3f} ± {s:.3f} "
+          f"({stats.get('dispatches', '?')} dispatches, budget {budget}, "
+          f"{time.time() - t0:.1f}s, mean participations/user "
+          f"{mean_part:.1f})")
+    if stats.get("dispatches", 0) > budget:
+        print(f"FAIL: {stats['dispatches']} dispatches > "
+              f"ceil(rounds/eval_every) = {budget} — the gather/scatter "
+              f"superstep is no longer fused")
+        return 1
+    if args.assert_acc and m < args.assert_acc:
+        print(f"FAIL: honest probe accuracy {m:.3f} < --assert-acc "
               f"{args.assert_acc}")
         return 1
     return 0
@@ -171,7 +248,41 @@ def main():
     ap.add_argument("--assert-acc", type=float, default=0.0,
                     help="exit 1 if the --scenario run's final vanilla "
                          "accuracy is below this (CI smoke)")
+    ap.add_argument("--cross-device", action="store_true",
+                    help="churn-as-default participation sim: sample "
+                         "--sample-k of --enrolled users per round "
+                         "(exits 1 on dispatch-parity violation)")
+    ap.add_argument("--enrolled", type=int, default=10_000,
+                    help="--cross-device enrolled population size")
+    ap.add_argument("--sample-k", type=int, default=64,
+                    help="--cross-device per-round cohort size")
+    ap.add_argument("--cd-availability", type=float, default=0.7,
+                    help="P(user reachable at round start)")
+    ap.add_argument("--cd-dropout", type=float, default=0.05,
+                    help="P(mid-round departure | selected) — the "
+                         "slot's partial contribution is masked out of "
+                         "the mixing row-normalization")
+    ap.add_argument("--cd-straggle", type=float, default=0.10,
+                    help="P(straggler timeout | survived) — peers "
+                         "consume the slot but its own update misses "
+                         "the merge")
+    ap.add_argument("--cd-attacks", default="",
+                    help="attack assignment over the ENROLLED "
+                         "population: kind:frac[,kind:frac], e.g. "
+                         "label_flip:0.15,alie:0.14")
+    ap.add_argument("--cd-shard-size", type=int, default=48,
+                    help="training examples per enrolled user")
+    ap.add_argument("--cd-conf-decay", type=float, default=0.98,
+                    help="per-round decay of an absent user's trust-"
+                         "confidence row toward the uninformative "
+                         "prior (1.0 = off)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="drop a peer's contribution when its model is "
+                         "more than this many rounds stale (0 = off)")
     args = ap.parse_args()
+
+    if args.cross_device:
+        raise SystemExit(run_cross_device_sim(args))
 
     if args.scenario and not args.fl:
         raise SystemExit(run_scenario_sim(args))

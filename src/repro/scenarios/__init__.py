@@ -26,6 +26,12 @@ full DFL threat/fault space instead of one hardcoded attack:
 * ``robust_agg`` — classical Byzantine-robust combination rules
                    (trimmed_mean | median | krum), selectable via
                    ``cfg.aggregation`` as defense baselines against DTS.
+* ``cross_device`` — churn-as-default participation worlds: an enrolled
+                   population of N users, k sampled per round under an
+                   availability rate, with default-on mid-round dropout
+                   and straggler timeouts (``CrossDeviceSpec`` →
+                   ``compile_world`` → the ``participation`` stage of
+                   ``engine.build_cross_device_round``).
 
 Quick start::
 
@@ -37,6 +43,8 @@ Quick start::
 """
 from repro.scenarios.compile import (ATTACK_CODE, CompiledScenario,
                                      compile_scenario, epoch_view)
+from repro.scenarios.cross_device import (CompiledWorld, CrossDeviceSpec,
+                                          compile_world)
 from repro.scenarios.spec import (ATTACK_KINDS, AttackSpec, ChurnSpec,
                                   LinkSpec, PartitionSpec, ScenarioSpec,
                                   StragglerSpec, TopologySpec, get_scenario)
@@ -44,7 +52,8 @@ from repro.scenarios.robust_agg import ROBUST_RULES, robust_mix
 
 __all__ = [
     "ATTACK_CODE", "ATTACK_KINDS", "AttackSpec", "ChurnSpec",
-    "CompiledScenario", "LinkSpec", "PartitionSpec", "ROBUST_RULES",
-    "ScenarioSpec", "StragglerSpec", "TopologySpec", "compile_scenario",
-    "epoch_view", "get_scenario", "robust_mix",
+    "CompiledScenario", "CompiledWorld", "CrossDeviceSpec", "LinkSpec",
+    "PartitionSpec", "ROBUST_RULES", "ScenarioSpec", "StragglerSpec",
+    "TopologySpec", "compile_scenario", "compile_world", "epoch_view",
+    "get_scenario", "robust_mix",
 ]
