@@ -40,7 +40,16 @@ fails (exit 1) when the headline wins regress:
   (gather/scatter fused into the scan), clean cross-device lands within
   0.05 of clean full-participation, and the best corr-family probe
   accuracy under 29%-of-enrolled label_flip+alie stays within 0.05 of
-  the dense alie × non-iid headline (the sparse-observation trust gate).
+  the dense alie × non-iid headline (the sparse-observation trust gate);
+* the telemetry plane must stay free: a round built with a Telemetry
+  registry keeps DISPATCH PARITY with a probe-less build (probe frames
+  ride the scan as stacked ys, never control flow) and its steady
+  superstep stays within the HARD ≤ 1.10× gate (``TELEMETRY_OVERHEAD_
+  GATE`` — fixed, not ``--tolerance``) at the paper round shape;
+* with ``--require-history DIR``, some ``DIR/*.json`` must equal the
+  committed baseline payload — each PR that moves the baseline must
+  stash its snapshot under ``benchmarks/history/`` so the dashboard
+  trajectory stays complete.
 
 Interpret-mode timings are noisy; the guard compares RATIOS within one run
 (dense/sparse from the same process share the noise), not absolute times
@@ -62,6 +71,11 @@ HEADLINE_W, HEADLINE_D = 500, 0.05
 # weakest sparse-vs-dense win observed across machine classes for the
 # headline cell; baselines above this are treated as machine-specific
 CROSS_MACHINE_WIN_FLOOR = 1.25
+
+# the telemetry plane's hard superstep budget (NOT --tolerance): probe
+# emissions ride the scanned round body as stacked ys and may cost at
+# most this much relative to a probe-less build at the paper round shape
+TELEMETRY_OVERHEAD_GATE = 1.10
 
 
 def headline_row(payload):
@@ -268,7 +282,52 @@ def check(baseline, fresh, tolerance):
         else:
             failures.append("cross_device entry has no dense_alie_accs "
                             "reference to gate the sparse-trust headline")
+
+    tm = fresh.get("telemetry")
+    if not tm:
+        failures.append("fresh bench has no telemetry entry")
+    else:
+        print(f"telemetry superstep overhead: {tm['ratio']:.2f}x "
+              f"probe-less ({tm['probes']} probes, "
+              f"{tm['bytes_per_round']:.0f} B/round; dispatches "
+              f"{tm['dispatches_on']} vs {tm['dispatches_off']})")
+        if tm["dispatches_on"] != tm["dispatches_off"]:
+            failures.append(
+                f"telemetry changed the dispatch count: "
+                f"{tm['dispatches_on']} vs {tm['dispatches_off']} — "
+                f"probes must ride the scanned superstep as stacked ys, "
+                f"never extra dispatches")
+        # hard gate, NOT --tolerance: the telemetry plane's contract is a
+        # fixed ≤1.10× budget at the paper round shape (ISSUE acceptance)
+        if tm["ratio"] > TELEMETRY_OVERHEAD_GATE:
+            failures.append(
+                f"telemetry-on superstep {tm['ratio']:.2f}x slower than "
+                f"telemetry-off (hard gate {TELEMETRY_OVERHEAD_GATE:.2f}x)"
+                f" — the probe emissions overran their budget")
     return failures
+
+
+def check_history(baseline, history_dir):
+    """The per-PR snapshot contract: some ``history_dir/*.json`` must
+    equal the committed baseline payload — every PR that moves the bench
+    baseline must also stash a copy under ``benchmarks/history/`` so the
+    dashboard trajectory stays complete."""
+    import glob
+    import os
+
+    for p in sorted(glob.glob(os.path.join(history_dir, "*.json"))):
+        try:
+            with open(p) as fh:
+                if json.load(fh) == baseline:
+                    print(f"history snapshot ok: {os.path.basename(p)} "
+                          f"matches the baseline")
+                    return []
+        except (OSError, json.JSONDecodeError):
+            continue
+    return [f"no snapshot under {history_dir}/ matches the committed "
+            f"baseline — stash it (e.g. cp BENCH_gossip.json "
+            f"{history_dir}/BENCH_gossip_prN.json) so the dashboard "
+            f"trajectory records this PR"]
 
 
 def main(argv=None):
@@ -276,6 +335,10 @@ def main(argv=None):
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--require-history", default="", metavar="DIR",
+                    help="fail unless some DIR/*.json equals the baseline "
+                         "payload — gates the per-PR benchmarks/history/ "
+                         "snapshot the dashboard trajectory is built from")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as fh:
@@ -284,6 +347,8 @@ def main(argv=None):
         fresh = json.load(fh)
 
     failures = check(baseline, fresh, args.tolerance)
+    if args.require_history:
+        failures += check_history(baseline, args.require_history)
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)

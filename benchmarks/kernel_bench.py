@@ -10,9 +10,11 @@ error feedback lands within tolerance of the fp32 run), the geometric and
 correlation trust_update cost contracts (dispatch parity + superstep
 overhead vs loss-only DTS, sketch ring buffer included), the DTS v2/v3
 headline cells (label_flip and alie × signal on the non-iid partition,
-benchmarks/table_trust.py) and the cross-device participation
+benchmarks/table_trust.py), the cross-device participation
 acceptance runs (dispatch parity, clean sampled-vs-dense parity, the
-sparse-observation trust headline)."""
+sparse-observation trust headline) and the telemetry-plane cost contract
+(probe-on vs probe-off superstep ratio + dispatch parity — the in-scan
+metrics buffers must stay free; bench_telemetry)."""
 from __future__ import annotations
 
 import json
@@ -149,6 +151,7 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     fedavg_dispatch = bench_fedavg_dispatch()
     geom_trust = bench_geom_trust()
     corr_trust = bench_corr_trust()
+    telemetry = bench_telemetry()
     trust_grid = bench_trust_grid()
     cross_device = bench_cross_device(trust_grid=trust_grid)
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
@@ -156,6 +159,7 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
                    scenario_overhead=scenario_overhead,
                    fedavg_dispatch=fedavg_dispatch,
                    geom_trust=geom_trust, corr_trust=corr_trust,
+                   telemetry=telemetry,
                    trust_grid=trust_grid, cross_device=cross_device)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -266,23 +270,27 @@ def bench_fedavg_dispatch(epochs: int = 120):
     train = TrainConfig(learning_rate=0.05, batch_size=32)
     key = jax.random.PRNGKey(0)
 
-    stats_f, stats_d = {}, {}
+    # dispatches AND wall-clock both come from the RunLedger — the
+    # telemetry plane's unified accounting (repro/telemetry/ledger.py)
+    from repro.telemetry import RunLedger
+    led_f, led_d = RunLedger(), RunLedger()
     st_f = run_fedavg(key, task, cfg, train, data, epochs=epochs,
-                      stats=stats_f)
-    run_defta(key, task, cfg, train, data, epochs=epochs, stats=stats_d)
+                      ledger=led_f)
+    run_defta(key, task, cfg, train, data, epochs=epochs, ledger=led_d)
     st_ref = run_fedavg(key, task, cfg, train, data, epochs=epochs,
                         superstep=False)
     acc_fused = evaluate_server(task, st_f, data["test_x"], data["test_y"])
     acc_ref = evaluate_server(task, st_ref, data["test_x"],
                               data["test_y"])
     print(f"fedavg dispatch parity {epochs} epochs: fedavg "
-          f"{stats_f['dispatches']} vs defta {stats_d['dispatches']} "
-          f"dispatches; fused acc {acc_fused:.3f} vs per-epoch "
-          f"{acc_ref:.3f}")
+          f"{led_f.dispatches} vs defta {led_d.dispatches} "
+          f"dispatches ({led_f.wall_s:.1f}s vs {led_d.wall_s:.1f}s); "
+          f"fused acc {acc_fused:.3f} vs per-epoch {acc_ref:.3f}")
     # no assert here: a parity break must still emit the bench file so
     # bench_guard can report its purpose-built diagnostic
-    return dict(epochs=epochs, dispatches_fedavg=stats_f["dispatches"],
-                dispatches_defta=stats_d["dispatches"],
+    return dict(epochs=epochs, dispatches_fedavg=led_f.dispatches,
+                dispatches_defta=led_d.dispatches,
+                wall_fedavg_s=led_f.wall_s, wall_defta_s=led_d.wall_s,
                 acc_fused=acc_fused, acc_per_epoch=acc_ref)
 
 
@@ -509,6 +517,93 @@ def bench_corr_trust(epochs: int = 20):
                 dispatches_all=dispatches["all"])
 
 
+def bench_telemetry(epochs: int = 20):
+    """Telemetry-plane cost contract, CI-gated by bench_guard: building
+    the round with a Telemetry registry (per-round trust / wire-byte /
+    loss / fire probes riding the scan as stacked ys) must keep DISPATCH
+    PARITY with a probe-less run (telemetry is data flow, never control
+    flow) and hold the STEADY-STATE scanned superstep within the hard
+    ≤ 1.10× overhead gate at the paper's round shape (local_epochs=10).
+    Same methodology as bench_geom_trust: compile excluded, best-of-3
+    single-dispatch chunks timed INTERLEAVED across on/off so machine
+    drift cancels out of the ratio; a scenario is attached so the full
+    probe set (alive/fire included) is the thing being priced."""
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import (_pad_workers, build_round_fn, run_defta,
+                                  resolve_scenario)
+    from repro.core.engine import init_state
+    from repro.core.tasks import mlp_task
+    from repro.core.topology import make_topology
+    from repro.data.synthetic import federated_dataset
+    from repro.scenarios import AttackSpec, ScenarioSpec
+    from repro.telemetry import RunLedger, Telemetry
+    from repro.telemetry.spec import defta_specs, frame_bytes
+
+    w, k = 8, 2
+    data = federated_dataset("vector", w, np.random.default_rng(0),
+                             n_per_worker=64, alpha=0.5)
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    spec = ScenarioSpec(
+        name="telemetry_bench",
+        attacks=tuple(AttackSpec("sign_flip") for _ in range(k)))
+
+    def measure(telemetry):
+        cfg = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                          local_epochs=10)
+        scn = resolve_scenario(spec, cfg, epochs)
+        d2, sizes = _pad_workers(data, data["sizes"], k)
+        jdata = {kk: jnp.asarray(v) for kk, v in d2.items()
+                 if kk in ("x", "y", "mask")}
+        adj = make_topology(cfg.topology, scn.num_workers, cfg.avg_peers,
+                            cfg.seed)
+        rnd = build_round_fn(task, cfg, train, adj, sizes,
+                             scn.malicious.copy(), scenario=scn,
+                             num_classes=10, telemetry=telemetry)
+
+        if telemetry is None:
+            @jax.jit
+            def chunk(st, jd):
+                return jax.lax.scan(lambda s, e: (rnd(s, jd, e), None),
+                                    st, jnp.arange(epochs))[0]
+        else:
+            # the probe frames stack into the scan ys — the realized
+            # telemetry buffer; timing includes materializing it
+            @jax.jit
+            def chunk(st, jd):
+                return jax.lax.scan(lambda s, e: rnd(s, jd, e), st,
+                                    jnp.arange(epochs))
+
+        st = init_state(jax.random.PRNGKey(0), task, scn.num_workers)
+        jax.block_until_ready(chunk(st, jdata))      # trace + compile
+        return lambda: jax.block_until_ready(chunk(st, jdata))
+
+    run_off = measure(None)
+    run_on = measure(Telemetry())
+    off_s, on_s = _interleaved_best([run_off, run_on])
+    ratio = on_s / off_s
+
+    # dispatch parity + buffer accounting on the end-to-end driver
+    base = DeFTAConfig(num_workers=w, avg_peers=3, num_sampled=2,
+                       local_epochs=1)
+    stats_off, led = {}, RunLedger()
+    run_defta(jax.random.PRNGKey(0), task, base, train, data, epochs=6,
+              scenario=spec, stats=stats_off)
+    run_defta(jax.random.PRNGKey(0), task, base, train, data, epochs=6,
+              scenario=spec, ledger=led)
+    specs = defta_specs(w + k, scenario=True)
+    per_round = frame_bytes(specs)
+    print(f"telemetry overhead {epochs}x10-local-epoch supersteps: "
+          f"off {off_s:.2f}s vs on {on_s:.2f}s ({ratio:.2f}x; "
+          f"{len(specs)} probes, {per_round} B/round; dispatches "
+          f"{stats_off['dispatches']} vs {led.dispatches})")
+    return dict(epochs=epochs, off_s=off_s, on_s=on_s, ratio=ratio,
+                dispatches_off=stats_off["dispatches"],
+                dispatches_on=led.dispatches, probes=len(specs),
+                bytes_per_round=float(per_round),
+                buffer_bytes=float(per_round * epochs))
+
+
 def bench_trust_grid(epochs: int = 40):
     """The DTS v2+v3 headline cells for the BENCH trajectory:
     (label_flip, alie) × (loss / geom / both / corr / all) on the non-iid
@@ -578,17 +673,19 @@ def bench_cross_device(rounds: int = 120, dense_epochs: int = 40,
                                dropout=0.05, straggle=0.10,
                                attacks=attacks, seed=0)
         world = compile_world(spec, rounds)
-        stats = {}
-        t0 = time.time()
+        # dispatches + wall from the same source of truth: the telemetry
+        # plane's RunLedger (also exercises the cohort probes in-scan)
+        from repro.telemetry import RunLedger
+        led = RunLedger()
         state, _ = run_cross_device(
             jax.random.PRNGKey(0), task, cfg, train, data, world=world,
             epochs=rounds, eval_every=eval_every,
-            test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+            test_x=data["test_x"], test_y=data["test_y"], ledger=led)
         pix = probe_indices(world, 32, seed=0)
         m, s = evaluate_probe(task, state, data["test_x"],
                               data["test_y"], pix)
-        return dict(acc=m, std=s, dispatches=stats["dispatches"],
-                    wall_s=time.time() - t0,
+        return dict(acc=m, std=s, dispatches=led.dispatches,
+                    wall_s=led.wall_s,
                     participation_rate=world.summary()
                     ["participation_rate"])
 

@@ -12,6 +12,12 @@ trust_update overhead).
 
     python benchmarks/render_experiments.py                  # dry-run tables
     python benchmarks/render_experiments.py --bench-dashboard [paths...]
+    python benchmarks/render_experiments.py --telemetry-panel ledger.jsonl
+
+The dashboard also carries the telemetry-plane panel (probe-on vs
+probe-off superstep ratio, dispatch parity, probe buffer bytes) and
+``--telemetry-panel`` renders one ``train.py --telemetry`` JSONL run
+ledger as the per-round probe table CI uploads as an artifact.
 """
 from __future__ import annotations
 
@@ -137,6 +143,7 @@ def render_bench_dashboard(paths=()) -> str:
         payloads.append((os.path.basename(p), payload))
     lines += _trust_panel(payloads)
     lines += _collusion_panel(payloads)
+    lines += _telemetry_panel(payloads)
     return "\n".join(lines)
 
 
@@ -208,9 +215,119 @@ def _collusion_panel(payloads) -> list:
     return lines
 
 
+def _telemetry_panel(payloads) -> list:
+    """The telemetry-plane panel: per bench file, the probe-on vs
+    probe-off superstep wall clock (CI hard-gates the ratio at ≤ 1.10×),
+    the dispatch parity verdict, and the per-round probe buffer bytes —
+    blank for pre-telemetry history files."""
+    lines = [
+        "",
+        "## Telemetry plane panel (in-scan probes, zero extra dispatches)",
+        "",
+        "| bench file | superstep off | superstep on | overhead | "
+        "dispatch parity | probes | probe B/round |",
+        "|" + "---|" * 7,
+    ]
+    for label, payload in payloads:
+        tm = payload.get("telemetry")
+        if not tm:
+            lines.append(f"| {label} " + "| — " * 6 + "|")
+            continue
+        ok = tm["dispatches_on"] == tm["dispatches_off"]
+        parity = (f"{tm['dispatches_on']}={tm['dispatches_off']}" if ok
+                  else f"{tm['dispatches_on']}≠{tm['dispatches_off']}")
+        lines.append(
+            f"| {label} | {tm['off_s']:.2f}s | {tm['on_s']:.2f}s | "
+            f"{tm['ratio']:.2f}x | {parity} | {tm['probes']} | "
+            f"{tm['bytes_per_round']:.0f} |")
+    return lines
+
+
+def _cell(row, name, reduce="mean"):
+    """One markdown cell from a ledger round-row value: scalars print as
+    is, per-worker lists reduce (mean, or sum for boolean masks)."""
+    v = row.get(name)
+    if v is None:
+        return "—"
+    if isinstance(v, list):
+        flat = list(v)
+        while flat and isinstance(flat[0], list):
+            flat = [x for sub in flat for x in sub]
+        if not flat:
+            return "—"
+        if reduce == "sum":
+            return f"{sum(float(x) for x in flat):.0f}"
+        v = sum(float(x) for x in flat) / len(flat)
+    v = float(v)
+    return f"{v:.0f}" if abs(v) >= 1e3 or v == int(v) else f"{v:.3f}"
+
+
+def render_telemetry_panel(path) -> str:
+    """Markdown view of one JSONL run ledger (``train.py --telemetry``):
+    the manifest header, a per-round probe table (subsampled past 32
+    rows), and the summary footer. This is the CI artifact proving the
+    acceptance smoke's trust / fire / wire-byte series made it to disk."""
+    manifest = summary = None
+    rounds = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            kind = row.get("type")
+            if kind == "manifest":
+                manifest = row
+            elif kind == "summary":
+                summary = row
+            elif kind == "round":
+                rounds.append(row)
+    lines = [f"# Telemetry run ledger: {os.path.basename(path)}", ""]
+    if manifest:
+        cfg = manifest.get("config") or {}
+        lines.append(f"git `{manifest.get('git', '?')}` · "
+                     f"seed {manifest.get('seed', '?')} · "
+                     f"mode {cfg.get('mode', '?')} · "
+                     f"{len(rounds)} rounds recorded")
+        lines.append("")
+    cols = [("round", "t", "mean"), ("fire", "fired Σ", "sum"),
+            ("conf_in", "trust θ̄", "mean"), ("loss_trust", "s̄", "mean"),
+            ("wire_bytes", "wire B", "mean"),
+            ("train_loss", "loss", "mean"),
+            ("occupancy", "cohort", "mean"),
+            ("dropout_count", "drop", "sum")]
+    present = [c for c in cols
+               if any(c[0] in r for r in rounds)]
+    if present:
+        lines.append("| " + " | ".join(h for _, h, _ in present) + " |")
+        lines.append("|" + "---|" * len(present))
+        step = max(1, len(rounds) // 32)
+        shown = rounds[::step]
+        if rounds and shown[-1] is not rounds[-1]:
+            shown.append(rounds[-1])
+        for r in shown:
+            lines.append("| " + " | ".join(
+                _cell(r, name, red) for name, _, red in present) + " |")
+        if step > 1:
+            lines.append("")
+            lines.append(f"(every {step}th round of {len(rounds)} shown)")
+    else:
+        lines.append("(no round rows in the ledger)")
+    if summary:
+        lines.append("")
+        lines.append(f"summary: {summary.get('dispatches', '?')} "
+                     f"dispatches · wall "
+                     f"{summary.get('wall_s', float('nan')):.2f}s · "
+                     f"{summary.get('rounds_recorded', '?')} rounds")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     import sys
-    if "--bench-dashboard" in sys.argv:
+    if "--telemetry-panel" in sys.argv:
+        i = sys.argv.index("--telemetry-panel")
+        print(render_telemetry_panel(sys.argv[i + 1]))
+    elif "--bench-dashboard" in sys.argv:
         args = [a for a in sys.argv[1:] if a != "--bench-dashboard"]
         print(render_bench_dashboard(tuple(args)))
     else:

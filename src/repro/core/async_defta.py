@@ -38,7 +38,7 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     data, *, ticks: int, num_malicious: int = 0,
                     scenario=None, speed_range=(0.3, 1.0),
                     target_epochs: int = 0, check_every: int = 0,
-                    host_exit: bool = False, stats=None):
+                    host_exit: bool = False, stats=None, ledger=None):
     """Run until every vanilla worker reaches ``target_epochs`` (if >0) or
     for ``ticks`` ticks. Returns (state, adj, malicious, speeds).
 
@@ -56,7 +56,12 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ticks (default 8) checks ``all(epoch >= target_epochs)`` between chunks,
     so the whole targeted run is ONE dispatch with zero host round-trips.
     ``host_exit=True`` keeps the PR-1 reference path: host syncs at every
-    ``check_every`` boundary. Untargeted runs are a single scan either way."""
+    ``check_every`` boundary. Untargeted runs are a single scan either way.
+
+    ``ledger``: a ``repro.telemetry.RunLedger`` — builds the round with a
+    Telemetry registry so per-tick probe frames (plus the tick's ``fired``
+    mask) ride the scan/while-loop buffers and flush into the ledger, same
+    dispatch count, state bit-identical to a ledger-less run."""
     num_classes = 0
     if scenario is not None:
         if num_malicious:
@@ -80,8 +85,13 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     from repro.core.gossip import uses_error_feedback
     state = init_state(key, task, w, wire_error=uses_error_feedback(cfg),
                        sketch=sketch_shape(cfg))
+    telemetry = None
+    if ledger is not None:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
-                            scenario=scenario, num_classes=num_classes)
+                            scenario=scenario, num_classes=num_classes,
+                            telemetry=telemetry)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
     tick = build_fire_gated_tick(rnd_fn, jdata, speeds, w)
@@ -108,5 +118,5 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     state = drive_ticks(tick, state, tkeys, ticks, check_every=check_every,
                         required=required, target_epochs=target_epochs,
-                        host_exit=host_exit, stats=stats)
+                        host_exit=host_exit, stats=stats, ledger=ledger)
     return state, adj, malicious, np.asarray(speeds)

@@ -68,7 +68,7 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                      data, *, world, epochs: int,
                      gossip_backend: str = "einsum", eval_every: int = 0,
                      test_x=None, test_y=None, probe: int = 32,
-                     superstep: bool = True, stats=None):
+                     superstep: bool = True, stats=None, ledger=None):
     """Train a cross-device world for ``epochs`` global rounds.
 
     ``data``: the federated dataset dict sharded over the ENROLLED
@@ -76,6 +76,12 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ``CrossDeviceSpec`` or precompiled ``CompiledWorld``. Returns
     ``(state, history)`` with history entries
     ``(done_rounds, probe_acc_mean, probe_acc_std)`` at eval boundaries.
+
+    ``ledger``: a ``repro.telemetry.RunLedger`` — builds the round with a
+    Telemetry registry so per-round cohort probes (occupancy, dropout /
+    straggler counts, scatter writes, wire bytes, trust) ride the scan
+    supersteps and flush into the ledger; same dispatch count, population
+    state bit-identical to a ledger-less run.
     """
     world = resolve_world(world, epochs)
     if data["x"].shape[0] != world.enrolled:
@@ -85,9 +91,14 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     state = init_cross_device_state(
         key, task, world.enrolled,
         wire_error=uses_error_feedback(cfg), sketch=sketch_shape(cfg))
+    telemetry = None
+    if ledger is not None:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
     rnd = build_cross_device_round(task, cfg, train, world, data["sizes"],
                                    gossip_backend=gossip_backend,
-                                   num_classes=num_classes)
+                                   num_classes=num_classes,
+                                   telemetry=telemetry)
     jdata = {kk: jnp.asarray(v) for kk, v in data.items()
              if kk in ("x", "y", "mask")}
 
@@ -102,5 +113,6 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     state, hist = drive_epochs(rnd, state, jdata, epochs,
                                eval_every=eval_every, eval_fn=eval_fn,
-                               superstep=superstep, stats=stats)
+                               superstep=superstep, stats=stats,
+                               ledger=ledger)
     return state, hist

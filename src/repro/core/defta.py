@@ -45,17 +45,20 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                    malicious: np.ndarray, *,
                    gossip_backend: str = "einsum",
                    noise_scale: float = 200.0,
-                   scenario=None, num_classes: int = 0):
+                   scenario=None, num_classes: int = 0,
+                   telemetry=None):
     """Returns an UN-jitted round(state, data, epoch=None) -> state body —
     scannable, so drivers can fuse many rounds into one XLA dispatch (and
     jittable as-is for single-round use; see ``build_round``). The body is
     the engine's stage pipeline: split_keys → scenario_view → peer_sample →
     transport → damage_check → local_train → attack_inject → trust_update →
-    finalize/fire_merge (``repro.core.engine.build_defta_round``)."""
+    finalize/fire_merge (``repro.core.engine.build_defta_round``).
+    ``telemetry``: a ``repro.telemetry.Telemetry`` registry — when given
+    the round also returns a per-round probe frame (see the engine)."""
     return build_defta_round(task, cfg, train, adj, sizes, malicious,
                              gossip_backend=gossip_backend,
                              noise_scale=noise_scale, scenario=scenario,
-                             num_classes=num_classes)
+                             num_classes=num_classes, telemetry=telemetry)
 
 
 def build_round(*args, **kwargs):
@@ -118,7 +121,7 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
               *, epochs: int, num_malicious: int = 0, scenario=None,
               gossip_backend: str = "einsum", eval_every: int = 0,
               test_x=None, test_y=None, superstep: bool = True,
-              stats: Optional[dict] = None):
+              stats: Optional[dict] = None, ledger=None):
     """End-to-end driver. Malicious workers are appended after the vanilla
     ones (paper §4.3: normal workers fixed, attackers newly joined).
 
@@ -136,6 +139,13 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     ``superstep=False`` keeps the per-epoch dispatch loop (the reference
     the fused path is tested against). Pass ``stats={}`` to get
     ``{"dispatches": n, ...}`` back.
+
+    ``ledger``: a ``repro.telemetry.RunLedger``. When given, the round is
+    built with a Telemetry registry — per-round probe frames (trust, wire
+    bytes, fire masks, losses …) ride the scan supersteps as stacked ys
+    and flush into the ledger (and its JSONL sink) at eval boundaries,
+    with the SAME dispatch count; the traced state update is bit-identical
+    to a ledger-less run. Without it nothing extra is traced.
     """
     num_classes = 0
     if scenario is not None:
@@ -158,9 +168,14 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     from repro.core.gossip import uses_error_feedback
     state = init_state(key, task, w, wire_error=uses_error_feedback(cfg),
                        sketch=sketch_shape(cfg))
+    telemetry = None
+    if ledger is not None:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             gossip_backend=gossip_backend,
-                            scenario=scenario, num_classes=num_classes)
+                            scenario=scenario, num_classes=num_classes,
+                            telemetry=telemetry)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
 
@@ -171,7 +186,8 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
             return (done, m, s)
     state, history = drive_epochs(rnd_fn, state, jdata, epochs,
                                   eval_every=eval_every, eval_fn=eval_fn,
-                                  superstep=superstep, stats=stats)
+                                  superstep=superstep, stats=stats,
+                                  ledger=ledger)
     return state, adj, malicious, history
 
 

@@ -63,6 +63,7 @@ reorder a single op or PRNG split.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 
@@ -278,9 +279,13 @@ def sketch_shape(cfg: DeFTAConfig):
 
 
 def run_pipeline(stages, ctx: dict) -> dict:
-    """Execute the ordered (name, fn) stage tuple over the context."""
+    """Execute the ordered (name, fn) stage tuple over the context. Each
+    stage runs under a ``jax.named_scope`` so profiler traces (and XLA
+    metadata) attribute every op to its pipeline stage — name-only, so
+    the traced computation (and the golden parity gate) is untouched."""
     for _name, fn in stages:
-        fn(ctx)
+        with jax.named_scope(_name):
+            fn(ctx)
     return ctx
 
 
@@ -295,7 +300,8 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                       gossip_backend: str = "einsum",
                       noise_scale: float = 200.0,
                       scenario=None, num_classes: int = 0,
-                      transport: Optional[Transport] = None):
+                      transport: Optional[Transport] = None,
+                      telemetry=None):
     """The DeFTA round program: returns an UN-jitted
     round(state, data, epoch=None) -> state body — scannable, so drivers
     fuse many rounds into one XLA dispatch (and jittable as-is for
@@ -313,6 +319,13 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ``transport``: a ``Transport`` (default: ``make_transport`` over the
     in_jit ``gossip_backend``). ``num_classes`` is required when the
     scenario contains a ``label_flip`` attack (the flip is ``y -> C-1-y``).
+
+    ``telemetry``: a ``repro.telemetry.Telemetry`` registry. When given,
+    the stages emit the ``defta_specs`` probes (read-only observations of
+    values already materialized) and the round returns ``(next_state,
+    frame)`` so the scan driver stacks per-round frames as ys — zero
+    extra dispatches. ``telemetry=None`` (default) traces NOTHING: the
+    round body is bit-identical to the golden path.
     """
     w = adj.shape[0]
     adj_j = jnp.asarray(adj)
@@ -359,6 +372,12 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     stochastic = transport.stochastic
     regen = scenario is not None and scenario.adj_seg is not None
 
+    if telemetry is not None:
+        from repro.telemetry.spec import defta_specs
+        telemetry.declare(*defta_specs(w, scenario=scenario is not None,
+                                       use_ef=use_ef))
+        tm_specs = telemetry.specs       # snapshot: wrappers may add more
+
     # ---- stages -----------------------------------------------------------
 
     def stage_split_keys(c):
@@ -397,6 +416,12 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             ep = c["state"].epoch
             fresh = (ep[:, None] - ep[None, :]) <= max_staleness
             c["eff_adj"] = c["eff_adj"] & fresh
+        if telemetry is not None:
+            telemetry.emit(c, "round", jnp.int32(-1)
+                           if c["epoch"] is None else c["epoch"])
+            if scenario is not None:
+                telemetry.emit(c, "alive", c["alive"])
+                telemetry.emit(c, "fire", c["fire"])
 
     def stage_peer_sample(c):
         """reads eff_adj, state.conf, k_sample; writes theta [W,W] (DTS
@@ -414,6 +439,8 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         c["sampled"] = jax.vmap(
             lambda k, t: dts_mod.sample_peers(k, t, cfg.num_sampled)
         )(skeys, theta)                                            # [W,W]
+        if telemetry is not None:
+            telemetry.emit(c, "theta_in", theta.mean(axis=0))
 
     def stage_transport(c):
         """reads sampled, eff_adj, state.params, state.wire_err, k_wire;
@@ -423,6 +450,14 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         rule (trimmed_mean/median/krum) replacing the weighted mix."""
         state = c["state"]
         mask = (c["sampled"] & c["eff_adj"]) | jnp.eye(w, dtype=bool)
+        if telemetry is not None:
+            from repro.telemetry.spec import stacked_payload_bytes
+            live = (c["sampled"] & c["eff_adj"]
+                    & ~jnp.eye(w, dtype=bool)).sum()
+            telemetry.emit(c, "edges", live)
+            telemetry.emit(c, "wire_bytes", live.astype(jnp.float32) *
+                           stacked_payload_bytes(state.params,
+                                                 transport.wire))
         if robust:
             # classical Byzantine-robust baselines: unweighted rule over
             # the sampled set; P degrades to the uniform bookkeeping
@@ -449,6 +484,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     "it with init_state(..., wire_error=True)")
             c["agg"], c["wire_err"] = transport.mix(
                 P, state.params, residual=state.wire_err, key=c["k_wire"])
+            if telemetry is not None:
+                telemetry.emit(c, "ef_norm", jnp.linalg.norm(
+                    dts_mod.flatten_stacked(c["wire_err"]), axis=1))
         else:
             c["agg"] = transport.mix(P, state.params, key=c["k_wire"])
             c["wire_err"] = state.wire_err
@@ -477,6 +515,9 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         else:
             c["damaged"] = jnp.zeros_like(c["loss_agg"], bool)
             c["start"] = c["agg"]
+        if telemetry is not None:
+            telemetry.emit(c, "loss_agg", c["loss_agg"])
+            telemetry.emit(c, "damaged", c["damaged"])
 
     def stage_local_train(c):
         """reads start, y_data, data, k_train; writes trained (post-SGD
@@ -487,6 +528,8 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         c["trained"], c["train_loss"] = jax.vmap(
             lambda k, p, x, y, m: ltrain(k, p, x, y, m)
         )(tkeys, c["start"], data["x"], c["y_data"], data["mask"])
+        if telemetry is not None:
+            telemetry.emit(c, "train_loss", c["train_loss"])
 
     def stage_attack_inject(c):
         """reads trained, agg, att_on, theta, k_noise; writes trained
@@ -547,6 +590,14 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         else:
             c["conf"] = state.conf - c["sampled"] * c["P"] \
                 * loss_trust[:, None]
+        if telemetry is not None:
+            telemetry.emit(c, "loss_trust", loss_trust)
+            telemetry.emit(c, "conf_in", c["conf"].mean(axis=0))
+            # the scored observable: ‖trained − start‖ per worker (on the
+            # channels path XLA CSEs this with the deltas above)
+            telemetry.emit(c, "update_norm", jnp.linalg.norm(
+                dts_mod.flatten_stacked(c["trained"])
+                - dts_mod.flatten_stacked(c["start"]), axis=1))
 
         improved = (c["loss_agg"] < state.best_loss) & ~c["damaged"]
         # the time machine's compensation step RATCHETS: a damaged round
@@ -609,16 +660,21 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     def round(state: DeFTAState, data, epoch=None):
         c = {"state": state, "data": data, "epoch": epoch}
-        return run_pipeline(stages, c)["next"]
+        run_pipeline(stages, c)
+        if telemetry is None:
+            return c["next"]
+        return c["next"], telemetry.collect(c, tm_specs)
 
     round.stages = stages
+    round.telemetry = telemetry
     return round
 
 
 def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                        sizes: np.ndarray, malicious: np.ndarray, *,
                        sample_workers: int = 0, server_opt: str = "none",
-                       server_lr: float = 1.0, noise_scale: float = 200.0):
+                       server_lr: float = 1.0, noise_scale: float = 200.0,
+                       telemetry=None):
     """FedAvg as a stage selection over the same pipeline: the transport is
     a STAR topology (server broadcast down, size-weighted mean up), there
     is no peer sampling / DTS / time machine, and the server optimizer is
@@ -634,6 +690,11 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     malicious_j = jnp.asarray(malicious)
     ltrain = local_train_fn(task, train, cfg.local_epochs)
 
+    if telemetry is not None:
+        from repro.telemetry.spec import fedavg_specs
+        telemetry.declare(*fedavg_specs(w))
+        tm_specs = telemetry.specs
+
     def stage_split_keys(c):
         """reads state.key; writes key, k_sel, k_train, k_noise."""
         c["key"], c["k_sel"], c["k_train"], c["k_noise"] = \
@@ -645,14 +706,21 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         c["bcast"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (w,) + x.shape),
             c["state"].server)
+        if telemetry is not None:
+            telemetry.emit(c, "round", jnp.int32(-1)
+                           if c["epoch"] is None else c["epoch"])
 
     def stage_local_train(c):
-        """reads bcast, data, k_train; writes trained."""
+        """reads bcast, data, k_train; writes trained (per-worker losses
+        feed the telemetry probe; without it they are dead outputs XLA
+        eliminates — the golden trace is unchanged)."""
         data = c["data"]
         tkeys = jax.random.split(c["k_train"], w)
-        c["trained"], _ = jax.vmap(
+        c["trained"], train_loss = jax.vmap(
             lambda k, p, x, y, m: ltrain(k, p, x, y, m)
         )(tkeys, c["bcast"], data["x"], data["y"], data["mask"])
+        if telemetry is not None:
+            telemetry.emit(c, "train_loss", train_loss)
 
     def stage_attack_inject(c):
         """reads trained, bcast, k_noise; writes trained — malicious
@@ -676,6 +744,13 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         c["new_server"] = jax.tree.map(
             lambda x: jnp.einsum("i,i...->...", aw.astype(x.dtype), x),
             c["trained"])
+        if telemetry is not None:
+            # star wire: W broadcasts down + the (sampled) cohort up —
+            # static at the fp32 payload, priced once at trace time
+            from repro.telemetry.spec import tree_payload_bytes
+            up = sample_workers if sample_workers else w
+            telemetry.emit(c, "wire_bytes", jnp.float32(
+                (w + up) * tree_payload_bytes(c["state"].server, None)))
 
     def stage_server_update(c):
         """reads new_server, state.{server,opt}; writes next — the server
@@ -709,11 +784,16 @@ def build_fedavg_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     )
 
     def round(state, data, epoch=None):
-        del epoch                    # FedAvg's round is epoch-invariant
-        c = {"state": state, "data": data}
-        return run_pipeline(stages, c)["next"]
+        # FedAvg's round is epoch-invariant; the traced index only feeds
+        # the telemetry round stamp (dead when telemetry is None)
+        c = {"state": state, "data": data, "epoch": epoch}
+        run_pipeline(stages, c)
+        if telemetry is None:
+            return c["next"]
+        return c["next"], telemetry.collect(c, tm_specs)
 
     round.stages = stages
+    round.telemetry = telemetry
     return round
 
 
@@ -728,13 +808,26 @@ def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
     its only algorithmically observable effect — which epoch's peer models
     a worker reads). Dead (chunk-padding) ticks skip ENTIRELY: no round
     compute and no key advance, so the device-exit path returns a state
-    bit-identical to the host-exit reference."""
+    bit-identical to the host-exit reference.
+
+    When the wrapped round carries a Telemetry registry the tick adds the
+    ``fired`` probe and yields ``(state, frame)`` — dead ticks yield the
+    structurally-identical zero frame (``lax.cond`` pytree parity), which
+    the driver trims off host-side."""
+    telemetry = getattr(rnd_fn, "telemetry", None)
+    if telemetry is not None:
+        from repro.telemetry.spec import tick_specs
+        telemetry.declare(*tick_specs(w))
+
     def tick(state: DeFTAState, inp):
         tkey, live, t = inp
 
         def run(state):
             fired = jax.random.uniform(tkey, (w,)) < speeds
-            nxt = rnd_fn(state, jdata, t)
+            if telemetry is None:
+                nxt = rnd_fn(state, jdata, t)
+            else:
+                nxt, frame = rnd_fn(state, jdata, t)
             # merge: fired workers take the new state, others keep the
             # old. wire_err rides along — a worker that did not fire did
             # not send, so its EF residual must not advance either.
@@ -747,16 +840,23 @@ def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
             sketch = jnp.where(fired[:, None, None], nxt.sketch,
                                state.sketch) \
                 if state.sketch is not None else state.sketch
-            return DeFTAState(
+            merged = DeFTAState(
                 params=params, backup=backup, conf=conf,
                 best_loss=jnp.where(fired, nxt.best_loss, state.best_loss),
                 last_loss=jnp.where(fired, nxt.last_loss, state.last_loss),
                 key=nxt.key,
                 epoch=jnp.where(fired, nxt.epoch, state.epoch),
                 wire_err=wire_err, sketch=sketch)
+            if telemetry is None:
+                return merged
+            return merged, dict(frame, fired=fired)
 
-        return jax.lax.cond(live, run, lambda s: s, state), None
+        if telemetry is None:
+            return jax.lax.cond(live, run, lambda s: s, state), None
+        return jax.lax.cond(live, run,
+                            lambda s: (s, telemetry.zero_frame()), state)
 
+    tick.telemetry = telemetry
     return tick
 
 
@@ -766,7 +866,7 @@ def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
 
 def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
                  eval_fn=None, superstep: bool = True,
-                 stats: Optional[dict] = None):
+                 stats: Optional[dict] = None, ledger=None):
     """The chunked-scan superstep driver (shared by run_defta and
     run_fedavg): epochs advance inside ``jax.lax.scan`` chunks bounded by
     eval points, with the state buffers DONATED across chunks — a run is
@@ -774,18 +874,41 @@ def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
     ``superstep=False`` keeps the per-epoch dispatch loop (the reference
     the fused path is tested against). ``eval_fn(state, done_epochs)`` is
     called at eval boundaries; its results are collected into the returned
-    history. Pass ``stats={}`` to get ``{"dispatches": n, ...}`` back.
+    history.
+
+    Accounting goes through one ``repro.telemetry.RunLedger`` (pass
+    ``ledger=`` to keep it — dispatches, per-superstep wall clock, and,
+    when the round was built with a Telemetry registry, the per-round
+    probe frames flushed at each chunk/eval boundary). ``stats={}`` is
+    the deprecated dict view: it gets ``ledger.as_stats()`` — the exact
+    legacy ``{"dispatches": n, "epochs": e}`` keys.
 
     Returns ``(state, history)``.
     """
+    from repro.telemetry.ledger import RunLedger
+    led = ledger if ledger is not None else RunLedger()
+    telemetry = getattr(rnd_fn, "telemetry", None)
     history = []
-    dispatches = 0
+
+    def flush(frames, start, n_rounds, wall):
+        led.record_dispatch(n_rounds, wall)
+        if telemetry is not None:
+            led.record_frames(
+                {kk: np.asarray(v) for kk, v in frames.items()}, start)
 
     if not superstep:                       # per-epoch reference driver
         rnd = jax.jit(rnd_fn)
         for e in range(epochs):
-            state = rnd(state, jdata, jnp.int32(e))
-            dispatches += 1
+            t0 = time.perf_counter()
+            out = rnd(state, jdata, jnp.int32(e))
+            if telemetry is None:
+                state, frames = out, None
+            else:
+                state, frame = out
+                frames = {kk: np.asarray(v)[None]
+                          for kk, v in frame.items()}
+            jax.block_until_ready(state)
+            flush(frames, e, 1, time.perf_counter() - t0)
             if eval_every and (e + 1) % eval_every == 0 \
                     and eval_fn is not None:
                 history.append(eval_fn(state, e + 1))
@@ -794,8 +917,12 @@ def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
                            donate_argnums=(0,))
         def run_chunk(st, jd, e0, *, length):
             def body(s, e):
-                return rnd_fn(s, jd, e), None
-            return jax.lax.scan(body, st, e0 + jnp.arange(length))[0]
+                if telemetry is None:
+                    return rnd_fn(s, jd, e), None
+                return rnd_fn(s, jd, e)
+            # the scan ys ARE the [chunk, ...] telemetry buffers — XLA
+            # stacks frames in-place, zero extra dispatches (None if off)
+            return jax.lax.scan(body, st, e0 + jnp.arange(length))
 
         done = 0
         # eval boundaries only matter when there is something to eval —
@@ -804,22 +931,26 @@ def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
             else epochs
         while done < epochs:
             n = min(chunk, epochs - done)
-            state = run_chunk(state, jdata, jnp.int32(done), length=n)
-            dispatches += 1
+            t0 = time.perf_counter()
+            state, frames = run_chunk(state, jdata, jnp.int32(done),
+                                      length=n)
+            jax.block_until_ready(state)
+            flush(frames, done, n, time.perf_counter() - t0)
             done += n
             if eval_every and done % eval_every == 0 \
                     and eval_fn is not None:
                 history.append(eval_fn(state, done))
 
+    led.finish("epochs", epochs)
     if stats is not None:
-        stats["dispatches"] = dispatches
-        stats["epochs"] = epochs
+        stats.update(led.as_stats())
     return state, history
 
 
 def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
                 required: np.ndarray, target_epochs: int = 0,
-                host_exit: bool = False, stats: Optional[dict] = None):
+                host_exit: bool = False, stats: Optional[dict] = None,
+                ledger=None):
     """The tick driver (AsyncDeFTA): ticks advance inside ``lax.scan``
     chunks with donated state buffers. The target_epochs early-exit
     predicate is evaluated DEVICE-SIDE by default: a ``lax.while_loop``
@@ -829,34 +960,54 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
     ``host_exit=True`` keeps the reference path: host syncs at every
     ``check_every`` boundary. Untargeted runs are a single scan either way.
 
-    ``tkeys``: [ticks, 2] per-tick PRNG keys. Returns the final state;
-    ``stats`` gets ``{"dispatches": n, "ticks": ticks}``.
+    Accounting goes through the same ``RunLedger`` as ``drive_epochs``
+    (pass ``ledger=``); ``stats={}`` is the deprecated view and gets the
+    legacy ``{"dispatches": n, "ticks": ticks}`` keys. With a
+    telemetry-built tick, the device-exit path carries preallocated
+    ``[padded_ticks, ...]`` probe buffers through the while-loop carry
+    (chunk frames written via ``dynamic_update_slice`` — still one
+    dispatch) and the ledger keeps the ticks that actually ran.
+
+    ``tkeys``: [ticks, 2] per-tick PRNG keys. Returns the final state.
     """
-    dispatches = 0
+    from repro.telemetry.ledger import RunLedger
+    led = ledger if ledger is not None else RunLedger()
+    telemetry = getattr(tick_fn, "telemetry", None)
     ts_all = jnp.arange(ticks, dtype=jnp.int32)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def run_ticks(st, tk, ts):
         live = jnp.ones((tk.shape[0],), bool)
-        return jax.lax.scan(tick_fn, st, (tk, live, ts))[0]
+        return jax.lax.scan(tick_fn, st, (tk, live, ts))
+
+    def flush(frames, start, n_ticks, wall):
+        led.record_dispatch(n_ticks, wall)
+        if telemetry is not None:
+            led.record_frames(
+                {kk: np.asarray(v) for kk, v in frames.items()}, start)
 
     def finish(state):
+        led.finish("ticks", ticks)
         if stats is not None:
-            stats["dispatches"] = dispatches
-            stats["ticks"] = ticks
+            stats.update(led.as_stats())
         return state
 
     if not target_epochs or not ticks:     # no predicate: one plain scan
         if ticks:
-            state = run_ticks(state, tkeys, ts_all)
-            dispatches += 1
+            t0 = time.perf_counter()
+            state, frames = run_ticks(state, tkeys, ts_all)
+            jax.block_until_ready(state)
+            flush(frames, 0, ticks, time.perf_counter() - t0)
         return finish(state)
 
     if host_exit:                          # reference path (PR 1)
         for t0 in range(0, ticks, check_every):
-            state = run_ticks(state, tkeys[t0:t0 + check_every],
-                              ts_all[t0:t0 + check_every])
-            dispatches += 1
+            w0 = time.perf_counter()
+            state, frames = run_ticks(state, tkeys[t0:t0 + check_every],
+                                      ts_all[t0:t0 + check_every])
+            jax.block_until_ready(state)
+            flush(frames, t0, min(check_every, ticks - t0),
+                  time.perf_counter() - w0)
             if bool((np.asarray(state.epoch)[required]
                      >= target_epochs).all()):
                 break
@@ -876,25 +1027,41 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
     live = (jnp.arange(padded) < ticks).reshape(nchunks, check_every)
     ts = jnp.arange(padded, dtype=jnp.int32).reshape(nchunks, check_every)
     vanilla = jnp.asarray(required)
+    bufs0 = telemetry.zero_buffers(padded) if telemetry is not None else {}
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_until(st, tkeys, live, ts):
+    def run_until(st, bufs, tkeys, live, ts):
         def not_done(carry):
-            st, c = carry
+            st, c, _ = carry
             reached = jnp.all(jnp.where(vanilla,
                                         st.epoch >= target_epochs, True))
             return (c < nchunks) & ~reached
 
         def chunk(carry):
-            st, c = carry
-            st = jax.lax.scan(tick_fn, st, (tkeys[c], live[c], ts[c]))[0]
-            return st, c + 1
+            st, c, bufs = carry
+            st, frames = jax.lax.scan(tick_fn, st,
+                                      (tkeys[c], live[c], ts[c]))
+            if telemetry is not None:
+                bufs = {kk: jax.lax.dynamic_update_slice(
+                    bufs[kk], frames[kk],
+                    (c * check_every,) + (0,) * (bufs[kk].ndim - 1))
+                    for kk in bufs}
+            return st, c + 1, bufs
 
         return jax.lax.while_loop(not_done, chunk,
-                                  (st, jnp.zeros((), jnp.int32)))[0]
+                                  (st, jnp.zeros((), jnp.int32), bufs))
 
-    state = run_until(state, tkeys, live, ts)
-    dispatches += 1
+    t0 = time.perf_counter()
+    state, chunks_run, bufs = run_until(state, bufs0, tkeys, live, ts)
+    jax.block_until_ready(state)
+    wall = time.perf_counter() - t0
+    # only the chunks the while_loop actually ran carry real frames —
+    # trim the early-exit tail (and the chunk padding) host-side
+    valid = min(int(chunks_run) * check_every, ticks)
+    led.record_dispatch(valid, wall)
+    if telemetry is not None and valid:
+        led.record_frames(
+            {kk: np.asarray(v)[:valid] for kk, v in bufs.items()}, 0)
     return finish(state)
 
 
@@ -1280,7 +1447,8 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
                              train: TrainConfig, world, sizes, *,
                              gossip_backend: str = "einsum",
                              num_classes: int = 0,
-                             transport: Optional[Transport] = None):
+                             transport: Optional[Transport] = None,
+                             telemetry=None):
     """The cross-device round program: ``participation`` gathers the
     round's k-member cohort out of the enrolled population, the dense
     stages the engine already runs execute on the k-block, and
@@ -1349,6 +1517,11 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
     use_ef = transport.use_ef
     stochastic = transport.stochastic
 
+    if telemetry is not None:
+        from repro.telemetry.spec import cross_device_specs
+        telemetry.declare(*cross_device_specs(k, use_ef=use_ef))
+        tm_specs = telemetry.specs
+
     part_ix = jnp.asarray(world.part_ix)        # [T, k] int32, per-round
     filled_t = jnp.asarray(world.filled)        # [T, k] bool
     survive_t = jnp.asarray(world.survive)      # [T, k] bool
@@ -1405,6 +1578,16 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
             fresh = (t - c["g_last_part"]) <= max_staleness
             eff = eff & fresh[None, :]
         c["eff_adj"] = eff
+        if telemetry is not None:
+            telemetry.emit(c, "round", t)
+            telemetry.emit(c, "cohort", ix)
+            telemetry.emit(c, "occupancy", active.sum())
+            telemetry.emit(c, "dropout_count",
+                           (filled_t[t] & ~survive_t[t]).sum())
+            telemetry.emit(c, "straggler_count",
+                           (active & ~complete_t[t]).sum())
+            telemetry.emit(c, "fire", c["fire"])
+            telemetry.emit(c, "scatter_writes", c["fire"].sum())
 
     def stage_split_keys(c):
         """reads state.key; writes key, k_sample, k_train, k_noise
@@ -1446,10 +1629,20 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
             P = jnp.where((npeers >= k_min)[:, None], P,
                           eye_k.astype(P.dtype))
         c["P"] = P
+        if telemetry is not None:
+            from repro.telemetry.spec import stacked_payload_bytes
+            live = (c["sampled"] & c["eff_adj"] & ~eye_k).sum()
+            telemetry.emit(c, "edges", live)
+            telemetry.emit(c, "wire_bytes", live.astype(jnp.float32) *
+                           stacked_payload_bytes(c["g_params"],
+                                                 transport.wire))
         if use_ef:
             c["agg"], c["wire_err"] = transport.mix(
                 P, c["g_params"], residual=c["g_wire_err"],
                 key=c["k_wire"])
+            if telemetry is not None:
+                telemetry.emit(c, "ef_norm", jnp.linalg.norm(
+                    dts_mod.flatten_stacked(c["wire_err"]), axis=1))
         else:
             c["agg"] = transport.mix(P, c["g_params"], key=c["k_wire"])
             c["wire_err"] = c["g_wire_err"]
@@ -1471,6 +1664,8 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         else:
             c["damaged"] = jnp.zeros_like(c["loss_agg"], bool)
             c["start"] = c["agg"]
+        if telemetry is not None:
+            telemetry.emit(c, "loss_agg", c["loss_agg"])
 
     def stage_local_train(c):
         """reads start, g_x, y_data, g_mask, k_train; writes trained,
@@ -1479,6 +1674,8 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         c["trained"], c["train_loss"] = jax.vmap(
             lambda kk, p, x, y, m: ltrain(kk, p, x, y, m)
         )(tkeys, c["start"], c["g_x"], c["y_data"], c["g_mask"])
+        if telemetry is not None:
+            telemetry.emit(c, "train_loss", c["train_loss"])
 
     def stage_attack_inject(c):
         """reads trained, agg, att_kind, att_scale, att_on, theta,
@@ -1530,6 +1727,12 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         else:
             c["conf_new"] = c["conf"] - c["sampled"] * c["P"] \
                 * loss_trust[:, None]
+        if telemetry is not None:
+            telemetry.emit(c, "loss_trust", loss_trust)
+            telemetry.emit(c, "conf_in", c["conf_new"].mean(axis=0))
+            telemetry.emit(c, "update_norm", jnp.linalg.norm(
+                dts_mod.flatten_stacked(c["trained"])
+                - dts_mod.flatten_stacked(c["start"]), axis=1))
 
         improved = (c["loss_agg"] < c["g_best"]) & ~c["damaged"]
         c["backup"] = tree_select(improved | c["damaged"], c["trained"],
@@ -1595,8 +1798,12 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
 
     def round(state: CrossDeviceState, data, epoch=None):
         c = {"state": state, "data": data, "epoch": epoch}
-        return run_pipeline(stages, c)["next"]
+        run_pipeline(stages, c)
+        if telemetry is None:
+            return c["next"]
+        return c["next"], telemetry.collect(c, tm_specs)
 
     round.stages = stages
     round.cohort = (n, k)
+    round.telemetry = telemetry
     return round

@@ -51,16 +51,20 @@ def init_state(key, task: Task, server_opt: str = "none") -> FedAvgState:
 def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                    sizes: np.ndarray, malicious: np.ndarray, *,
                    sample_workers: int = 0, server_opt: str = "none",
-                   server_lr: float = 1.0, noise_scale: float = 200.0):
+                   server_lr: float = 1.0, noise_scale: float = 200.0,
+                   telemetry=None):
     """UN-jitted, scannable round(state, data, epoch=None) body —
     ``sample_workers=0`` -> CFL-F; >0 -> CFL-S with that many sampled.
     The body is the engine pipeline: split_keys → star_broadcast →
-    local_train → attack_inject → star_aggregate → server_update."""
+    local_train → attack_inject → star_aggregate → server_update.
+    ``telemetry``: a ``repro.telemetry.Telemetry`` registry — when given
+    the round also returns a per-round probe frame (see the engine)."""
     from repro.core.engine import build_fedavg_round
     return build_fedavg_round(task, cfg, train, sizes, malicious,
                               sample_workers=sample_workers,
                               server_opt=server_opt, server_lr=server_lr,
-                              noise_scale=noise_scale)
+                              noise_scale=noise_scale,
+                              telemetry=telemetry)
 
 
 def build_round(*args, **kwargs):
@@ -72,7 +76,7 @@ def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
                *, epochs: int, num_malicious: int = 0,
                sample_workers: int = 0, server_opt: str = "none",
                superstep: bool = True, eval_every: int = 0, test_x=None,
-               test_y=None, stats: Optional[dict] = None):
+               test_y=None, stats: Optional[dict] = None, ledger=None):
     """End-to-end FedAvg driver on the unified superstep engine.
 
     With ``superstep`` (default) the whole run is ceil(epochs /
@@ -97,9 +101,13 @@ def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
         data = {**data, "x": pad(data["x"]), "y": pad(data["y"]),
                 "mask": pad(data["mask"])}
     state = init_state(key, task, server_opt)
+    telemetry = None
+    if ledger is not None:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
     rnd_fn = build_round_fn(task, cfg, train, sizes, malicious,
                             sample_workers=sample_workers,
-                            server_opt=server_opt)
+                            server_opt=server_opt, telemetry=telemetry)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
 
@@ -109,7 +117,8 @@ def run_fedavg(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
             return (done, evaluate_server(task, st, test_x, test_y))
     state, history = drive_epochs(rnd_fn, state, jdata, epochs,
                                   eval_every=eval_every, eval_fn=eval_fn,
-                                  superstep=superstep, stats=stats)
+                                  superstep=superstep, stats=stats,
+                                  ledger=ledger)
     if stats is not None and history:
         stats["history"] = history
     return state

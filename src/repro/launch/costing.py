@@ -119,6 +119,43 @@ def participation_cost(cfg: ModelConfig, enrolled: int, sample_k: int, *,
     }
 
 
+def telemetry_cost(num_workers: int, window: int, *, kind: str = "defta",
+                   scenario: bool = True, use_ef: bool = False,
+                   tick: bool = False) -> Dict[str, float]:
+    """Telemetry-plane buffer cost: what the in-scan metrics probes add to
+    the carried state per round and per scan window.
+
+    ``kind``: "defta" (per-worker probes over ``num_workers``), "fedavg"
+    (star-topology probes), or "cross_device" (cohort probes over a
+    ``num_workers``-sized sample-k block). ``window`` is the scan chunk
+    length the stacked ys buffer covers (= eval_every rounds, or the
+    while-loop padding for async). ``tick`` adds the fire-gated tick's
+    ``fired`` mask (async mode). These are DEVICE buffer bytes, not wire
+    bytes — telemetry never leaves the chip until the eval-boundary flush.
+    """
+    from repro.telemetry.spec import (cross_device_specs, defta_specs,
+                                      fedavg_specs, frame_bytes, tick_specs)
+
+    if kind == "defta":
+        specs = defta_specs(num_workers, scenario=scenario, use_ef=use_ef)
+    elif kind == "fedavg":
+        specs = fedavg_specs(num_workers)
+    elif kind == "cross_device":
+        specs = cross_device_specs(num_workers, use_ef=use_ef)
+    else:
+        raise ValueError(f"unknown telemetry kind {kind!r}")
+    if tick:
+        specs = specs + tick_specs(num_workers)
+    per_round = frame_bytes(specs)
+    return {
+        "kind": kind,
+        "probes": len(specs),
+        "bytes_per_round": float(per_round),
+        "window_rounds": int(window),
+        "buffer_bytes": float(per_round * window),
+    }
+
+
 def scenario_gossip_cost(cfg: ModelConfig, fl_pods: int, compiled_scn, *,
                          wire=None, out_degree: float = 0.0) -> Dict:
     """Scenario-adjusted gossip wire cost: the static per-round bytes of

@@ -218,6 +218,30 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "full_participation_wire_gbytes_per_round":
                 p0["round_bytes_full_participation"] / 1e9,
         }
+        # telemetry-plane buffer column: what the in-scan metrics probes
+        # add to the carried state when a run streams a ledger — device
+        # buffer bytes only, zero extra dispatches (repro/telemetry)
+        from repro.launch.costing import telemetry_cost
+        tc_pod = telemetry_cost(fl_pods, SCENARIO_HORIZON,
+                                scenario=bool(scenario))
+        tc_cd = telemetry_cost(cd_sample_k, SCENARIO_HORIZON,
+                               kind="cross_device")
+        gossip_info["telemetry"] = {
+            "pod_probes": tc_pod["probes"],
+            "pod_bytes_per_round": tc_pod["bytes_per_round"],
+            "pod_buffer_kb": tc_pod["buffer_bytes"] / 1e3,
+            "cross_device_probes": tc_cd["probes"],
+            "cross_device_bytes_per_round": tc_cd["bytes_per_round"],
+            "cross_device_buffer_kb": tc_cd["buffer_bytes"] / 1e3,
+            "window_rounds": SCENARIO_HORIZON,
+        }
+        if verbose:
+            print(f"  telemetry: {tc_pod['probes']} pod probes "
+                  f"({tc_pod['bytes_per_round']:.0f} B/round, "
+                  f"{tc_pod['buffer_bytes'] / 1e3:.1f} kB per "
+                  f"{SCENARIO_HORIZON}-round window); "
+                  f"{tc_cd['probes']} cross-device probes "
+                  f"({tc_cd['bytes_per_round']:.0f} B/round)")
         if verbose:
             print(f"  participation: {p0['sample_k']}/{p0['enrolled']} "
                   f"sampled ({p0['sampling_rate']:.2%}) -> "

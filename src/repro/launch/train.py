@@ -42,6 +42,52 @@ import time
 import numpy as np
 
 
+def make_ledger(args, cfg, mode: str):
+    """``--telemetry PATH`` → (RunLedger streaming to a JSONL sink with a
+    run manifest first row, sink) — or (None, None) when the flag is off.
+    The ledger rides the engine's scan supersteps (zero extra dispatches;
+    see ``repro.telemetry``)."""
+    if not getattr(args, "telemetry", ""):
+        return None, None
+    import dataclasses
+    import sys
+
+    from repro.telemetry import JsonlSink, RunLedger, run_manifest
+
+    sink = JsonlSink(args.telemetry)
+    meta = run_manifest(config={"mode": mode,
+                                **dataclasses.asdict(cfg)},
+                        seed=cfg.seed, argv=sys.argv)
+    return RunLedger(sink=sink, meta=meta), sink
+
+
+def start_profile(args):
+    """``--profile DIR`` → start a jax.profiler trace (best-effort: warns
+    and continues when the profiler backend is unavailable)."""
+    if not getattr(args, "profile", ""):
+        return False
+    import jax
+
+    try:
+        jax.profiler.start_trace(args.profile)
+        return True
+    except Exception as e:                       # pragma: no cover
+        print(f"--profile: trace unavailable ({e}); continuing")
+        return False
+
+
+def stop_profile(args, started: bool):
+    if not started:
+        return
+    import jax
+
+    try:
+        jax.profiler.stop_trace()
+        print(f"profile trace written to {args.profile}")
+    except Exception as e:                       # pragma: no cover
+        print(f"--profile: stop_trace failed ({e})")
+
+
 def run_scenario_sim(args) -> int:
     """--scenario: replay a named scenario through the DeFTA engines."""
     import jax
@@ -83,18 +129,30 @@ def run_scenario_sim(args) -> int:
 
     key = jax.random.PRNGKey(cfg.seed)
     stats: dict = {}
+    ledger, sink = make_ledger(args, cfg, "async" if args.async_ticks
+                               else "scenario")
+    profiling = start_profile(args)
     t0 = time.time()
     if args.async_ticks:
         st, adj, mal, _ = run_async_defta(
             key, task, cfg, train, data, ticks=args.async_ticks,
-            scenario=compiled, target_epochs=args.sim_epochs, stats=stats)
+            scenario=compiled, target_epochs=args.sim_epochs, stats=stats,
+            ledger=ledger)
     else:
         st, adj, mal, hist = run_defta(
             key, task, cfg, train, data, epochs=args.sim_epochs,
             scenario=compiled, eval_every=max(args.sim_epochs // 4, 1),
-            test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+            test_x=data["test_x"], test_y=data["test_y"], stats=stats,
+            ledger=ledger)
         for e, m, s in hist:
             print(f"  epoch {e:4d}: vanilla acc {m:.3f} ± {s:.3f}")
+    stop_profile(args, profiling)
+    if sink is not None:
+        sink.close()
+        print(f"telemetry ledger: {args.telemetry} "
+              f"({ledger.rounds_done} rounds, "
+              f"{len(ledger.names())} probes, "
+              f"wall {ledger.wall_s:.2f}s)")
     m, s, _ = evaluate(task, st, data["test_x"], data["test_y"], mal)
     print(f"final vanilla acc {m:.3f} ± {s:.3f} "
           f"({stats.get('dispatches', '?')} dispatches, "
@@ -149,11 +207,21 @@ def run_cross_device_sim(args) -> int:
     eval_every = max(args.sim_epochs // 4, 1)
     budget = -(-args.sim_epochs // eval_every)
     stats: dict = {}
+    ledger, sink = make_ledger(args, cfg, "cross_device")
+    profiling = start_profile(args)
     t0 = time.time()
     state, hist = run_cross_device(
         jax.random.PRNGKey(cfg.seed), task, cfg, train, data, world=world,
         epochs=args.sim_epochs, eval_every=eval_every,
-        test_x=data["test_x"], test_y=data["test_y"], stats=stats)
+        test_x=data["test_x"], test_y=data["test_y"], stats=stats,
+        ledger=ledger)
+    stop_profile(args, profiling)
+    if sink is not None:
+        sink.close()
+        print(f"telemetry ledger: {args.telemetry} "
+              f"({ledger.rounds_done} rounds, "
+              f"{len(ledger.names())} probes, "
+              f"wall {ledger.wall_s:.2f}s)")
     for e, m, s in hist:
         print(f"  round {e:4d}: honest probe acc {m:.3f} ± {s:.3f}")
     pix = probe_indices(world, 32, seed=cfg.seed)
@@ -276,6 +344,18 @@ def main():
                     help="per-round decay of an absent user's trust-"
                          "confidence row toward the uninformative "
                          "prior (1.0 = off)")
+    ap.add_argument("--telemetry", nargs="?", const="run_ledger.jsonl",
+                    default="", metavar="PATH",
+                    help="stream a per-round JSONL run ledger (trust / "
+                         "fire / wire-byte / loss probes riding the scan "
+                         "supersteps — zero extra dispatches; see "
+                         "docs/ARCHITECTURE.md 'Telemetry plane'). "
+                         "Default path: run_ledger.jsonl")
+    ap.add_argument("--profile", nargs="?", const="profile_trace",
+                    default="", metavar="DIR",
+                    help="dump a jax.profiler trace of the run to DIR — "
+                         "every engine stage is wrapped in a named scope "
+                         "so the trace viewer shows per-stage spans")
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="drop a peer's contribution when its model is "
                          "more than this many rounds stale (0 = off)")

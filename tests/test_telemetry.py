@@ -1,0 +1,274 @@
+"""Telemetry-plane tests (the in-scan metrics buffers + run ledger).
+
+* Golden/state parity: a telemetry-ON run (ledger given, probes riding
+  the scan supersteps) leaves the TRACED STATE bit-identical to the
+  telemetry-OFF run for all four engine front-ends — and for static
+  DeFTA, still equal to the pre-refactor golden digest
+  (``tests/golden_engine.json``), dispatch count included. The probe
+  emissions must be pure data taps, never a reordering of the round.
+* Probe digests: buffer shapes, monotone round stamps, fire-count vs
+  scenario-mask agreement, cohort occupancy / scatter-write accounting,
+  wire-byte pricing by wire format.
+* Ledger plumbing: JSONL sink row protocol (manifest → round* → summary),
+  legacy ``stats`` dict parity, registry error paths, buffer costing.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from capture_engine_goldens import defta_state_digest, setup, tree_digest
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core.async_defta import run_async_defta
+from repro.core.cross_device import run_cross_device
+from repro.core.defta import resolve_scenario, run_defta
+from repro.core.fedavg import run_fedavg
+from repro.core.tasks import mlp_task
+from repro.data.synthetic import federated_dataset
+from repro.scenarios.cross_device import CrossDeviceSpec
+from repro.telemetry import (JsonlSink, MetricSpec, RunLedger, Telemetry,
+                             run_manifest)
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
+                                     "golden_engine.json")))
+
+
+@pytest.fixture(scope="module")
+def env():
+    return setup()
+
+
+def _trees_bit_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# State parity: probes never perturb the traced state
+# ---------------------------------------------------------------------------
+
+class TestStateParity:
+    def test_defta_static_telemetry_on_matches_golden(self, env):
+        data, task, cfg, train = env
+        stats, led = {}, RunLedger()
+        st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train,
+                                data, epochs=6, stats=stats, ledger=led)
+        assert defta_state_digest(st, stats) == GOLDEN["defta_static"]
+        # legacy stats view unchanged by the ledger unification
+        assert stats == {"dispatches": 1, "epochs": 6}
+        assert led.as_stats() == {"dispatches": 1, "epochs": 6}
+
+    def test_defta_scenario_state_bitwise_parity(self, env):
+        data, task, cfg, train = env
+        run = lambda ledger: run_defta(
+            jax.random.PRNGKey(0), task, cfg, train, data, epochs=6,
+            scenario="churn_signflip", ledger=ledger)[0]
+        st_off, st_on = run(None), run(RunLedger())
+        assert _trees_bit_equal(st_off.params, st_on.params)
+        assert _trees_bit_equal(st_off.backup, st_on.backup)
+        assert np.array_equal(np.asarray(st_off.conf),
+                              np.asarray(st_on.conf))
+        assert np.array_equal(np.asarray(st_off.epoch),
+                              np.asarray(st_on.epoch))
+
+    def test_async_state_bitwise_parity(self, env):
+        data, task, cfg, train = env
+        run = lambda ledger: run_async_defta(
+            jax.random.PRNGKey(0), task, cfg, train, data, ticks=10,
+            target_epochs=3, ledger=ledger)[0]
+        st_off, st_on = run(None), run(RunLedger())
+        assert _trees_bit_equal(st_off.params, st_on.params)
+        assert np.array_equal(np.asarray(st_off.epoch),
+                              np.asarray(st_on.epoch))
+
+    def test_fedavg_state_bitwise_parity(self, env):
+        data, task, cfg, train = env
+        run = lambda ledger: run_fedavg(
+            jax.random.PRNGKey(0), task, cfg, train, data, epochs=4,
+            ledger=ledger)
+        st_off, st_on = run(None), run(RunLedger())
+        assert tree_digest(st_off.server) == tree_digest(st_on.server)
+        assert _trees_bit_equal(st_off.server, st_on.server)
+
+    def test_cross_device_state_bitwise_parity(self):
+        task = mlp_task(8, 4, hidden=16)
+        data = federated_dataset("vector", 12, np.random.default_rng(3),
+                                 n_per_worker=24, dim=8, num_classes=4)
+        train = TrainConfig(learning_rate=0.05, batch_size=8)
+        cfg = DeFTAConfig(num_workers=12, avg_peers=2, num_sampled=2,
+                          local_epochs=1, seed=0)
+        spec = CrossDeviceSpec(enrolled=12, sample_k=4, avg_peers=2,
+                               seed=3)
+        run = lambda ledger: run_cross_device(
+            jax.random.PRNGKey(0), task, cfg, train, data, world=spec,
+            epochs=6, ledger=ledger)[0]
+        st_off, st_on = run(None), run(RunLedger())
+        assert _trees_bit_equal(st_off.params, st_on.params)
+        assert np.array_equal(np.asarray(st_off.conf),
+                              np.asarray(st_on.conf))
+
+
+# ---------------------------------------------------------------------------
+# Probe digests: shapes, monotone stamps, mask agreement
+# ---------------------------------------------------------------------------
+
+class TestProbeSeries:
+    def test_defta_scenario_probe_series(self, env):
+        data, task, cfg, train = env
+        led = RunLedger()
+        run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                  epochs=6, scenario="churn_signflip", ledger=led)
+        w = resolve_scenario("churn_signflip", cfg, 6).num_workers
+        # monotone round stamps covering the whole run
+        np.testing.assert_array_equal(led.series("round"), np.arange(6))
+        # fire/alive masks agree with the compiled scenario's schedule
+        # (alive is segment-indexed: map epochs through seg_of_epoch)
+        scn = resolve_scenario("churn_signflip", cfg, 6)
+        np.testing.assert_array_equal(
+            led.series("fire"), np.asarray(scn.fire)[:6])
+        np.testing.assert_array_equal(
+            led.series("alive"),
+            scn.alive_np[scn.seg_of_epoch_np[:6]])
+        # per-worker probe buffers are [T, W]
+        for name in ("train_loss", "loss_trust", "conf_in",
+                     "update_norm", "theta_in"):
+            assert led.series(name).shape == (6, w), name
+        assert (led.series("wire_bytes") > 0).all()
+        assert (led.series("edges") > 0).all()
+        assert led.rounds_done == 6
+
+    def test_eval_chunked_run_flushes_every_round(self, env):
+        data, task, cfg, train = env
+        led, stats = RunLedger(), {}
+        run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                  epochs=6, eval_every=2, test_x=data["test_x"],
+                  test_y=data["test_y"], stats=stats, ledger=led)
+        assert stats["dispatches"] == 3
+        np.testing.assert_array_equal(led.series("round"), np.arange(6))
+        assert len(led.superstep_s) == 3
+        assert led.wall_s > 0
+
+    def test_async_fired_mask_and_early_exit(self, env):
+        data, task, cfg, train = env
+        led = RunLedger()
+        st, _, _, _ = run_async_defta(
+            jax.random.PRNGKey(0), task, cfg, train, data, ticks=10,
+            target_epochs=3, ledger=led)
+        fired = led.series("fired")
+        valid = led.rounds_done
+        assert 0 < valid <= 10
+        assert fired.shape == (valid, 4)
+        assert fired.dtype == bool
+        np.testing.assert_array_equal(led.series("round"),
+                                      np.arange(valid))
+        # a tick that fired advanced someone; total epoch gain bounded by
+        # total fires
+        assert int(np.asarray(st.epoch).sum()) <= int(fired.sum())
+
+    def test_fedavg_wire_bytes_constant_star(self, env):
+        data, task, cfg, train = env
+        led = RunLedger()
+        run_fedavg(jax.random.PRNGKey(0), task, cfg, train, data,
+                   epochs=4, ledger=led)
+        wb = led.series("wire_bytes")
+        assert wb.shape == (4,)
+        assert (wb == wb[0]).all() and wb[0] > 0   # static star topology
+        assert led.series("train_loss").shape == (4, 4)
+        np.testing.assert_array_equal(led.series("round"), np.arange(4))
+
+    def test_cross_device_cohort_probes(self):
+        task = mlp_task(8, 4, hidden=16)
+        data = federated_dataset("vector", 12, np.random.default_rng(3),
+                                 n_per_worker=24, dim=8, num_classes=4)
+        train = TrainConfig(learning_rate=0.05, batch_size=8)
+        cfg = DeFTAConfig(num_workers=12, avg_peers=2, num_sampled=2,
+                          local_epochs=1, seed=0)
+        spec = CrossDeviceSpec(enrolled=12, sample_k=4, avg_peers=2,
+                               seed=3)
+        led = RunLedger()
+        run_cross_device(jax.random.PRNGKey(0), task, cfg, train, data,
+                         world=spec, epochs=6, ledger=led)
+        k = 4
+        np.testing.assert_array_equal(led.series("round"), np.arange(6))
+        occ = led.series("occupancy")
+        assert ((occ >= 0) & (occ <= k)).all()
+        cohort = led.series("cohort")
+        assert cohort.shape == (6, k)
+        assert ((cohort >= 0) & (cohort < 12)).all()
+        # scatter writes == fired slots, per round
+        fire = led.series("fire")
+        np.testing.assert_array_equal(led.series("scatter_writes"),
+                                      fire.sum(axis=1))
+        # fired slots are a subset of occupied slots
+        assert (fire.sum(axis=1) <= occ).all()
+        assert (led.series("dropout_count") >= 0).all()
+        assert (led.series("straggler_count") >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Ledger plumbing: JSONL protocol, registry errors, costing
+# ---------------------------------------------------------------------------
+
+class TestLedgerPlumbing:
+    def test_jsonl_sink_row_protocol(self, env, tmp_path):
+        data, task, cfg, train = env
+        path = tmp_path / "ledger.jsonl"
+        with JsonlSink(str(path)) as sink:
+            led = RunLedger(sink=sink,
+                            meta=run_manifest(config={"mode": "test"},
+                                              seed=cfg.seed,
+                                              argv=["test"]))
+            run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
+                      epochs=6, scenario="churn_signflip", ledger=led)
+        rows = [json.loads(ln) for ln in path.read_text().splitlines()]
+        assert rows[0]["type"] == "manifest"
+        assert rows[0]["seed"] == cfg.seed
+        assert "git" in rows[0]
+        assert rows[-1]["type"] == "summary"
+        assert rows[-1]["dispatches"] == 1
+        assert rows[-1]["rounds_recorded"] == 6
+        body = [r for r in rows if r["type"] == "round"]
+        assert [r["t"] for r in body] == list(range(6))
+        for key in ("loss_trust", "fire", "wire_bytes", "train_loss"):
+            assert key in body[0], key
+
+    def test_registry_error_paths(self):
+        tm = Telemetry()
+        tm.declare(MetricSpec("a", "s1", (), "float32"))
+        # idempotent re-declare of an equal spec; conflict raises
+        tm.declare(MetricSpec("a", "s1", (), "float32"))
+        with pytest.raises(ValueError):
+            tm.declare(MetricSpec("a", "s1", (3,), "float32"))
+        with pytest.raises(KeyError):
+            tm.emit({}, "undeclared", jnp.zeros(()))
+        # declared-but-never-emitted fails loudly at collect
+        ctx = {}
+        tm.emit(ctx, "a", jnp.zeros(()))
+        tm.declare(MetricSpec("b", "s1", (), "float32"))
+        with pytest.raises(RuntimeError, match="b"):
+            tm.collect(ctx)
+        # the snapshot form collects only the requested specs
+        frame = tm.collect(ctx, specs=(tm.spec("a"),))
+        assert set(frame) == {"a"}
+
+    def test_telemetry_cost_accounting(self):
+        from repro.launch.costing import telemetry_cost
+
+        for kind, w in (("defta", 8), ("fedavg", 8), ("cross_device", 4)):
+            c = telemetry_cost(w, 50, kind=kind)
+            assert c["probes"] > 0
+            assert c["bytes_per_round"] > 0
+            assert c["buffer_bytes"] == c["bytes_per_round"] * 50
+        tick = telemetry_cost(8, 50, tick=True)
+        base = telemetry_cost(8, 50)
+        assert tick["probes"] == base["probes"] + 1
+        with pytest.raises(ValueError):
+            telemetry_cost(8, 50, kind="nope")
