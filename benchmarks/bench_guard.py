@@ -41,6 +41,11 @@ fails (exit 1) when the headline wins regress:
   0.05 of clean full-participation, and the best corr-family probe
   accuracy under 29%-of-enrolled label_flip+alie stays within 0.05 of
   the dense alie × non-iid headline (the sparse-observation trust gate);
+* the sharded worker axis must keep its contracts: every ``w_scaling``
+  row's realized cross-shard ring bytes must equal the independent
+  ``roofline.sharded_ring_bytes`` re-derivation, and the sharded engine
+  must stay on the ceil(epochs/eval_every) superstep dispatch budget at
+  every shard count (layout may not break scan fusion);
 * the telemetry plane must stay free: a round built with a Telemetry
   registry keeps DISPATCH PARITY with a probe-less build (probe frames
   ride the scan as stacked ys, never control flow) and its steady
@@ -282,6 +287,34 @@ def check(baseline, fresh, tolerance):
         else:
             failures.append("cross_device entry has no dense_alie_accs "
                             "reference to gate the sparse-trust headline")
+
+    ws = fresh.get("w_scaling")
+    if not ws:
+        failures.append("fresh bench has no w_scaling entry")
+    else:
+        for row in ws.get("rows", []):
+            if not row.get("ring_bytes_ok"):
+                failures.append(
+                    f"w_scaling W={row['W']} shards={row['shards']}: "
+                    f"transport ring bytes diverged from the roofline "
+                    f"contract (WorkerShardPlan.ring_bytes != "
+                    f"sharded_ring_bytes)")
+        print("w_scaling engine dispatches: "
+              + " ".join(f"shards={e['shards']}:{e['dispatches']}"
+                         for e in ws.get("engine", []))
+              + " (budget "
+              + ",".join(str(e["dispatch_budget"])
+                         for e in ws.get("engine", [])) + ")")
+        for e in ws.get("engine", []):
+            if e["dispatches"] > e["dispatch_budget"]:
+                failures.append(
+                    f"w_scaling engine W={e['W']} shards={e['shards']} "
+                    f"took {e['dispatches']} dispatches > budget "
+                    f"{e['dispatch_budget']} — the sharded round program "
+                    f"must keep ceil(epochs/eval_every) superstep "
+                    f"dispatches, layout is not allowed to break fusion")
+        if not ws.get("rows"):
+            failures.append("w_scaling entry has no rows")
 
     tm = fresh.get("telemetry")
     if not tm:

@@ -38,7 +38,8 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     data, *, ticks: int, num_malicious: int = 0,
                     scenario=None, speed_range=(0.3, 1.0),
                     target_epochs: int = 0, check_every: int = 0,
-                    host_exit: bool = False, stats=None, ledger=None):
+                    host_exit: bool = False, stats=None, ledger=None,
+                    shards=None):
     """Run until every vanilla worker reaches ``target_epochs`` (if >0) or
     for ``ticks`` ticks. Returns (state, adj, malicious, speeds).
 
@@ -61,7 +62,12 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     ``ledger``: a ``repro.telemetry.RunLedger`` — builds the round with a
     Telemetry registry so per-tick probe frames (plus the tick's ``fired``
     mask) ride the scan/while-loop buffers and flush into the ledger, same
-    dispatch count, state bit-identical to a ledger-less run."""
+    dispatch count, state bit-identical to a ledger-less run.
+
+    ``shards``: shard the worker axis over that many local devices (the
+    ``run_defta`` contract) — the tick body's transport becomes the
+    sharded local-block + cross-shard-ring mix and the while-loop carry
+    stays row-sharded. W need not divide ``shards``."""
     num_classes = 0
     if scenario is not None:
         if num_malicious:
@@ -89,11 +95,17 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     if ledger is not None:
         from repro.telemetry import Telemetry
         telemetry = Telemetry()
+    shard = None
+    if shards is not None and shards > 1:
+        from repro.sharding import WorkerShards, worker_mesh
+        shard = WorkerShards(mesh=worker_mesh(shards))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             scenario=scenario, num_classes=num_classes,
-                            telemetry=telemetry)
+                            telemetry=telemetry, shard=shard)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
+    if shard is not None:
+        jdata = shard.shard_leading(jdata, w)
     tick = build_fire_gated_tick(rnd_fn, jdata, speeds, w)
 
     if not check_every:
@@ -118,5 +130,6 @@ def run_async_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     state = drive_ticks(tick, state, tkeys, ticks, check_every=check_every,
                         required=required, target_epochs=target_epochs,
-                        host_exit=host_exit, stats=stats, ledger=ledger)
+                        host_exit=host_exit, stats=stats, ledger=ledger,
+                        shard=shard, shard_rows=w)
     return state, adj, malicious, np.asarray(speeds)

@@ -68,7 +68,8 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
                      data, *, world, epochs: int,
                      gossip_backend: str = "einsum", eval_every: int = 0,
                      test_x=None, test_y=None, probe: int = 32,
-                     superstep: bool = True, stats=None, ledger=None):
+                     superstep: bool = True, stats=None, ledger=None,
+                     shards=None):
     """Train a cross-device world for ``epochs`` global rounds.
 
     ``data``: the federated dataset dict sharded over the ENROLLED
@@ -82,6 +83,13 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     straggler counts, scatter writes, wire bytes, trust) ride the scan
     supersteps and flush into the ledger; same dispatch count, population
     state bit-identical to a ledger-less run.
+
+    ``shards``: shard the enrolled-N population buffers (and the per-user
+    data shards) across that many local devices on the worker mesh axis.
+    The per-round gather lowers to collectives, the dense k-block stays
+    replicated (k ≪ N), and the scatter merge writes back to the owning
+    shard — the PR 7 participation engine composed with the sharded
+    worker axis. Same dispatch count as the unsharded run.
     """
     world = resolve_world(world, epochs)
     if data["x"].shape[0] != world.enrolled:
@@ -95,10 +103,14 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     if ledger is not None:
         from repro.telemetry import Telemetry
         telemetry = Telemetry()
+    shard = None
+    if shards is not None and shards > 1:
+        from repro.sharding import WorkerShards, worker_mesh
+        shard = WorkerShards(mesh=worker_mesh(shards))
     rnd = build_cross_device_round(task, cfg, train, world, data["sizes"],
                                    gossip_backend=gossip_backend,
                                    num_classes=num_classes,
-                                   telemetry=telemetry)
+                                   telemetry=telemetry, shard=shard)
     jdata = {kk: jnp.asarray(v) for kk, v in data.items()
              if kk in ("x", "y", "mask")}
 
@@ -114,5 +126,6 @@ def run_cross_device(key, task: Task, cfg: DeFTAConfig, train: TrainConfig,
     state, hist = drive_epochs(rnd, state, jdata, epochs,
                                eval_every=eval_every, eval_fn=eval_fn,
                                superstep=superstep, stats=stats,
-                               ledger=ledger)
+                               ledger=ledger, shard=shard,
+                               shard_rows=world.enrolled)
     return state, hist

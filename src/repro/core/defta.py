@@ -46,7 +46,7 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                    gossip_backend: str = "einsum",
                    noise_scale: float = 200.0,
                    scenario=None, num_classes: int = 0,
-                   telemetry=None):
+                   telemetry=None, shard=None):
     """Returns an UN-jitted round(state, data, epoch=None) -> state body —
     scannable, so drivers can fuse many rounds into one XLA dispatch (and
     jittable as-is for single-round use; see ``build_round``). The body is
@@ -58,7 +58,8 @@ def build_round_fn(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     return build_defta_round(task, cfg, train, adj, sizes, malicious,
                              gossip_backend=gossip_backend,
                              noise_scale=noise_scale, scenario=scenario,
-                             num_classes=num_classes, telemetry=telemetry)
+                             num_classes=num_classes, telemetry=telemetry,
+                             shard=shard)
 
 
 def build_round(*args, **kwargs):
@@ -121,7 +122,8 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
               *, epochs: int, num_malicious: int = 0, scenario=None,
               gossip_backend: str = "einsum", eval_every: int = 0,
               test_x=None, test_y=None, superstep: bool = True,
-              stats: Optional[dict] = None, ledger=None):
+              stats: Optional[dict] = None, ledger=None,
+              shards: Optional[int] = None):
     """End-to-end driver. Malicious workers are appended after the vanilla
     ones (paper §4.3: normal workers fixed, attackers newly joined).
 
@@ -146,6 +148,13 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     and flush into the ledger (and its JSONL sink) at eval boundaries,
     with the SAME dispatch count; the traced state update is bit-identical
     to a ledger-less run. Without it nothing extra is traced.
+
+    ``shards``: shard the worker axis across that many local devices (a
+    1-D ``repro.sharding.worker_mesh``): per-device worker blocks carry
+    their own params/confidence/EF-residual/sketch rows, the transport
+    becomes the local-block-CSR + cross-shard-ring mix, and the donated
+    superstep buffers stay row-sharded — same dispatch count, W is a mesh
+    dimension instead of a memory ceiling. W need not divide ``shards``.
     """
     num_classes = 0
     if scenario is not None:
@@ -172,10 +181,14 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     if ledger is not None:
         from repro.telemetry import Telemetry
         telemetry = Telemetry()
+    shard = None
+    if shards is not None and shards > 1:
+        from repro.sharding import WorkerShards, worker_mesh
+        shard = WorkerShards(mesh=worker_mesh(shards))
     rnd_fn = build_round_fn(task, cfg, train, adj, sizes, malicious,
                             gossip_backend=gossip_backend,
                             scenario=scenario, num_classes=num_classes,
-                            telemetry=telemetry)
+                            telemetry=telemetry, shard=shard)
     jdata = {k: jnp.asarray(v) for k, v in data.items()
              if k in ("x", "y", "mask")}
 
@@ -187,7 +200,8 @@ def run_defta(key, task: Task, cfg: DeFTAConfig, train: TrainConfig, data,
     state, history = drive_epochs(rnd_fn, state, jdata, epochs,
                                   eval_every=eval_every, eval_fn=eval_fn,
                                   superstep=superstep, stats=stats,
-                                  ledger=ledger)
+                                  ledger=ledger, shard=shard,
+                                  shard_rows=w)
     return state, adj, malicious, history
 
 

@@ -74,8 +74,8 @@ import numpy as np
 from repro.config import DeFTAConfig, TrainConfig
 from repro.core import dts as dts_mod
 from repro.core.gossip import (dynamic_mixing_matrix, mix_pytree,
-                               mix_pytree_ppermute, normalize_wire,
-                               uses_error_feedback)
+                               mix_pytree_ppermute, mix_pytree_sharded,
+                               normalize_wire, uses_error_feedback)
 from repro.core.tasks import Task
 from repro.scenarios.attacks import tree_select
 
@@ -190,7 +190,7 @@ class Transport:
     ``core.gossip.mix_pytree`` contract: returns the mixed pytree, or
     ``(mixed, new_residual)`` when an EF21 residual pytree is passed.
     """
-    kind: str                    # "in_jit" | "ppermute"
+    kind: str                    # "in_jit" | "ppermute" | "sharded"
     wire: Optional[str]          # None | "bf16" | "int8"
     use_ef: bool
     stochastic: bool             # int8 stochastic rounding (in_jit only)
@@ -199,7 +199,7 @@ class Transport:
 
 def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
                    adjacency=None, mesh=None, axis: str = "pod",
-                   robust: bool = False) -> Transport:
+                   robust: bool = False, shard=None) -> Transport:
     """Build the transport stage from a ``DeFTAConfig``.
 
     ``mesh=None`` selects the ``in_jit`` transport (the einsum / pallas /
@@ -207,6 +207,12 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
     is the cross-pod ``ppermute`` ring (offset-skipping + per-edge nnz row
     selection, int8/bf16 payloads, EF residuals). Stochastic int8 rounding
     is an in_jit-only option — the ppermute encode rounds to nearest.
+
+    ``shard`` (a ``repro.sharding.WorkerShards``) selects the
+    worker-axis-sharded transport: intra-shard edges run the padded-CSR
+    sparse/quant kernels on the local block, cross-shard edges ride the
+    block-granular ppermute ring (``mix_pytree_sharded``). Like the
+    cross-pod ring it encodes row-local to nearest.
     """
     wire = normalize_wire(cfg.gossip_dtype)
     use_ef = uses_error_feedback(cfg)
@@ -221,7 +227,19 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
             f"comparing it against a lossy-wire DeFTA run would be "
             f"apples-to-oranges; set gossip_dtype='float32'")
 
-    if mesh is None:
+    if shard is not None:
+        if stochastic:
+            raise ValueError("wire_round='stochastic' is not supported on "
+                             "the sharded transport (row-local nearest "
+                             "encode only)")
+
+        def mix(P, stacked, residual=None, key=None):
+            del key
+            return mix_pytree_sharded(P, stacked, shard.mesh,
+                                      axis=shard.axis, adjacency=adjacency,
+                                      wire=wire, residual=residual)
+        kind = "sharded"
+    elif mesh is None:
         def mix(P, stacked, residual=None, key=None):
             return mix_pytree(P, stacked, backend=backend,
                               adjacency=adjacency, wire=wire,
@@ -278,6 +296,25 @@ def sketch_shape(cfg: DeFTAConfig):
     return None
 
 
+def constrain_worker_rows(tree, shard, n: int):
+    """with_sharding_constraint every leaf whose leading dim is ``n``
+    (the worker/enrolled count) to the worker-axis row sharding; leave
+    everything else (key, scalars) unconstrained. Applied to a round's
+    output state so GSPMD keeps the donated scan carry row-sharded
+    instead of collapsing it onto one device between rounds. An ``n``
+    not divisible by the shard count is left unconstrained (NamedSharding
+    needs even shards; the shard_map transport pads internally)."""
+    if shard is None or n % shard.shards:
+        return tree
+
+    def c(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == n:
+            return jax.lax.with_sharding_constraint(
+                x, shard.row_sharding(x.ndim))
+        return x
+    return jax.tree.map(c, tree)
+
+
 def run_pipeline(stages, ctx: dict) -> dict:
     """Execute the ordered (name, fn) stage tuple over the context. Each
     stage runs under a ``jax.named_scope`` so profiler traces (and XLA
@@ -301,7 +338,7 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                       noise_scale: float = 200.0,
                       scenario=None, num_classes: int = 0,
                       transport: Optional[Transport] = None,
-                      telemetry=None):
+                      telemetry=None, shard=None):
     """The DeFTA round program: returns an UN-jitted
     round(state, data, epoch=None) -> state body — scannable, so drivers
     fuse many rounds into one XLA dispatch (and jittable as-is for
@@ -326,6 +363,16 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     frame)`` so the scan driver stacks per-round frames as ys — zero
     extra dispatches. ``telemetry=None`` (default) traces NOTHING: the
     round body is bit-identical to the golden path.
+
+    ``shard``: a ``repro.sharding.WorkerShards``. When given, the default
+    transport becomes the worker-axis-sharded local-block-CSR +
+    cross-shard-ring mix, and the round constrains every [W, ...] leaf
+    of its output state to the worker row sharding so GSPMD keeps the
+    whole scanned carry distributed. The per-worker stages (train,
+    damage check, trust) are embarrassingly parallel over W and
+    partition from those constraints; the handful of cross-worker
+    reductions (outdegrees, geometry scores, telemetry means) lower to
+    collectives automatically. ``shard=None`` (default) changes nothing.
     """
     w = adj.shape[0]
     adj_j = jnp.asarray(adj)
@@ -367,7 +414,8 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         if scenario is not None and scenario.adj_union is not None:
             support = scenario.adj_union
         transport = make_transport(cfg, backend=gossip_backend,
-                                   adjacency=support, robust=robust)
+                                   adjacency=support, robust=robust,
+                                   shard=shard)
     use_ef = transport.use_ef
     stochastic = transport.stochastic
     regen = scenario is not None and scenario.adj_seg is not None
@@ -661,9 +709,10 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     def round(state: DeFTAState, data, epoch=None):
         c = {"state": state, "data": data, "epoch": epoch}
         run_pipeline(stages, c)
+        nxt = constrain_worker_rows(c["next"], shard, w)
         if telemetry is None:
-            return c["next"]
-        return c["next"], telemetry.collect(c, tm_specs)
+            return nxt
+        return nxt, telemetry.collect(c, tm_specs)
 
     round.stages = stages
     round.telemetry = telemetry
@@ -866,7 +915,8 @@ def build_fire_gated_tick(rnd_fn, jdata, speeds, w: int):
 
 def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
                  eval_fn=None, superstep: bool = True,
-                 stats: Optional[dict] = None, ledger=None):
+                 stats: Optional[dict] = None, ledger=None,
+                 shard=None, shard_rows: Optional[int] = None):
     """The chunked-scan superstep driver (shared by run_defta and
     run_fedavg): epochs advance inside ``jax.lax.scan`` chunks bounded by
     eval points, with the state buffers DONATED across chunks — a run is
@@ -883,18 +933,31 @@ def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
     the deprecated dict view: it gets ``ledger.as_stats()`` — the exact
     legacy ``{"dispatches": n, "epochs": e}`` keys.
 
+    With ``shard`` (a ``repro.sharding.WorkerShards``) the driver becomes
+    the SHARDED superstep: the state and the per-worker data are placed
+    row-sharded on the worker mesh axis before the first chunk
+    (``shard_rows`` = the worker/enrolled count, default
+    ``state.conf.shape[0]``), so every donated scan carry stays
+    distributed — same dispatch count, per-device worker blocks.
+
     Returns ``(state, history)``.
     """
     from repro.telemetry.ledger import RunLedger
     led = ledger if ledger is not None else RunLedger()
     telemetry = getattr(rnd_fn, "telemetry", None)
     history = []
+    if shard is not None:
+        n = shard_rows if shard_rows is not None else state.conf.shape[0]
+        state = shard.shard_leading(state, n)
+        jdata = shard.shard_leading(jdata, n)
 
     def flush(frames, start, n_rounds, wall):
         led.record_dispatch(n_rounds, wall)
         if telemetry is not None:
-            led.record_frames(
-                {kk: np.asarray(v) for kk, v in frames.items()}, start)
+            from repro.telemetry.spec import gather_frames
+            # host-gather: sharded probe buffers reassemble to the global
+            # layout so ledger rows are identical at any shard count
+            led.record_frames(gather_frames(frames), start)
 
     if not superstep:                       # per-epoch reference driver
         rnd = jax.jit(rnd_fn)
@@ -950,7 +1013,8 @@ def drive_epochs(rnd_fn, state, jdata, epochs: int, *, eval_every: int = 0,
 def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
                 required: np.ndarray, target_epochs: int = 0,
                 host_exit: bool = False, stats: Optional[dict] = None,
-                ledger=None):
+                ledger=None, shard=None,
+                shard_rows: Optional[int] = None):
     """The tick driver (AsyncDeFTA): ticks advance inside ``lax.scan``
     chunks with donated state buffers. The target_epochs early-exit
     predicate is evaluated DEVICE-SIDE by default: a ``lax.while_loop``
@@ -968,12 +1032,18 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
     (chunk frames written via ``dynamic_update_slice`` — still one
     dispatch) and the ledger keeps the ticks that actually ran.
 
-    ``tkeys``: [ticks, 2] per-tick PRNG keys. Returns the final state.
+    ``tkeys``: [ticks, 2] per-tick PRNG keys. ``shard`` (a
+    ``repro.sharding.WorkerShards``) places the state row-sharded on the
+    worker mesh axis before the first chunk, same contract as
+    ``drive_epochs``. Returns the final state.
     """
     from repro.telemetry.ledger import RunLedger
     led = ledger if ledger is not None else RunLedger()
     telemetry = getattr(tick_fn, "telemetry", None)
     ts_all = jnp.arange(ticks, dtype=jnp.int32)
+    if shard is not None:
+        n = shard_rows if shard_rows is not None else state.conf.shape[0]
+        state = shard.shard_leading(state, n)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def run_ticks(st, tk, ts):
@@ -983,8 +1053,8 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
     def flush(frames, start, n_ticks, wall):
         led.record_dispatch(n_ticks, wall)
         if telemetry is not None:
-            led.record_frames(
-                {kk: np.asarray(v) for kk, v in frames.items()}, start)
+            from repro.telemetry.spec import gather_frames
+            led.record_frames(gather_frames(frames), start)
 
     def finish(state):
         led.finish("ticks", ticks)
@@ -1060,8 +1130,9 @@ def drive_ticks(tick_fn, state, tkeys, ticks: int, *, check_every: int,
     valid = min(int(chunks_run) * check_every, ticks)
     led.record_dispatch(valid, wall)
     if telemetry is not None and valid:
+        from repro.telemetry.spec import gather_frames
         led.record_frames(
-            {kk: np.asarray(v)[:valid] for kk, v in bufs.items()}, 0)
+            {kk: v[:valid] for kk, v in gather_frames(bufs).items()}, 0)
     return finish(state)
 
 
@@ -1448,7 +1519,7 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
                              gossip_backend: str = "einsum",
                              num_classes: int = 0,
                              transport: Optional[Transport] = None,
-                             telemetry=None):
+                             telemetry=None, shard=None):
     """The cross-device round program: ``participation`` gathers the
     round's k-member cohort out of the enrolled population, the dense
     stages the engine already runs execute on the k-block, and
@@ -1485,6 +1556,12 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
     additionally drops peers whose model is > S rounds old (including
     never-participated users once t > S, whose "model" is still the
     round-0 init).
+
+    ``shard`` (a ``repro.sharding.WorkerShards``): shard the ENROLLED-N
+    population buffers across the worker mesh axis — the gather lowers
+    to collectives, the dense k-block stays replicated (k ≪ N), and the
+    scatter_merge writes back to the owning shard; the round constrains
+    its output state so the donated scan carry stays row-sharded.
     """
     n = int(world.enrolled)
     k = int(world.sample_k)
@@ -1799,9 +1876,10 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
     def round(state: CrossDeviceState, data, epoch=None):
         c = {"state": state, "data": data, "epoch": epoch}
         run_pipeline(stages, c)
+        nxt = constrain_worker_rows(c["next"], shard, n)
         if telemetry is None:
-            return c["next"]
-        return c["next"], telemetry.collect(c, tm_specs)
+            return nxt
+        return nxt, telemetry.collect(c, tm_specs)
 
     round.stages = stages
     round.cohort = (n, k)

@@ -439,3 +439,226 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     if residual is not None:
         return mixed, jax.tree.unflatten(treedef, new_rs)
     return mixed
+
+
+# ---------------------------------------------------------------------------
+# Worker-axis sharding: local-block CSR + block-granular cross-shard ring
+# ---------------------------------------------------------------------------
+
+class WorkerShardPlan:
+    """The static schedule of one sharded gossip round.
+
+    The W worker rows are padded to ``wp = shards × block`` and split into
+    per-shard blocks of ``block`` consecutive workers. The adjacency
+    support then splits into:
+
+    * the DIAGONAL blocks — intra-shard edges, compiled to one padded-CSR
+      support per shard (``idx``/``valid`` [S, B, K], local coordinates,
+      K = the max local row degree across shards) so the existing
+      ``gossip_mix_sparse``/``gossip_mix_quant`` kernels run unchanged on
+      the local block;
+    * the OFF-DIAGONAL blocks — cross-shard edges, compiled to a
+      block-granular ppermute ring: shard-offset ``d`` is used iff some
+      shard receives from the shard ``d`` ring positions behind it, and
+      its permutation names only the (src, dst) shard pairs with at least
+      one real edge. A shard therefore ships its whole block once per
+      DISTINCT destination shard — ring bytes scale with the number of
+      used shard PAIRS × block, not with W².
+
+    Padded worker rows get a self-loop only (weight supplied by the
+    identity padding of P), so the schedule never depends on W being
+    divisible by the shard count.
+    """
+
+    def __init__(self, adjacency, shards: int):
+        a0 = np.asarray(adjacency, bool)
+        w = a0.shape[0]
+        s = int(shards)
+        b = -(-w // s)                       # ceil(w / shards)
+        wp = s * b
+        a = np.zeros((wp, wp), bool)
+        a[:w, :w] = a0
+        np.fill_diagonal(a, True)            # self-loops (incl. padding)
+
+        # diagonal blocks -> per-shard padded-CSR support, local coords
+        k = 1
+        for si in range(s):
+            blk = a[si * b:(si + 1) * b, si * b:(si + 1) * b]
+            k = max(k, int(blk.sum(axis=1).max()))
+        idx = np.tile(np.arange(b, dtype=np.int32)[None, :, None],
+                      (s, 1, k))
+        valid = np.zeros((s, b, k), bool)
+        for si in range(s):
+            blk = a[si * b:(si + 1) * b, si * b:(si + 1) * b]
+            for i in range(b):
+                peers = np.flatnonzero(blk[i]).astype(np.int32)
+                idx[si, i, :peers.size] = peers
+                valid[si, i, :peers.size] = True
+
+        # off-diagonal blocks -> block-granular ring schedule
+        pairs = []
+        for src in range(s):
+            for dst in range(s):
+                if src == dst:
+                    continue
+                if a[dst * b:(dst + 1) * b, src * b:(src + 1) * b].any():
+                    pairs.append((src, dst))
+        perms = {}
+        for src, dst in pairs:
+            perms.setdefault((dst - src) % s, []).append((src, dst))
+
+        at = a0 | np.eye(w, dtype=bool)      # true-W support, self-loops in
+        intra = 0
+        for si in range(s):
+            intra += int(at[si * b:min((si + 1) * b, w),
+                            si * b:min((si + 1) * b, w)].sum())
+
+        idx.setflags(write=False)
+        valid.setflags(write=False)
+        self.w, self.shards, self.block, self.wp = w, s, b, wp
+        self.idx, self.valid = idx, valid
+        self.pairs = tuple(pairs)
+        self.used_offsets = tuple(sorted(perms))
+        self.perms = {d: tuple(p) for d, p in perms.items()}
+        self.intra_edges = intra
+        self.cross_edges = int(at.sum()) - intra
+
+    def ring_bytes(self, n_params: int, wire=None, *, rows: int = 1) -> int:
+        """Cross-shard wire bytes of ONE sharded round: every used shard
+        pair ships one block of ``block`` worker payloads (int8 payloads
+        carry their per-row scales). This is the contract
+        ``launch.roofline.sharded_ring_bytes`` must reproduce."""
+        from repro.launch.roofline import gossip_wire_bytes
+        payload = gossip_wire_bytes(n_params, wire, rows=rows)
+        return len(self.pairs) * self.block * payload
+
+
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 16
+
+
+def worker_shard_plan(adjacency, shards: int) -> WorkerShardPlan:
+    """Memoized ``WorkerShardPlan`` (same LRU discipline as
+    ``sparse_support`` — the plan re-derives on every trace otherwise)."""
+    a = np.asarray(adjacency, bool)
+    key = (a.shape, a.tobytes(), int(shards))
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _PLAN_CACHE[key] = _PLAN_CACHE.pop(key)
+        return cached
+    while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    plan = WorkerShardPlan(a, shards)
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def mix_pytree_sharded(P, stacked, mesh, axis: str = "worker",
+                       adjacency=None, wire=None, residual=None):
+    """Worker-axis-sharded gossip: intra-shard edges run the padded-CSR
+    sparse/quant kernels on the LOCAL block, cross-shard edges ride a
+    block-granular ppermute ring (``WorkerShardPlan``). Same contract as
+    ``mix_pytree``/``mix_pytree_ppermute``: P [W, W] row-stochastic with
+    support ⊆ adjacency ∪ self-loops, ``stacked`` a pytree with leading
+    axis W, optional lossy ``wire`` + EF21 ``residual``.
+
+    W need not divide the shard count: rows pad to ``shards × block``
+    with identity mixing rows and zero payloads, and the padding is
+    sliced away before returning. Encoding (and the EF residual) is
+    row-local and computed at true W outside the shard_map, so the wire
+    numerics match the other transports row for row.
+    """
+    from jax.sharding import PartitionSpec as Ps
+
+    from repro.compat import shard_map
+    from repro.kernels.ops import gossip_mix_quant, gossip_mix_sparse
+
+    w = P.shape[0]
+    wire = normalize_wire(wire)
+    if residual is not None and wire is None:
+        raise ValueError("error-feedback residual needs a lossy wire "
+                         "(wire='bf16'|'int8')")
+    if adjacency is None:                    # documented dense fallback
+        adjacency = np.ones((w, w), bool)
+    shards = int(mesh.shape[axis])
+    plan = worker_shard_plan(adjacency, shards)
+    b, wp = plan.block, plan.wp
+
+    leaves, treedef = jax.tree.flatten(stacked)
+    r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
+        else [None] * len(leaves)
+
+    # encode at true W (row-local; identical numerics to the other
+    # transports), then pad rows to the sharded extent
+    payloads, scales, new_rs = [], [], []
+    for x, r in zip(leaves, r_leaves):
+        flat = x.reshape(w, -1)
+        if wire is None:
+            payload, scale, nr = flat, None, r
+        else:
+            r_flat = r.reshape(w, -1) if r is not None else None
+            payload, scale, nr = _encode_rows(flat, r_flat, wire)
+            nr = nr.reshape(x.shape) if nr is not None else None
+        payloads.append(jnp.pad(payload, ((0, wp - w), (0, 0))))
+        scales.append(None if scale is None
+                      else jnp.pad(scale, (0, wp - w), constant_values=1.0))
+        new_rs.append(nr)
+    has_scale = wire == "int8"
+
+    Pp = jnp.pad(P.astype(jnp.float32), ((0, wp - w), (0, wp - w)))
+    if wp > w:                               # identity rows for the padding
+        pad_eye = np.zeros((wp, wp), np.float32)
+        pad_eye[np.arange(w, wp), np.arange(w, wp)] = 1.0
+        Pp = Pp + jnp.asarray(pad_eye)
+    idx_j = jnp.asarray(plan.idx)
+    valid_j = jnp.asarray(plan.valid, jnp.float32)
+
+    def body(p_local, idxb, validb, *args):
+        # p_local [B, Wp]: this shard's mixing rows; idxb/validb [1, B, K]
+        # the shard's local-block CSR; payload leaves [B, F] local rows
+        # (int8 wire appends one [B] scale vector per leaf).
+        idx_l, valid_l = idxb[0], validb[0]
+        si = jax.lax.axis_index(axis)
+        n = len(leaves)
+        qs = args[:n]
+        scs = args[n:] if has_scale else (None,) * n
+        p_diag = jax.lax.dynamic_slice(p_local, (0, si * b), (b, b))
+        val = jnp.take_along_axis(p_diag, idx_l, axis=1) * valid_l
+        outs = []
+        for q, s_ in zip(qs, scs):
+            if s_ is not None:               # fused dequant CSR kernel
+                acc = gossip_mix_quant(idx_l, val, s_, q,
+                                       out_dtype=jnp.float32)
+            else:
+                acc = gossip_mix_sparse(idx_l, val, q,
+                                        out_dtype=jnp.float32)
+            for d in plan.used_offsets:
+                perm = plan.perms[d]
+                qq = jax.lax.ppermute(q, axis, perm)
+                ss = jax.lax.ppermute(s_, axis, perm) \
+                    if s_ is not None else None
+                src = (si - d) % shards
+                blk = jax.lax.dynamic_slice(
+                    p_local, (0, src * b), (b, b)).astype(jnp.float32)
+                if ss is not None:           # dequant: scale into columns
+                    blk = blk * ss[None, :]
+                acc = acc + blk @ qq.astype(jnp.float32)
+            outs.append(acc)
+        return tuple(outs)
+
+    specs = tuple(Ps(axis, None) for _ in leaves)
+    in_specs = (Ps(axis, None), Ps(axis, None, None),
+                Ps(axis, None, None)) + specs
+    operands = list(payloads)
+    if has_scale:
+        in_specs = in_specs + tuple(Ps(axis) for _ in leaves)
+        operands += scales
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=specs, check_vma=False)
+    out_leaves = fn(Pp, idx_j, valid_j, *operands)
+    out_leaves = [o[:w].reshape(x.shape).astype(x.dtype)
+                  for o, x in zip(out_leaves, leaves)]
+    mixed = jax.tree.unflatten(treedef, out_leaves)
+    if residual is not None:
+        return mixed, jax.tree.unflatten(treedef, new_rs)
+    return mixed

@@ -13,10 +13,20 @@ import numpy as np
 
 
 def dirichlet_partition(labels: np.ndarray, num_workers: int, alpha: float,
-                        rng: np.random.Generator, min_size: int = 2):
-    """Returns list of index arrays, one per worker."""
+                        rng: np.random.Generator, min_size: int = 2,
+                        max_tries: int = 5):
+    """Returns list of index arrays, one per worker.
+
+    Retries are BOUNDED: at large worker counts with few samples per
+    worker, P(every worker draws >= min_size) is effectively zero, so an
+    unconditional retry loop never terminates. After ``max_tries`` draws
+    the best attempt is topped up deterministically — starved workers
+    take indices from the largest ones. Runs that satisfy ``min_size``
+    on a retry keep the exact historical output.
+    """
     classes = np.unique(labels)
-    while True:
+    best, best_min = None, -1
+    for _ in range(max_tries):
         idx_per_worker = [[] for _ in range(num_workers)]
         for c in classes:
             idx_c = np.where(labels == c)[0]
@@ -28,6 +38,17 @@ def dirichlet_partition(labels: np.ndarray, num_workers: int, alpha: float,
         sizes = [len(ix) for ix in idx_per_worker]
         if min(sizes) >= min_size:
             return [np.asarray(sorted(ix)) for ix in idx_per_worker]
+        if min(sizes) > best_min:
+            best, best_min = idx_per_worker, min(sizes)
+    # top up starved workers from the richest ones (stable, rng-free)
+    sizes = np.asarray([len(ix) for ix in best])
+    for w in np.flatnonzero(sizes < min_size):
+        while sizes[w] < min_size:
+            donor = int(np.argmax(sizes))
+            best[w].append(best[donor].pop())
+            sizes[w] += 1
+            sizes[donor] -= 1
+    return [np.asarray(sorted(ix)) for ix in best]
 
 
 def shard_partition(labels: np.ndarray, num_workers: int,

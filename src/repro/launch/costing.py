@@ -119,6 +119,53 @@ def participation_cost(cfg: ModelConfig, enrolled: int, sample_k: int, *,
     }
 
 
+def worker_shard_cost(cfg: ModelConfig, w: int, shards: int, *, wire=None,
+                      adjacency=None) -> Dict[str, float]:
+    """Cross-shard cost column for a worker-axis-sharded round program.
+
+    Three things a dry-run wants to see before committing a 10k–100k
+    worker world to a mesh:
+
+    * ``per_shard_hbm_bytes`` — the per-device slice of the carried
+      worker state (params + best-eval backup + the EF21 residual on
+      lossy wires, fp32, plus the W-wide confidence row), ``block``
+      workers per shard. This is THE number the sharded layout buys:
+      it shrinks 1/shards while the replicated layout pins the whole
+      [W, ...] stack on every device.
+    * ``intra_edges`` / ``cross_edges`` — how the topology's support
+      splits at shard-block granularity (intra runs the padded-CSR
+      kernels on-device, cross rides the ring).
+    * ``ring_bytes`` / ``bytes_per_boundary`` — the cross-shard ppermute
+      contract of ``roofline.sharded_ring_bytes``: used shard pairs ×
+      block × payload.
+    """
+    import numpy as np
+
+    from repro.core.gossip import WIRE_BYTES as _WB
+    from repro.core.topology import make_topology
+    from repro.launch.roofline import ICI_BW, sharded_ring_bytes
+
+    sds = model_mod.abstract_params(cfg)
+    leaves = jax.tree.leaves(sds)
+    n_params = sum(int(np.prod(s.shape)) for s in leaves)
+    if adjacency is None:
+        adjacency = make_topology("dense", w, w - 1)
+    info = sharded_ring_bytes(n_params, adjacency, shards, wire,
+                              rows=len(leaves))
+    lossy = _WB.get(wire, 4) < 4
+    copies = 3 if lossy else 2               # params + backup (+ residual)
+    per_worker = n_params * 4 * copies + w * 4
+    return {
+        **info,
+        "wire": wire or "fp32",
+        "n_params": float(n_params),
+        "state_bytes_per_worker": float(per_worker),
+        "per_shard_hbm_bytes": float(info["block"] * per_worker),
+        "replicated_hbm_bytes": float(w * per_worker),
+        "t_ici_s": info["ring_bytes"] / (shards * ICI_BW),
+    }
+
+
 def telemetry_cost(num_workers: int, window: int, *, kind: str = "defta",
                    scenario: bool = True, use_ef: bool = False,
                    tick: bool = False) -> Dict[str, float]:

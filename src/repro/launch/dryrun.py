@@ -85,7 +85,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                variant: str = "baseline", optimizer: str = "",
                accum_dtype: str = "float32", fl: bool = True,
                scenario: str = "", cd_enrolled: int = 10_000,
-               cd_sample_k: int = 64, verbose: bool = True):
+               cd_sample_k: int = 64, shard_workers: int = 8,
+               verbose: bool = True):
     """Lower + compile one (arch, shape, mesh). Returns result dict.
 
     ``fl=False`` with multi_pod lowers the FedAvg-across-pods baseline:
@@ -218,6 +219,45 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "full_participation_wire_gbytes_per_round":
                 p0["round_bytes_full_participation"] / 1e9,
         }
+        # worker-sharding column: the cross-shard contract of a sharded
+        # round program at simulation scale — per-shard HBM for the
+        # carried worker state, how the topology's support splits into
+        # intra-shard (padded-CSR, on-device) vs cross-shard (ppermute
+        # ring) edges, and the ring bytes per shard boundary
+        # (roofline.sharded_ring_bytes == WorkerShardPlan.ring_bytes)
+        from repro.core.topology import make_topology as _mt
+        from repro.launch.costing import worker_shard_cost
+        ws_w = cd_enrolled
+        ws_adj = _mt("random_kout", ws_w, 4, seed=0)
+        ws = {fmt: worker_shard_cost(cfg, ws_w, shard_workers, wire=fmt,
+                                     adjacency=ws_adj)
+              for fmt in (None, "bf16", "int8")}
+        ws0 = ws[None]
+        gossip_info["worker_sharding"] = {
+            "workers": ws_w,
+            "shards": ws0["shards"],
+            "block": ws0["block"],
+            "intra_edges": ws0["intra_edges"],
+            "cross_edges": ws0["cross_edges"],
+            "used_shard_pairs": ws0["used_pairs"],
+            "per_shard_hbm_gb": ws0["per_shard_hbm_bytes"] / 1e9,
+            "replicated_hbm_gb": ws0["replicated_hbm_bytes"] / 1e9,
+            "ring_gbytes_per_round": {
+                fmt or "fp32": c["ring_bytes"] / 1e9
+                for fmt, c in ws.items()},
+            "bytes_per_boundary": {
+                fmt or "fp32": c["bytes_per_boundary"]
+                for fmt, c in ws.items()},
+        }
+        if verbose:
+            print(f"  worker sharding: {ws_w} workers / "
+                  f"{ws0['shards']} shards (block {ws0['block']}) -> "
+                  f"{ws0['per_shard_hbm_bytes'] / 1e9:.2f} GB/shard vs "
+                  f"{ws0['replicated_hbm_bytes'] / 1e9:.2f} replicated; "
+                  f"edges {ws0['intra_edges']} intra / "
+                  f"{ws0['cross_edges']} cross "
+                  f"({ws0['used_pairs']} shard pairs on the ring, "
+                  f"{ws0['ring_bytes'] / 1e9:.2f} GB/round fp32)")
         # telemetry-plane buffer column: what the in-scan metrics probes
         # add to the carried state when a run streams a ledger — device
         # buffer bytes only, zero extra dispatches (repro/telemetry)
@@ -361,6 +401,10 @@ def main():
     ap.add_argument("--cd-sample-k", type=int, default=64,
                     help="cross-device participation column: per-round "
                     "cohort size")
+    ap.add_argument("--shard-workers", type=int, default=8,
+                    help="worker-sharding column: shard count for the "
+                    "cross-shard HBM / ring-bytes contract (multi-pod "
+                    "FL dry-runs)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -390,7 +434,8 @@ def main():
                              fl=not args.fedavg_baseline,
                              scenario=args.scenario,
                              cd_enrolled=args.cd_enrolled,
-                             cd_sample_k=args.cd_sample_k)
+                             cd_sample_k=args.cd_sample_k,
+                             shard_workers=args.shard_workers)
         except Exception as e:  # record failures; they are bugs to fix
             traceback.print_exc()
             res = {"arch": arch, "shape": shape, "status": "FAILED",

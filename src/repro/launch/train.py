@@ -129,6 +129,10 @@ def run_scenario_sim(args) -> int:
 
     key = jax.random.PRNGKey(cfg.seed)
     stats: dict = {}
+    shards = args.shard_workers if args.shard_workers > 1 else None
+    if shards:
+        print(f"worker axis sharded over {shards} devices "
+              f"({len(jax.devices())} visible)")
     ledger, sink = make_ledger(args, cfg, "async" if args.async_ticks
                                else "scenario")
     profiling = start_profile(args)
@@ -137,13 +141,13 @@ def run_scenario_sim(args) -> int:
         st, adj, mal, _ = run_async_defta(
             key, task, cfg, train, data, ticks=args.async_ticks,
             scenario=compiled, target_epochs=args.sim_epochs, stats=stats,
-            ledger=ledger)
+            ledger=ledger, shards=shards)
     else:
         st, adj, mal, hist = run_defta(
             key, task, cfg, train, data, epochs=args.sim_epochs,
             scenario=compiled, eval_every=max(args.sim_epochs // 4, 1),
             test_x=data["test_x"], test_y=data["test_y"], stats=stats,
-            ledger=ledger)
+            ledger=ledger, shards=shards)
         for e, m, s in hist:
             print(f"  epoch {e:4d}: vanilla acc {m:.3f} ± {s:.3f}")
     stop_profile(args, profiling)
@@ -157,6 +161,13 @@ def run_scenario_sim(args) -> int:
     print(f"final vanilla acc {m:.3f} ± {s:.3f} "
           f"({stats.get('dispatches', '?')} dispatches, "
           f"{time.time() - t0:.1f}s, epochs={np.asarray(st.epoch).tolist()})")
+    if shards and not args.async_ticks:
+        budget = -(-args.sim_epochs // max(args.sim_epochs // 4, 1))
+        if stats.get("dispatches", 0) > budget:
+            print(f"FAIL: {stats['dispatches']} dispatches > "
+                  f"ceil(epochs/eval_every) = {budget} — the sharded "
+                  f"round program broke the superstep fusion")
+            return 1
     if args.assert_acc and m < args.assert_acc:
         print(f"FAIL: vanilla accuracy {m:.3f} < --assert-acc "
               f"{args.assert_acc}")
@@ -207,6 +218,10 @@ def run_cross_device_sim(args) -> int:
     eval_every = max(args.sim_epochs // 4, 1)
     budget = -(-args.sim_epochs // eval_every)
     stats: dict = {}
+    shards = args.shard_workers if args.shard_workers > 1 else None
+    if shards:
+        print(f"enrolled axis sharded over {shards} devices "
+              f"({len(jax.devices())} visible)")
     ledger, sink = make_ledger(args, cfg, "cross_device")
     profiling = start_profile(args)
     t0 = time.time()
@@ -214,7 +229,7 @@ def run_cross_device_sim(args) -> int:
         jax.random.PRNGKey(cfg.seed), task, cfg, train, data, world=world,
         epochs=args.sim_epochs, eval_every=eval_every,
         test_x=data["test_x"], test_y=data["test_y"], stats=stats,
-        ledger=ledger)
+        ledger=ledger, shards=shards)
     stop_profile(args, profiling)
     if sink is not None:
         sink.close()
@@ -359,7 +374,21 @@ def main():
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="drop a peer's contribution when its model is "
                          "more than this many rounds stale (0 = off)")
+    ap.add_argument("--shard-workers", type=int, default=0,
+                    help="shard the worker/enrolled axis of the "
+                         "simulation engines over this many devices "
+                         "(sets XLA_FLAGS to force that many host "
+                         "devices on CPU; see docs/ARCHITECTURE.md "
+                         "'Sharded worker axis'). Scenario runs exit 1 "
+                         "on dispatch-parity violation")
     args = ap.parse_args()
+
+    if args.shard_workers > 1:
+        # must land before ANY jax import — the sim paths import jax inside
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.shard_workers}")
 
     if args.cross_device:
         raise SystemExit(run_cross_device_sim(args))

@@ -27,7 +27,7 @@ a telemetry-on run carries.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -53,6 +53,20 @@ class MetricSpec:
 def frame_bytes(specs) -> int:
     """Per-round bytes of one telemetry frame over ``specs``."""
     return sum(s.nbytes for s in specs)
+
+
+def gather_frames(frames: Dict[str, object]) -> Dict[str, np.ndarray]:
+    """Host-gather a dict of stacked probe buffers to plain numpy.
+
+    The single normalization point between the drivers and the RunLedger:
+    under a sharded worker axis the scanned ``[chunk, W]`` probe buffers
+    come back as distributed jax arrays (per-device worker blocks), and
+    the ledger's rows must be LAYOUT-INDEPENDENT — identical whether the
+    round ran on one device or sixteen shards. ``jax.device_get`` fetches
+    every addressable shard and reassembles the global array; plain (or
+    already-numpy) values pass through unchanged."""
+    import jax
+    return {k: np.asarray(jax.device_get(v)) for k, v in frames.items()}
 
 
 class Telemetry:

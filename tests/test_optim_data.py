@@ -82,6 +82,22 @@ def test_dirichlet_partition_covers_everything():
     assert len(np.unique(allidx)) == 2000
 
 
+def test_dirichlet_partition_terminates_at_scale():
+    """Many workers x few samples: P(every worker draws >= min_size) is
+    ~0, so the old unconditional retry loop never returned. The bounded
+    retry + deterministic top-up must terminate, cover every index
+    exactly once, and still give each worker min_size."""
+    rng = np.random.default_rng(0)
+    n_workers, n = 2000, 4000          # 2 samples/worker expected
+    labels = rng.integers(0, 10, size=n)
+    parts = dirichlet_partition(labels, n_workers, alpha=0.5, rng=rng,
+                                min_size=2)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+    assert min(len(ix) for ix in parts) >= 2
+
+
 def test_dirichlet_more_noniid_with_small_alpha():
     rng = np.random.default_rng(1)
     labels = rng.integers(0, 10, size=4000)

@@ -1,0 +1,180 @@
+"""sharding.py unit tests: the logical-rules resolver's edge paths (tuple
+mesh axes, outside-mesh no-op, the non-divisible demotion warning) and the
+worker-axis shard plan (``core.gossip.WorkerShardPlan`` vs the
+``launch.roofline.sharded_ring_bytes`` contract).
+
+Mesh-dependent cases run in a forced-multi-device subprocess (the main
+pytest process keeps the default single CPU device — same discipline as
+test_distributed.py); the plan/roofline arithmetic is pure numpy and runs
+in-process.
+"""
+import numpy as np
+
+from test_distributed import run_py
+
+from repro.core.gossip import WorkerShardPlan, worker_shard_plan
+from repro.core.topology import make_topology
+from repro.launch.roofline import gossip_wire_bytes, sharded_ring_bytes
+
+
+# ---------------------------------------------------------------------------
+# resolver edge paths
+# ---------------------------------------------------------------------------
+
+def test_resolve_spec_outside_mesh_is_noop():
+    """Without installed rules, resolve_spec is None and constrain is the
+    identity — model code must run unannotated in single-device tests."""
+    import jax.numpy as jnp
+
+    from repro.sharding import constrain, resolve_spec
+
+    assert resolve_spec(("worker", None), (8, 4)) is None
+    x = jnp.arange(6.0).reshape(2, 3)
+    assert constrain(x, "worker", None) is x
+
+
+def test_mesh_axis_size_tuple_axes():
+    """A tuple rule shards over the PRODUCT of mesh axes — and an
+    indivisible dim demotes against that product, not a single factor."""
+    run_py("""
+        import warnings
+        import jax
+        from jax.sharding import Mesh, PartitionSpec as P
+        import numpy as np
+        from repro.sharding import _mesh_axis_size, logical_rules, \\
+            resolve_spec
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        assert _mesh_axis_size(mesh, None) == 1
+        assert _mesh_axis_size(mesh, "data") == 4
+        assert _mesh_axis_size(mesh, ("data", "model")) == 8
+        assert _mesh_axis_size(mesh, ["model"]) == 2
+
+        with logical_rules(mesh, {"batch": ("data", "model")}):
+            # divisible by the 4x2 product: sharded over both axes
+            assert resolve_spec(("batch", None), (16, 3)) == \\
+                P(("data", "model"), None)
+            # divisible by 4 but not 8: demotes (with a warning)
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                assert resolve_spec(("batch", None), (12, 3)) == P(None, None)
+            assert any("not divisible" in str(r.message) for r in rec), rec
+        print("ok")
+    """, devices=8)
+
+
+def test_demotion_warns_once_per_site():
+    run_py("""
+        import warnings
+        import jax
+        from jax.sharding import Mesh
+        import numpy as np
+        from repro.sharding import logical_rules, resolve_spec
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        with logical_rules(mesh, {"batch": "data"}):
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                for _ in range(5):
+                    resolve_spec(("batch",), (10,))   # 10 % 8 != 0
+            hits = [r for r in rec if "not divisible" in str(r.message)]
+            assert len(hits) == 1, [str(r.message) for r in rec]
+            # a DIFFERENT dim is a different site: warns again, once
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                for _ in range(3):
+                    resolve_spec(("batch",), (11,))
+            hits = [r for r in rec if "not divisible" in str(r.message)]
+            assert len(hits) == 1
+        print("ok")
+    """, devices=8)
+
+
+def test_worker_shards_placement_even_and_uneven():
+    """shard_leading row-shards [n, ...] leaves on an even worker count
+    and falls back to replicated (warning once) on an uneven one."""
+    run_py("""
+        import warnings
+        import jax, jax.numpy as jnp
+        from repro.sharding import WorkerShards, worker_mesh
+
+        ws = WorkerShards(mesh=worker_mesh(8))
+        assert ws.shards == 8
+
+        tree = {"p": jnp.zeros((16, 3)), "k": jnp.zeros((2,))}
+        out = ws.shard_leading(tree, 16)
+        assert out["p"].sharding.spec == ws.row_sharding(2).spec
+        assert out["k"].sharding.spec == ws.replicated().spec
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            out = ws.shard_leading({"p": jnp.zeros((10, 3))}, 10)
+            ws.shard_leading({"p": jnp.zeros((10, 3))}, 10)  # warn-once
+        hits = [r for r in rec if "not divisible" in str(r.message)]
+        assert len(hits) == 1, [str(r.message) for r in rec]
+        assert out["p"].sharding.spec == ws.replicated().spec
+        print("ok")
+    """, devices=8)
+
+
+# ---------------------------------------------------------------------------
+# the worker shard plan (pure numpy — no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_shard_plan_shapes_and_padding():
+    adj = make_topology("random_kout", 10, 3, seed=1)
+    plan = WorkerShardPlan(adj, 4)
+    assert (plan.w, plan.shards, plan.block, plan.wp) == (10, 4, 3, 12)
+    assert plan.idx.shape == plan.valid.shape == (4, 3, plan.idx.shape[2])
+    # padded rows (10, 11 -> shard 3 locals 1, 2) carry a self-loop only
+    for local in (1, 2):
+        row_valid = plan.valid[3, local]
+        assert row_valid.sum() == 1
+        assert plan.idx[3, local][row_valid][0] == local
+
+
+def test_shard_plan_edge_split_matches_support():
+    """intra + cross == total true-W support (self-loops included), and
+    every counted cross edge lives in some used shard pair."""
+    adj = make_topology("erdos", 23, 4, seed=7)
+    plan = WorkerShardPlan(adj, 4)
+    at = np.asarray(adj, bool) | np.eye(23, dtype=bool)
+    assert plan.intra_edges + plan.cross_edges == int(at.sum())
+    assert all(src != dst for src, dst in plan.pairs)
+    # offsets partition the pairs
+    assert sum(len(v) for v in plan.perms.values()) == len(plan.pairs)
+    assert set(plan.perms) == set(plan.used_offsets)
+
+
+def test_shard_plan_single_shard_has_no_ring():
+    adj = make_topology("ring", 9, 2, seed=0)
+    plan = WorkerShardPlan(adj, 1)
+    assert plan.pairs == ()
+    assert plan.used_offsets == ()
+    assert plan.cross_edges == 0
+    assert plan.ring_bytes(1000) == 0
+
+
+def test_shard_plan_ring_bytes_matches_roofline():
+    """WorkerShardPlan.ring_bytes == launch.roofline.sharded_ring_bytes —
+    the transport and the dry-run cost model may never disagree."""
+    for w, s, kind in [(16, 4, "random_kout"), (100, 8, "erdos"),
+                       (37, 8, "random_kout"), (12, 1, "ring")]:
+        adj = make_topology(kind, w, 4, seed=3)
+        plan = worker_shard_plan(adj, s)
+        for wire, rows in [(None, 1), ("bf16", 3), ("int8", 5)]:
+            info = sharded_ring_bytes(999, adj, s, wire, rows=rows)
+            assert info["ring_bytes"] == plan.ring_bytes(999, wire,
+                                                         rows=rows)
+            assert info["intra_edges"] == plan.intra_edges
+            assert info["cross_edges"] == plan.cross_edges
+            assert info["used_pairs"] == len(plan.pairs)
+            assert info["block"] == plan.block
+            assert info["bytes_per_boundary"] == \
+                plan.block * gossip_wire_bytes(999, wire, rows=rows)
+
+
+def test_worker_shard_plan_memoized():
+    adj = make_topology("random_kout", 12, 3, seed=2)
+    assert worker_shard_plan(adj, 4) is worker_shard_plan(adj.copy(), 4)
+    assert worker_shard_plan(adj, 4) is not worker_shard_plan(adj, 3)
