@@ -46,6 +46,14 @@ fails (exit 1) when the headline wins regress:
   ``roofline.sharded_ring_bytes`` re-derivation, and the sharded engine
   must stay on the ceil(epochs/eval_every) superstep dispatch budget at
   every shard count (layout may not break scan fusion);
+* the privacy wire must keep its contracts: a clean secagg run lands
+  within 0.01 of the unmasked run (the in-ring OTP decodes bit for bit),
+  the realized mask-byte accounting equals the independent
+  ``roofline.secagg_pad_bytes`` re-derivation with ZERO wire overhead
+  (the pad rides in place), every secagg run stays on the
+  ceil(epochs/eval_every) dispatch budget, and the masked_geom
+  attacked-accuracy row family (per-peer vs aggregate-only trust) is
+  present;
 * the telemetry plane must stay free: a round built with a Telemetry
   registry keeps DISPATCH PARITY with a probe-less build (probe frames
   ride the scan as stacked ys, never control flow) and its steady
@@ -315,6 +323,54 @@ def check(baseline, fresh, tolerance):
                     f"dispatches, layout is not allowed to break fusion")
         if not ws.get("rows"):
             failures.append("w_scaling entry has no rows")
+
+    pv = fresh.get("privacy")
+    if not pv:
+        failures.append("fresh bench has no privacy entry")
+    else:
+        print(f"secagg clean parity: unmasked {pv['clean_acc']:.3f} vs "
+              f"masked {pv['secagg_acc']:.3f} "
+              f"(delta {pv['clean_delta']:.4f})")
+        if pv["clean_delta"] > 0.01:
+            failures.append(
+                f"secagg clean accuracy delta {pv['clean_delta']:.4f} > "
+                f"0.01 — the masked wire must decode bit for bit, so a "
+                f"clean secagg run may not drift from the unmasked run")
+        if not pv.get("mask_bytes_ok"):
+            failures.append(
+                f"secagg mask-byte accounting diverged from the roofline "
+                f"contract (core.secagg.secagg_mask_bytes != "
+                f"roofline.secagg_pad_bytes): {pv.get('mask_bytes')}")
+        for fmt, row in pv.get("mask_bytes", {}).items():
+            if row.get("wire_overhead_bytes", 0) != 0:
+                failures.append(
+                    f"secagg {fmt} wire overhead "
+                    f"{row['wire_overhead_bytes']} B != 0 — the OTP must "
+                    f"mask in place in the wire format's integer ring, "
+                    f"never widen the payload")
+        budget = pv["dispatch_budget"]
+        disp = {**pv.get("dispatches", {}),
+                **{f"attacked:{m}": r["dispatches"]
+                   for m, r in pv.get("attacked", {}).items()}}
+        print("secagg dispatches: "
+              + " ".join(f"{n}={d}" for n, d in disp.items())
+              + f" (budget {budget})")
+        for name, d in disp.items():
+            if d > budget:
+                failures.append(
+                    f"secagg {name} run took {d} dispatches > budget "
+                    f"{budget} — pad derivation must stay traced data "
+                    f"flow inside the scanned superstep, never a "
+                    f"per-round host round-trip")
+        att = pv.get("attacked", {})
+        if "edge" in att and "masked_geom" in att:
+            print(f"secagg masked_geom row family: edge "
+                  f"{att['edge']['acc']:.3f} vs masked_geom "
+                  f"{att['masked_geom']['acc']:.3f} "
+                  f"(delta {pv['masked_geom_delta']:+.3f})")
+        else:
+            failures.append("privacy entry has no edge/masked_geom "
+                            "attacked row family")
 
     tm = fresh.get("telemetry")
     if not tm:

@@ -17,6 +17,7 @@ sparse-observation trust headline) and the telemetry-plane cost contract
 metrics buffers must stay free; bench_telemetry)."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -155,6 +156,7 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
     trust_grid = bench_trust_grid()
     cross_device = bench_cross_device(trust_grid=trust_grid)
     w_scaling = bench_w_scaling()
+    privacy = bench_secagg()
     payload = dict(feature_dim=f, rows=rows, superstep=superstep,
                    quant_convergence=quant_convergence,
                    scenario_overhead=scenario_overhead,
@@ -162,7 +164,7 @@ def bench_gossip(f: int = 4096, out_path: str = "BENCH_gossip.json"):
                    geom_trust=geom_trust, corr_trust=corr_trust,
                    telemetry=telemetry,
                    trust_grid=trust_grid, cross_device=cross_device,
-                   w_scaling=w_scaling)
+                   w_scaling=w_scaling, privacy=privacy)
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -728,6 +730,116 @@ def bench_cross_device(rounds: int = 120, dense_epochs: int = 40,
                 eval_every=eval_every, dispatch_budget=budget,
                 clean_dense_acc=float(clean_dense_acc), clean=clean,
                 attacked=attacked, dense_alie_accs=dense_alie_accs)
+
+
+def bench_secagg(epochs: int = 24, eval_every: int = 6):
+    """Privacy-wire acceptance bench, CI-gated by bench_guard:
+
+    * MASK-BYTE ACCOUNTING — ``core.secagg.secagg_mask_bytes`` over the
+      run's realized topology must EQUAL the independent
+      ``roofline.secagg_pad_bytes`` re-derivation for every wire format
+      (and the wire overhead is structurally zero: the OTP masks in
+      place in the wire format's integer ring);
+    * CLEAN PARITY — a secagg run must land within 0.01 of the unmasked
+      run at the same seed (the masked wire decodes bit for bit, so the
+      delta is 0.0 by construction — the gate catches any future mask
+      scheme that starts re-rounding payloads);
+    * DISPATCH PARITY — secagg runs stay on the ceil(epochs/eval_every)
+      superstep budget (pads are traced data flow, never control flow);
+    * the MASKED_GEOM row family — churn_signflip under geom DTS with
+      per-peer trust (``secagg_mode="edge"``) vs aggregate-only trust
+      (``"masked_geom"``): the attacked-accuracy delta is the price of
+      hiding individual updates from the trust engine;
+    * the naive DP accountant column for the update-noise stage.
+    """
+    from repro.config import DeFTAConfig, TrainConfig
+    from repro.core.defta import evaluate, run_defta
+    from repro.core.secagg import secagg_mask_bytes
+    from repro.core.tasks import mlp_task
+    from repro.data.synthetic import federated_dataset
+    from repro.launch.roofline import dp_epsilon, secagg_pad_bytes
+
+    task = mlp_task(32, 10)
+    train = TrainConfig(learning_rate=0.05, batch_size=32)
+    cfg = DeFTAConfig(num_workers=10, avg_peers=4, num_sampled=2,
+                      local_epochs=3, seed=0)
+    data = federated_dataset("vector", cfg.num_workers,
+                             np.random.default_rng(0), n_per_worker=120,
+                             alpha=0.5)
+    budget = -(-epochs // eval_every)
+
+    def run_one(c, scenario=None, d=None):
+        d = data if d is None else d
+        stats = {}
+        st, adj, mal, _ = run_defta(
+            jax.random.PRNGKey(0), task, c, train, d, epochs=epochs,
+            scenario=scenario, eval_every=eval_every,
+            test_x=d["test_x"], test_y=d["test_y"], stats=stats)
+        m, _, _ = evaluate(task, st, d["test_x"], d["test_y"], mal)
+        return float(m), stats.get("dispatches", 0), st, adj
+
+    clean_acc, d0, st, adj = run_one(cfg)
+    sec_acc, d1, _, _ = run_one(dataclasses.replace(cfg, secagg="pairwise"))
+    dp_acc, d2, _, _ = run_one(dataclasses.replace(
+        cfg, secagg="pairwise", dp_sigma=1.0))
+
+    # mask-byte accounting over the run's realized support: the engine's
+    # own accounting vs the roofline's independent re-derivation
+    a = np.asarray(adj, bool).copy()
+    np.fill_diagonal(a, False)
+    leaves = jax.tree.leaves(st.params)
+    n_params = sum(int(np.prod(v.shape[1:])) for v in leaves)
+    n_edges = int(a.sum())
+    mask_rows = {}
+    for fmt in (None, "bf16", "int8"):
+        realized = secagg_mask_bytes(n_edges, n_params, fmt,
+                                     rows=len(leaves))
+        roof = secagg_pad_bytes(a, n_params, fmt, rows=len(leaves))
+        mask_rows[fmt or "fp32"] = dict(
+            realized_bytes=float(realized),
+            roofline_bytes=roof["pad_bytes"],
+            wire_overhead_bytes=roof["wire_overhead_bytes"],
+            ok=float(realized) == roof["pad_bytes"])
+    mask_bytes_ok = all(r["ok"] for r in mask_rows.values())
+
+    # masked_geom attacked row family: per-peer vs aggregate-only trust
+    # (churn_signflip appends its attackers on top of num_workers, so the
+    # scenario runs carry their own 8-worker dataset)
+    cfg_g = dataclasses.replace(cfg, num_workers=8, dts_signal="geom")
+    data_g = federated_dataset("vector", 8, np.random.default_rng(0),
+                               n_per_worker=120, alpha=0.5)
+    att = {}
+    for mode, c in (("plain", cfg_g),
+                    ("edge", dataclasses.replace(cfg_g,
+                                                 secagg="pairwise")),
+                    ("masked_geom", dataclasses.replace(
+                        cfg_g, secagg="pairwise",
+                        secagg_mode="masked_geom"))):
+        acc, disp, _, _ = run_one(c, scenario="churn_signflip", d=data_g)
+        att[mode] = dict(acc=acc, dispatches=disp)
+    mg_delta = att["edge"]["acc"] - att["masked_geom"]["acc"]
+
+    print(f"secagg clean: unmasked {clean_acc:.3f} vs masked {sec_acc:.3f}"
+          f" (delta {abs(clean_acc - sec_acc):.4f}); dp_sigma=1.0 "
+          f"{dp_acc:.3f}; dispatches {d0}/{d1}/{d2} (budget {budget})")
+    print(f"secagg mask bytes: {n_edges} directed edges, ok="
+          f"{mask_bytes_ok} " + " ".join(
+              f"{k}={v['realized_bytes'] / 1e6:.2f}MB"
+              for k, v in mask_rows.items()))
+    print(f"secagg masked_geom churn_signflip: plain "
+          f"{att['plain']['acc']:.3f} edge {att['edge']['acc']:.3f} "
+          f"masked_geom {att['masked_geom']['acc']:.3f} "
+          f"(delta {mg_delta:+.3f})")
+    return dict(
+        epochs=epochs, eval_every=eval_every, dispatch_budget=budget,
+        clean_acc=clean_acc, secagg_acc=sec_acc,
+        clean_delta=abs(clean_acc - sec_acc), dp_acc=dp_acc,
+        dispatches=dict(clean=d0, secagg=d1, dp=d2),
+        n_params=n_params, directed_edges=n_edges, mask_bytes=mask_rows,
+        mask_bytes_ok=bool(mask_bytes_ok), attacked=att,
+        masked_geom_delta=mg_delta,
+        dp_epsilon={f"{s:g}": dp_epsilon(s, epochs)
+                    for s in (0.5, 1.0, 2.0)})
 
 
 def bench_w_scaling():

@@ -305,9 +305,27 @@ class DeFTAConfig:
                                      # train.py --gossip-wire-round
                                      # (build_gossip_step(wire_round=))
     # differential privacy (the paper's FedAvg-algorithm-compatibility
-    # claim: DP-SGD slots into local training unchanged)
+    # claim: DP-SGD slots into local training unchanged).
+    # dp_clip > 0 selects in-training DP-SGD (clip + noise every
+    # minibatch gradient); dp_clip == 0 with dp_sigma > 0 selects the
+    # per-ROUND update-DP stage instead: the local-update delta is
+    # clipped to dp_update_clip and gets one N(0, σ·clip) draw per round
+    # (engine stage ``dp_noise``, build-time gated — σ=0 traces nothing)
     dp_clip: float = 0.0             # per-example L2 clip (0 = off)
     dp_sigma: float = 0.0            # gaussian noise multiplier
+    dp_update_clip: float = 1.0      # L2 clip of the per-round update
+                                     # delta on the dp_noise stage
+    # secure aggregation wire (core/secagg.py): None = plaintext wire,
+    # "pairwise" = per-directed-edge one-time pads in the wire format's
+    # integer ring — receiver-side unmask, exact by construction,
+    # composes with int8/bf16 + EF21 and every transport
+    secagg: Optional[str] = None
+    secagg_mode: str = "edge"        # "edge": receiver unmasks per edge,
+                                     # DTS sees per-peer updates unchanged;
+                                     # "masked_geom": trust limited to the
+                                     # aggregate-minus-own-contribution
+                                     # signal (dts.masked_geom_trust) —
+                                     # the honest secagg-vs-DTS tension
     seed: int = 0
 
 

@@ -522,3 +522,35 @@ def geom_confidence_update(dts_signal: str, lam: float, conf, sampled, P,
     signal = fused_trust_signal(dts_signal, loss_trust, gs, damaged, lam,
                                 corr=cs, lam_corr=lam_corr)
     return conf - sampled * P * signal
+
+
+def masked_geom_trust(deltas, P, mask=None, *, eps: float = 1e-12):
+    """The aggregate-only trust signal under ``secagg_mode="masked_geom"``.
+
+    Secure aggregation in its strong (sender-side group-sum) form hides
+    every individual update: the receiver only ever observes its own
+    UNMASKED AGGREGATE. The one geometric observable it can still derive
+    is the aggregate minus its own contribution, renormalized —
+    ``pooled_i = Σ_{j≠i} P_ij δ_j / Σ_{j≠i} P_ij`` — against its own
+    local-update direction. Returns the per-RECEIVER signal [W]:
+    ``−cos(pooled_i, δ_i)`` — negative (trust-raising) when the pooled
+    neighborhood moves with the receiver, positive when it moves against
+    it. The receiver cannot attribute the pool to a specific peer, so
+    the engine broadcasts this uniformly over its sampled row (the
+    confidence row rises/falls together) — which is exactly the fidelity
+    DTS loses under aggregate-only secagg, and what the bench's
+    masked_geom attacked-accuracy rows quantify.
+
+    ``mask``: [W, W] bool live-peer gate (non-firing peers' deltas were
+    never in the aggregate). Rows with no off-diagonal mass return 0.
+    """
+    w = P.shape[0]
+    off = P.astype(jnp.float32) * (1.0 - jnp.eye(w, dtype=jnp.float32))
+    if mask is not None:
+        off = off * mask.astype(jnp.float32)
+    tot = off.sum(axis=1, keepdims=True)
+    pooled = (off / jnp.maximum(tot, eps)) @ deltas          # [W, D]
+    num = (pooled * deltas).sum(axis=1)
+    den = jnp.linalg.norm(pooled, axis=1) \
+        * jnp.linalg.norm(deltas, axis=1) + eps
+    return jnp.where(tot[:, 0] > 0, -num / den, 0.0)

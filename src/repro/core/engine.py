@@ -186,9 +186,11 @@ def local_train_fn(task: Task, train: TrainConfig, local_epochs: int,
 class Transport:
     """How a round's mixing actually moves bytes.
 
-    ``mix(P, stacked, residual=None, key=None)`` follows the
+    ``mix(P, stacked, residual=None, key=None, round_=None)`` follows the
     ``core.gossip.mix_pytree`` contract: returns the mixed pytree, or
     ``(mixed, new_residual)`` when an EF21 residual pytree is passed.
+    ``round_`` is the round counter the secagg pads are keyed on (inert
+    without ``cfg.secagg``).
     """
     kind: str                    # "in_jit" | "ppermute" | "sharded"
     wire: Optional[str]          # None | "bf16" | "int8"
@@ -213,6 +215,16 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
     sparse/quant kernels on the local block, cross-shard edges ride the
     block-granular ppermute ring (``mix_pytree_sharded``). Like the
     cross-pod ring it encodes row-local to nearest.
+
+    ``cfg.secagg="pairwise"`` arms the secure-aggregation wire on EVERY
+    transport kind: payloads cross the wire one-time-padded per directed
+    edge in the wire format's integer ring (``core.secagg``), the
+    receiver unmasks before the weighted sum — exact by construction, so
+    it composes with int8/bf16 + EF21 untouched. The pad-PRG base key
+    derives from ``cfg.seed`` alone (never the engine PRNG stream), and
+    every mix closure takes ``round_`` so pads are fresh each round.
+    ``secagg=None`` (default) passes None through — the traced program
+    is bit-identical to the plaintext wire.
     """
     wire = normalize_wire(cfg.gossip_dtype)
     use_ef = uses_error_feedback(cfg)
@@ -226,6 +238,22 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
             f"model exchange — it never runs the quantized wire, so "
             f"comparing it against a lossy-wire DeFTA run would be "
             f"apples-to-oranges; set gossip_dtype='float32'")
+    if cfg.secagg not in (None, "pairwise"):
+        raise ValueError(f"unknown secagg scheme {cfg.secagg!r} "
+                         f"(None | 'pairwise')")
+    if cfg.secagg_mode not in ("edge", "masked_geom"):
+        raise ValueError(f"unknown secagg_mode {cfg.secagg_mode!r} "
+                         f"('edge' | 'masked_geom')")
+    sec_base = None
+    if cfg.secagg is not None:
+        if robust:
+            raise ValueError(
+                f"secagg composes with the weighted gossip mix only — "
+                f"robust rules ({cfg.aggregation!r}) inspect individual "
+                f"plaintext models, which is exactly what the masked "
+                f"wire denies them")
+        from repro.core import secagg as secagg_mod
+        sec_base = secagg_mod.secagg_base_key(cfg.seed)
 
     if shard is not None:
         if stochastic:
@@ -233,18 +261,21 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
                              "the sharded transport (row-local nearest "
                              "encode only)")
 
-        def mix(P, stacked, residual=None, key=None):
+        def mix(P, stacked, residual=None, key=None, round_=None):
             del key
             return mix_pytree_sharded(P, stacked, shard.mesh,
                                       axis=shard.axis, adjacency=adjacency,
-                                      wire=wire, residual=residual)
+                                      wire=wire, residual=residual,
+                                      secagg=sec_base,
+                                      secagg_round=round_)
         kind = "sharded"
     elif mesh is None:
-        def mix(P, stacked, residual=None, key=None):
+        def mix(P, stacked, residual=None, key=None, round_=None):
             return mix_pytree(P, stacked, backend=backend,
                               adjacency=adjacency, wire=wire,
                               residual=residual, wire_round=wire_round,
-                              wire_key=key)
+                              wire_key=key, secagg=sec_base,
+                              secagg_round=round_)
         kind = "in_jit"
     else:
         if stochastic:
@@ -252,11 +283,12 @@ def make_transport(cfg: DeFTAConfig, *, backend: str = "einsum",
                              "the ppermute transport (row-local nearest "
                              "encode only)")
 
-        def mix(P, stacked, residual=None, key=None):
+        def mix(P, stacked, residual=None, key=None, round_=None):
             del key
             return mix_pytree_ppermute(P, stacked, mesh, axis=axis,
                                        adjacency=adjacency, wire=wire,
-                                       residual=residual)
+                                       residual=residual, secagg=sec_base,
+                                       secagg_round=round_)
         kind = "ppermute"
     return Transport(kind=kind, wire=wire, use_ef=use_ef,
                      stochastic=stochastic, mix=mix)
@@ -329,6 +361,51 @@ def run_pipeline(stages, ctx: dict) -> dict:
 def stage_names(round_fn) -> Tuple[str, ...]:
     """The pipeline a built round runs (for docs/tests/introspection)."""
     return tuple(n for n, _ in getattr(round_fn, "stages", ()))
+
+
+def split_round_keys(key, stochastic: bool, dp_update: bool) -> dict:
+    """The frozen per-round PRNG split layout, in one place: key,
+    k_sample, k_train, k_noise — plus k_wire on the stochastic int8 wire
+    and k_dp on the update-DP stage, both APPENDED and build-time gated
+    (jax.random.split(key, n) redraws everything when n changes, so an
+    ungated extra split would shift every downstream draw and break the
+    golden parity the tests pin). Absent keys come back None."""
+    names = ["key", "k_sample", "k_train", "k_noise"]
+    if stochastic:
+        names.append("k_wire")
+    if dp_update:
+        names.append("k_dp")
+    out = dict(zip(names, jax.random.split(key, len(names))))
+    out.setdefault("k_wire", None)
+    out.setdefault("k_dp", None)
+    return out
+
+
+def uses_update_dp(cfg: DeFTAConfig) -> bool:
+    """The per-round update-DP stage compiles iff ``dp_sigma > 0`` with
+    ``dp_clip == 0`` (with dp_clip > 0 the sigma belongs to in-training
+    DP-SGD — ``local_train_fn`` — and the stage must not double-noise)."""
+    return cfg.dp_sigma > 0 and cfg.dp_clip == 0
+
+
+def apply_update_dp(cfg: DeFTAConfig, key, start, trained):
+    """Clip the local-update delta ``trained − start`` to
+    ``cfg.dp_update_clip`` per worker (L2, whole-model) and add one
+    N(0, (dp_sigma·clip)²) draw — per-round update-level DP on what
+    actually crosses the wire. Returns the noised ``trained``."""
+    delta = jax.tree.map(jnp.subtract, trained, start)
+    flat = dts_mod.flatten_stacked(delta)
+    nrm = jnp.linalg.norm(flat, axis=1)
+    clip = jnp.float32(cfg.dp_update_clip)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    sigma = jnp.float32(cfg.dp_sigma) * clip
+    leaves, tdef = jax.tree.flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        v * scale.reshape((-1,) + (1,) * (v.ndim - 1))
+        + sigma * jax.random.normal(kk, v.shape, v.dtype)
+        for kk, v in zip(keys, leaves)]
+    return jax.tree.map(jnp.add, start, jax.tree.unflatten(tdef, noised))
 
 
 def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
@@ -419,6 +496,12 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
     use_ef = transport.use_ef
     stochastic = transport.stochastic
     regen = scenario is not None and scenario.adj_seg is not None
+    dp_update = uses_update_dp(cfg)
+    # masked_geom: the receiver of an aggregate-only secagg sees no
+    # per-peer update, so the geometry/correlation channels are replaced
+    # by the pooled aggregate-minus-own-contribution signal
+    masked_geom = cfg.secagg is not None \
+        and cfg.secagg_mode == "masked_geom"
 
     if telemetry is not None:
         from repro.telemetry.spec import defta_specs
@@ -430,16 +513,11 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
 
     def stage_split_keys(c):
         """reads state.key; writes key (next round), k_sample, k_train,
-        k_noise and — on the stochastic int8 wire only — k_wire. The split
-        layout is frozen: adding a split changes every downstream draw."""
-        state = c["state"]
-        if stochastic:
-            c["key"], c["k_sample"], c["k_train"], c["k_noise"], \
-                c["k_wire"] = jax.random.split(state.key, 5)
-        else:
-            c["key"], c["k_sample"], c["k_train"], c["k_noise"] = \
-                jax.random.split(state.key, 4)
-            c["k_wire"] = None
+        k_noise and — build-time gated — k_wire (stochastic int8 wire)
+        and k_dp (update-DP stage). The split layout is frozen
+        (``split_round_keys``): adding a split changes every downstream
+        draw."""
+        c.update(split_round_keys(c["state"].key, stochastic, dp_update))
 
     def stage_scenario_view(c):
         """reads epoch; writes eff_adj (and alive/fire/att_on with a
@@ -524,6 +602,7 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
             P = mask * col_w[None, :]
             P = P / P.sum(axis=1, keepdims=True)
         c["P"] = P
+        round_ = 0 if c["epoch"] is None else c["epoch"]
         if use_ef:
             if state.wire_err is None:
                 raise ValueError(
@@ -531,12 +610,14 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
                     "but the state carries no residual buffers — build "
                     "it with init_state(..., wire_error=True)")
             c["agg"], c["wire_err"] = transport.mix(
-                P, state.params, residual=state.wire_err, key=c["k_wire"])
+                P, state.params, residual=state.wire_err, key=c["k_wire"],
+                round_=round_)
             if telemetry is not None:
                 telemetry.emit(c, "ef_norm", jnp.linalg.norm(
                     dts_mod.flatten_stacked(c["wire_err"]), axis=1))
         else:
-            c["agg"] = transport.mix(P, state.params, key=c["k_wire"])
+            c["agg"] = transport.mix(P, state.params, key=c["k_wire"],
+                                     round_=round_)
             c["wire_err"] = state.wire_err
 
     def stage_damage_check(c):
@@ -579,6 +660,16 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         if telemetry is not None:
             telemetry.emit(c, "train_loss", c["train_loss"])
 
+    def stage_dp_noise(c):
+        """reads trained, start, k_dp; writes trained — per-round
+        update-DP (``apply_update_dp``): every worker clips its local-
+        update delta and noises it BEFORE it becomes next round's send,
+        so both peers and the trust channels only ever observe the
+        privatized update. Build-time gated on ``uses_update_dp(cfg)``
+        (the default σ=0 compiles this stage away entirely)."""
+        c["trained"] = apply_update_dp(cfg, c["k_dp"], c["start"],
+                                       c["trained"])
+
     def stage_attack_inject(c):
         """reads trained, agg, att_on, theta, k_noise; writes trained
         (attacker slots replaced by their poisoned sends — what peers
@@ -614,7 +705,21 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
                                c["loss_agg"] - state.last_loss)
         c["sketch"] = state.sketch
-        if channels:
+        if channels and masked_geom:
+            # aggregate-only visibility: the receiver never sees a
+            # per-peer delta, so geometry/correlation degrade to the
+            # pooled aggregate-minus-own-contribution signal, broadcast
+            # uniformly over the receiver's sampled row (it cannot tell
+            # WHICH peer moved the pool) — the measured DTS-vs-secagg
+            # tension the bench records
+            deltas = dts_mod.flatten_stacked(c["trained"]) \
+                - dts_mod.flatten_stacked(c["start"])
+            gmask = c["eff_adj"] & c["fire"][None, :] \
+                if scenario is not None else c["eff_adj"]
+            mg = dts_mod.masked_geom_trust(deltas, c["P"], gmask)
+            c["conf"] = state.conf - c["sampled"] * c["P"] \
+                * (loss_trust + cfg.dts_geom_weight * mg)[:, None]
+        elif channels:
             # non-firing peers (stragglers) are excluded: fire_merge
             # discards their this-round delta, so peers never consume it
             # — scoring it would drift trust on phantom updates
@@ -700,6 +805,7 @@ def build_defta_round(task: Task, cfg: DeFTAConfig, train: TrainConfig,
         ("transport", stage_transport),
         ("damage_check", stage_damage_check),
         ("local_train", stage_local_train),
+    ) + ((("dp_noise", stage_dp_noise),) if dp_update else ()) + (
         ("attack_inject", stage_attack_inject),
         ("trust_update", stage_trust_update),
         ("finalize", stage_finalize) if scenario is None
@@ -1237,6 +1343,12 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
     use_ef = transport.use_ef
     channels = resolve_dts_signal(cfg)
     corr = "corr" in channels
+    if cfg.secagg is not None and cfg.secagg_mode == "masked_geom":
+        raise ValueError(
+            "secagg_mode='masked_geom' has no pod selection: pod trust "
+            "already runs at pod granularity (each pod IS an aggregate) "
+            "— use the simulation/cross-device engines to measure the "
+            "aggregate-only trust degradation")
     # the pod time machine needs BOTH the flag and a held-out evaluator;
     # without self_eval the selection quietly stays TM-less (the
     # pre-existing pod contract — sim configs default time_machine=True
@@ -1302,9 +1414,11 @@ def build_pod_round(cfg: DeFTAConfig, npods: int, sizes, *,
         c["P"] = P
         if use_ef:
             c["agg"], c["wire_err"] = transport.mix(
-                P, c["params"], residual=pstate.wire_err, key=c["k_wire"])
+                P, c["params"], residual=pstate.wire_err, key=c["k_wire"],
+                round_=pstate.round)
         else:
-            c["agg"] = transport.mix(P, c["params"], key=c["k_wire"])
+            c["agg"] = transport.mix(P, c["params"], key=c["k_wire"],
+                                     round_=pstate.round)
             c["wire_err"] = pstate.wire_err
 
     def stage_damage_check(c):
@@ -1588,11 +1702,19 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
             f"robust aggregation ({cfg.aggregation!r}) has no "
             f"cross-device selection yet — use defta/defl/uniform")
     if transport is None:
-        # the cohort block is dense [k, k]: no sparse adjacency support
+        # the cohort block is dense [k, k]: no sparse adjacency support —
+        # except under secagg, whose per-edge pads need the support
+        # explicitly (every cohort-slot pair is a potential wire edge;
+        # pads are keyed on (round, slot, slot), so two different users
+        # occupying the same slot in different rounds never share one)
+        support = np.ones((k, k), bool) if cfg.secagg is not None else None
         transport = make_transport(cfg, backend=gossip_backend,
-                                   adjacency=None)
+                                   adjacency=support)
     use_ef = transport.use_ef
     stochastic = transport.stochastic
+    dp_update = uses_update_dp(cfg)
+    masked_geom = cfg.secagg is not None \
+        and cfg.secagg_mode == "masked_geom"
 
     if telemetry is not None:
         from repro.telemetry.spec import cross_device_specs
@@ -1668,16 +1790,9 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
 
     def stage_split_keys(c):
         """reads state.key; writes key, k_sample, k_train, k_noise
-        (+ k_wire on the stochastic int8 wire) — the same frozen split
-        layout as the dense round."""
-        state = c["state"]
-        if stochastic:
-            c["key"], c["k_sample"], c["k_train"], c["k_noise"], \
-                c["k_wire"] = jax.random.split(state.key, 5)
-        else:
-            c["key"], c["k_sample"], c["k_train"], c["k_noise"] = \
-                jax.random.split(state.key, 4)
-            c["k_wire"] = None
+        (+ build-time gated k_wire / k_dp) — the same frozen split
+        layout as the dense round (``split_round_keys``)."""
+        c.update(split_round_keys(c["state"].key, stochastic, dp_update))
 
     def stage_peer_sample(c):
         """reads conf (the decayed k-block), eff_adj, k_sample; writes
@@ -1713,15 +1828,17 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
             telemetry.emit(c, "wire_bytes", live.astype(jnp.float32) *
                            stacked_payload_bytes(c["g_params"],
                                                  transport.wire))
+        round_ = 0 if c["epoch"] is None else c["epoch"]
         if use_ef:
             c["agg"], c["wire_err"] = transport.mix(
                 P, c["g_params"], residual=c["g_wire_err"],
-                key=c["k_wire"])
+                key=c["k_wire"], round_=round_)
             if telemetry is not None:
                 telemetry.emit(c, "ef_norm", jnp.linalg.norm(
                     dts_mod.flatten_stacked(c["wire_err"]), axis=1))
         else:
-            c["agg"] = transport.mix(P, c["g_params"], key=c["k_wire"])
+            c["agg"] = transport.mix(P, c["g_params"], key=c["k_wire"],
+                                     round_=round_)
             c["wire_err"] = c["g_wire_err"]
 
     def stage_damage_check(c):
@@ -1754,6 +1871,13 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         if telemetry is not None:
             telemetry.emit(c, "train_loss", c["train_loss"])
 
+    def stage_dp_noise(c):
+        """reads trained, start, k_dp; writes trained — the dense
+        round's per-round update-DP stage on the cohort block (see
+        ``apply_update_dp``; build-time gated on ``uses_update_dp``)."""
+        c["trained"] = apply_update_dp(cfg, c["k_dp"], c["start"],
+                                       c["trained"])
+
     def stage_attack_inject(c):
         """reads trained, agg, att_kind, att_scale, att_on, theta,
         k_noise; writes trained. Attackers attack whenever they
@@ -1779,7 +1903,20 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         median+MAD baseline."""
         loss_trust = jnp.where(c["damaged"], dts_mod.DAMAGE_PENALTY,
                                c["loss_agg"] - c["g_last"])
-        if channels:
+        if channels and masked_geom:
+            # aggregate-only visibility on the cohort block: pooled
+            # signal only, no per-peer geometry, and the sketch ring
+            # never rotates (a receiver cannot sketch deltas it never
+            # saw) — stamps pass through unchanged
+            deltas = dts_mod.flatten_stacked(c["trained"]) \
+                - dts_mod.flatten_stacked(c["start"])
+            gmask = c["eff_adj"] & c["fire"][None, :]
+            mg = dts_mod.masked_geom_trust(deltas, c["P"], gmask)
+            if corr:
+                c["sketch"], c["stamp"] = c["g_sketch"], c["g_stamp"]
+            c["conf_new"] = c["conf"] - c["sampled"] * c["P"] \
+                * (loss_trust + cfg.dts_geom_weight * mg)[:, None]
+        elif channels:
             deltas = dts_mod.flatten_stacked(c["trained"]) \
                 - dts_mod.flatten_stacked(c["start"])
             gmask = c["eff_adj"] & c["fire"][None, :]
@@ -1868,6 +2005,7 @@ def build_cross_device_round(task: Task, cfg: DeFTAConfig,
         ("transport", stage_transport),
         ("damage_check", stage_damage_check),
         ("local_train", stage_local_train),
+    ) + ((("dp_noise", stage_dp_noise),) if dp_update else ()) + (
         ("attack_inject", stage_attack_inject),
         ("trust_update", stage_trust_update),
         ("scatter_merge", stage_scatter_merge),

@@ -239,7 +239,8 @@ def _encode_rows(flat, r_flat, wire, *, rounding: str = "nearest",
 
 def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
                wire=None, wire_dtype=None, residual=None,
-               wire_round: str = "nearest", wire_key=None):
+               wire_round: str = "nearest", wire_key=None,
+               secagg=None, secagg_round=None):
     """P: [W, W] row-stochastic; stacked: pytree with leading axis W.
 
     ``adjacency``: static bool [W, W] support of P (required for the
@@ -257,6 +258,11 @@ def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
     ``wire_round``: "nearest" | "stochastic" rounding on the int8 wire
     ("stochastic" needs ``wire_key`` and makes the encode unbiased; see
     ``quantize_rows_int8``).
+    ``secagg``: pad-PRG base key (``core.secagg.secagg_base_key``) — the
+    payload crosses the wire one-time-padded per directed edge and the
+    receiver unmasks before the weighted sum (``_mix_pytree_secagg``).
+    ``secagg_round`` is the round counter the pads are keyed on (may be
+    traced; defaults to 0).
     """
     w = P.shape[0]
     backend = _resolve_backend(backend, adjacency, w)
@@ -267,6 +273,15 @@ def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
     if wire_round == "stochastic" and wire != "int8":
         raise ValueError("wire_round='stochastic' is an int8-wire option "
                          f"(wire={wire!r})")
+    if secagg is not None:
+        if adjacency is None:
+            raise ValueError(
+                "secagg needs the static topology: pass "
+                "adjacency=<bool [W, W]> (the pads are per wire edge)")
+        return _mix_pytree_secagg(
+            P, stacked, adjacency, wire=wire, residual=residual,
+            wire_round=wire_round, wire_key=wire_key, base=secagg,
+            round_=secagg_round)
 
     if backend == "sparse":
         if adjacency is None:
@@ -322,8 +337,84 @@ def mix_pytree(P, stacked, backend: str = "einsum", *, adjacency=None,
     return mixed
 
 
+def _mix_pytree_secagg(P, stacked, adjacency, *, wire, residual,
+                       wire_round, wire_key, base, round_):
+    """Receiver-side pairwise-masked gather mix — the in-jit secagg wire.
+
+    Each receiver gathers the encoded payload rows of its padded-CSR
+    support; a gathered row models the WIRE: ``ring(q_j) + pad(round,
+    j→i)`` in the wire format's integer ring (``core.secagg``), and the
+    receiver subtracts the shared directed-edge pad before the trust-
+    weighted sum. The OTP is exact word for word, so the recovered rows
+    equal the encoded rows bit for bit and the masked mix is BITWISE
+    identical to the same gather-sum without masks — at fp32 wire exactly
+    the no-secagg gather aggregate, at int8 within the plain quantization
+    error (tests/test_secagg.py pins both).
+
+    Dropout/churn recovery is structural: a dead or unsampled edge rides
+    P's zero weight, so its (perfectly recovered) row is annihilated and
+    its pad is simply never consumed — survivor-renormalized rows,
+    vacancy pads and the cross-device k_min fallback all compose with no
+    extra protocol. Note the summation ORDER differs from the dense
+    einsum backend (gather-sum over K slots vs dense over W), so engine-
+    level secagg-on vs -off parity is allclose, not bitwise; the bitwise
+    contract lives at this gossip level.
+    """
+    from repro.core import secagg as sa
+
+    w = P.shape[0]
+    round_ = 0 if round_ is None else round_
+    idx_np, valid_np = sparse_support(adjacency)
+    idx_j = jnp.asarray(idx_np)
+    recv = jnp.arange(w, dtype=jnp.int32)[:, None]
+    val = jnp.take_along_axis(P.astype(jnp.float32), idx_j, axis=1) \
+        * jnp.asarray(valid_np, jnp.float32)
+    ebase = sa.domain_key(base, sa.DOMAIN_EDGE)
+
+    leaves, treedef = jax.tree.flatten(stacked)
+    r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
+        else [None] * len(leaves)
+    wire_keys = jax.random.split(wire_key, len(leaves)) \
+        if (wire_key is not None and wire_round == "stochastic") \
+        else [None] * len(leaves)
+    outs, new_rs = [], []
+    for li, (x, r, wk) in enumerate(zip(leaves, r_leaves, wire_keys)):
+        flat = x.reshape(w, -1)
+        if wire is None:
+            payload, scale, nr = flat.astype(jnp.float32), None, r
+        else:
+            r_flat = r.reshape(w, -1) if r is not None else None
+            payload, scale, nr = _encode_rows(flat, r_flat, wire,
+                                              rounding=wire_round, key=wk)
+            nr = nr.reshape(x.shape) if nr is not None else None
+        f = payload.shape[1]
+        pads = sa.edge_pads(ebase, round_, idx_j, recv, f, wire,
+                            tag=2 * li)
+        gathered = jnp.take(payload, idx_j, axis=0)       # [W, K, F]
+        wire_words = sa.mask_payload(gathered, pads, wire)
+        rec = sa.unmask_payload(wire_words, pads, wire)   # == gathered
+        if scale is not None:
+            spads = sa.edge_pads(ebase, round_, idx_j, recv, 1, None,
+                                 tag=2 * li + 1)[..., 0]
+            s_g = jnp.take(scale, idx_j, axis=0)          # [W, K]
+            s_rec = sa.unmask_payload(
+                sa.mask_payload(s_g, spads, None), spads, None)
+            weights = val * s_rec                # dequant into the weights
+        else:
+            weights = val
+        out = jnp.einsum("wk,wkf->wf", weights,
+                         rec.astype(jnp.float32))
+        outs.append(out.reshape(x.shape).astype(x.dtype))
+        new_rs.append(nr)
+    mixed = jax.tree.unflatten(treedef, outs)
+    if residual is not None:
+        return mixed, jax.tree.unflatten(treedef, new_rs)
+    return mixed
+
+
 def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
-                        adjacency=None, wire=None, residual=None):
+                        adjacency=None, wire=None, residual=None,
+                        secagg=None, secagg_round=None):
     """Sparse-topology gossip via collective_permute ring schedules.
 
     For a sparse mixing matrix P, the dense all-gather backend moves every
@@ -354,6 +445,15 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
     offset-skipping economy (with "bf16", ~2×). Encoding and the EF21
     residual are computed OUTSIDE the shard_map: quantization is row-local,
     so it shards trivially and adds no cross-pod traffic.
+
+    ``secagg``/``secagg_round``: same contract as ``mix_pytree`` — the
+    sender one-time-pads the payload for offset o's destination INSIDE the
+    ring body (edge j → (j+o)%w), the receiver subtracts the shared
+    directed-edge pad after the ppermute, so what the collective actually
+    moves is the masked wire. Ring slots without a real edge receive
+    zeros, whose unmask decodes to garbage — they are gated off by the
+    static edge mask before the (zero-weight) accumulate, which a bitcast
+    NaN would otherwise poison.
     """
     from jax.sharding import PartitionSpec as Ps
 
@@ -377,6 +477,19 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
         used_offsets = list(range(w))
         offset_perm = {o: [(j, (j + o) % w) for j in range(w)]
                        for o in used_offsets}
+
+    if secagg is not None:
+        from repro.core import secagg as sa
+        sa_base = sa.domain_key(secagg, sa.DOMAIN_EDGE)
+        sa_round = 0 if secagg_round is None else secagg_round
+        a_ok = (np.asarray(adjacency) | np.eye(w, dtype=bool)) \
+            if adjacency is not None else np.ones((w, w), bool)
+        # ok_vecs[o][i]: does worker i really receive at offset o?
+        ok_vecs = {o: jnp.asarray(a_ok[np.arange(w),
+                                       (np.arange(w) - o) % w])
+                   for o in used_offsets}
+    else:
+        sa = None
 
     leaves, treedef = jax.tree.flatten(stacked)
     r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
@@ -405,21 +518,48 @@ def mix_pytree_ppermute(P, stacked, mesh, axis: str = "pod",
         qs, scs = args[:n], args[n:] if has_scale else (None,) * n
         idx = jax.lax.axis_index(axis)
         outs = []
-        for q, s in zip(qs, scs):
+        for li, (q, s) in enumerate(zip(qs, scs)):
             acc = jnp.zeros(q.shape, jnp.float32)
             for o in used_offsets:
                 src = (idx - o) % w
                 weight = p_local[0, src].astype(jnp.float32)
                 if o == 0:
                     qq, ss = q, s
-                else:
+                    qqf = qq.astype(jnp.float32)
+                    if ss is not None:       # dequant: scale into weight
+                        weight = weight * ss[0]
+                elif secagg is None:
                     perm = offset_perm[o]
                     qq = jax.lax.ppermute(q, axis, perm)
                     ss = jax.lax.ppermute(s, axis, perm) \
                         if s is not None else None
-                if ss is not None:          # dequant: fold scale into weight
-                    weight = weight * ss[0]
-                acc = acc + weight * qq.astype(jnp.float32)
+                    qqf = qq.astype(jnp.float32)
+                    if ss is not None:
+                        weight = weight * ss[0]
+                else:
+                    # masked wire: pad for the destination, ship, unmask
+                    # the pad of the symmetric inbound edge (src -> idx)
+                    perm = offset_perm[o]
+                    dst = (idx + o) % w
+                    pad_out = sa.edge_pad(sa_base, sa_round, idx, dst,
+                                          q.shape, wire, tag=2 * li)
+                    qw = jax.lax.ppermute(
+                        sa.mask_payload(q, pad_out, wire), axis, perm)
+                    pad_in = sa.edge_pad(sa_base, sa_round, src, idx,
+                                         q.shape, wire, tag=2 * li)
+                    qq = sa.unmask_payload(qw, pad_in, wire)
+                    ok = ok_vecs[o][idx]
+                    qqf = jnp.where(ok, qq.astype(jnp.float32), 0.0)
+                    if s is not None:
+                        sp_out = sa.edge_pad(sa_base, sa_round, idx, dst,
+                                             s.shape, None, tag=2 * li + 1)
+                        sw = jax.lax.ppermute(
+                            sa.mask_payload(s, sp_out, None), axis, perm)
+                        sp_in = sa.edge_pad(sa_base, sa_round, src, idx,
+                                            s.shape, None, tag=2 * li + 1)
+                        ss = sa.unmask_payload(sw, sp_in, None)
+                        weight = weight * jnp.where(ok, ss[0], 0.0)
+                acc = acc + weight * qqf
             outs.append(acc)
         return tuple(outs)
 
@@ -554,13 +694,22 @@ def worker_shard_plan(adjacency, shards: int) -> WorkerShardPlan:
 
 
 def mix_pytree_sharded(P, stacked, mesh, axis: str = "worker",
-                       adjacency=None, wire=None, residual=None):
+                       adjacency=None, wire=None, residual=None,
+                       secagg=None, secagg_round=None):
     """Worker-axis-sharded gossip: intra-shard edges run the padded-CSR
     sparse/quant kernels on the LOCAL block, cross-shard edges ride a
     block-granular ppermute ring (``WorkerShardPlan``). Same contract as
     ``mix_pytree``/``mix_pytree_ppermute``: P [W, W] row-stochastic with
     support ⊆ adjacency ∪ self-loops, ``stacked`` a pytree with leading
     axis W, optional lossy ``wire`` + EF21 ``residual``.
+
+    ``secagg``/``secagg_round``: pads ride the ring CHANNELS this
+    transport actually has — one OTP per used (src_shard, dst_shard)
+    block pair per round (``DOMAIN_SHARD``), masking the whole shipped
+    block. The intra-shard diagonal never crosses the wire (it runs
+    on-device through the local CSR kernels) and is deliberately NOT
+    masked — the privacy boundary is the device, same as every secagg
+    deployment that batches co-located users.
 
     W need not divide the shard count: rows pad to ``shards × block``
     with identity mixing rows and zero payloads, and the padding is
@@ -583,6 +732,22 @@ def mix_pytree_sharded(P, stacked, mesh, axis: str = "worker",
     shards = int(mesh.shape[axis])
     plan = worker_shard_plan(adjacency, shards)
     b, wp = plan.block, plan.wp
+
+    if secagg is not None:
+        from repro.core import secagg as sa
+        sa_base = sa.domain_key(secagg, sa.DOMAIN_SHARD)
+        sa_round = 0 if secagg_round is None else secagg_round
+        # ok_vecs[d][si]: does shard si really receive a block at ring
+        # offset d? (unnamed destinations get zeros — gate the garbage
+        # their unmask decodes to before the zero-weight matmul)
+        ok_vecs = {}
+        for d in plan.used_offsets:
+            okv = np.zeros((shards,), bool)
+            for _, dst in plan.perms[d]:
+                okv[dst] = True
+            ok_vecs[d] = jnp.asarray(okv)
+    else:
+        sa = None
 
     leaves, treedef = jax.tree.flatten(stacked)
     r_leaves = jax.tree.flatten(residual)[0] if residual is not None \
@@ -625,7 +790,7 @@ def mix_pytree_sharded(P, stacked, mesh, axis: str = "worker",
         p_diag = jax.lax.dynamic_slice(p_local, (0, si * b), (b, b))
         val = jnp.take_along_axis(p_diag, idx_l, axis=1) * valid_l
         outs = []
-        for q, s_ in zip(qs, scs):
+        for li, (q, s_) in enumerate(zip(qs, scs)):
             if s_ is not None:               # fused dequant CSR kernel
                 acc = gossip_mix_quant(idx_l, val, s_, q,
                                        out_dtype=jnp.float32)
@@ -634,10 +799,35 @@ def mix_pytree_sharded(P, stacked, mesh, axis: str = "worker",
                                         out_dtype=jnp.float32)
             for d in plan.used_offsets:
                 perm = plan.perms[d]
-                qq = jax.lax.ppermute(q, axis, perm)
-                ss = jax.lax.ppermute(s_, axis, perm) \
-                    if s_ is not None else None
                 src = (si - d) % shards
+                if secagg is None:
+                    qq = jax.lax.ppermute(q, axis, perm)
+                    ss = jax.lax.ppermute(s_, axis, perm) \
+                        if s_ is not None else None
+                else:
+                    # block-channel OTP: mask for the destination shard,
+                    # ship, unmask the inbound (src_shard -> si) pad
+                    dstb = (si + d) % shards
+                    pad_out = sa.edge_pad(sa_base, sa_round, si, dstb,
+                                          q.shape, wire, tag=2 * li)
+                    qw = jax.lax.ppermute(
+                        sa.mask_payload(q, pad_out, wire), axis, perm)
+                    pad_in = sa.edge_pad(sa_base, sa_round, src, si,
+                                         q.shape, wire, tag=2 * li)
+                    ok = ok_vecs[d][si]
+                    qq = jnp.where(
+                        ok, sa.unmask_payload(qw, pad_in, wire)
+                        .astype(jnp.float32), 0.0)
+                    ss = None
+                    if s_ is not None:
+                        sp_out = sa.edge_pad(sa_base, sa_round, si, dstb,
+                                             s_.shape, None, tag=2 * li + 1)
+                        sw = jax.lax.ppermute(
+                            sa.mask_payload(s_, sp_out, None), axis, perm)
+                        sp_in = sa.edge_pad(sa_base, sa_round, src, si,
+                                            s_.shape, None, tag=2 * li + 1)
+                        ss = jnp.where(
+                            ok, sa.unmask_payload(sw, sp_in, None), 1.0)
                 blk = jax.lax.dynamic_slice(
                     p_local, (0, src * b), (b, b)).astype(jnp.float32)
                 if ss is not None:           # dequant: scale into columns

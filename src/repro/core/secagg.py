@@ -52,3 +52,183 @@ def secure_roundtrip(params, sender: int, receiver: int, round_: int):
     """mask → wire → unmask; returns (wire, recovered)."""
     wire = mask_model(params, sender, receiver, round_)
     return wire, unmask_model(wire, sender, receiver, round_)
+
+
+# ---------------------------------------------------------------------------
+# OTP wire masking in the wire format's integer ring
+# ---------------------------------------------------------------------------
+# The float-domain masks above make the *primitive* point (wire ≠ model,
+# unmask exact up to fp addition order) but cannot give the property the
+# engine needs: BITWISE equality of receiver aggregates with and without
+# secagg. Adding a float mask re-rounds the payload, and masking "in the
+# widened domain, then quantizing the masked payload" (the textbook
+# ordering) inflates the int8 scale to cover payload+mask — the masked
+# roundtrip error would NOT be bounded by the unmasked quantization error.
+#
+# So the wire stage masks in the wire format's own integer ring instead:
+# the encoded payload is bitcast to fixed-width unsigned integers (fp32 →
+# uint32, bf16 → uint16, int8 → uint8; int8's fp32 row scales → uint32)
+# and a uniform one-time pad is ADDED MOD 2^n. Modular addition of a
+# uniform pad is a perfect one-time pad on the ring — the wire word is
+# uniform, independent of the payload — and the receiver's subtraction
+# recovers the encoded payload bit for bit. Mask cancellation is therefore
+# exact BY CONSTRUCTION (fp32 wire: bitwise; int8 wire: the masked
+# roundtrip error EQUALS the unmasked quantization error), which is what
+# tests/test_secagg.py pins down.
+#
+# Pads are derived per DIRECTED edge — fold_in(base, tag), then round,
+# sender, receiver — never shared between i→j and j→i (reusing one pad
+# for both directions of an edge in the same round is a two-time pad:
+# wire_ij − wire_ji would leak the payload difference). The symmetric
+# `pair_seed`/`mask_for` primitives above are kept for the group-sum
+# construction below, where antisymmetric SIGNS (±M_ij) do the work.
+
+RING_DTYPE = {None: jnp.uint32, "fp32": jnp.uint32,
+              "bf16": jnp.uint16, "int8": jnp.uint8}
+RING_BITS = {None: 32, "fp32": 32, "bf16": 16, "int8": 8}
+
+# pad-key domains: worker-edge pads, shard-block pads (sharded ring
+# channels), cross-device cohort-slot pads — disjoint fold_in prefixes so
+# the same (round, src, dst) triple never collides across transports
+DOMAIN_EDGE = 0x0e
+DOMAIN_SHARD = 0x51
+DOMAIN_COHORT = 0xc0
+
+
+def secagg_base_key(seed: int):
+    """Host-side pad-PRG root for a run. Derived from ``cfg.seed`` only —
+    it does NOT consume the engine's PRNG stream, so enabling secagg never
+    shifts the frozen split layout the golden tests pin."""
+    return jax.random.PRNGKey((int(seed) * 2_654_435_761 + 0x5eca66)
+                              % (2**31))
+
+
+def domain_key(base, domain: int):
+    return jax.random.fold_in(base, domain)
+
+
+def edge_pad_key(base, round_, sender, receiver, tag: int = 0):
+    """Directed-edge pad key. ``tag`` separates channels sharing an edge
+    (one per leaf; odd tags carry the int8 scale vector) so no two
+    plaintexts ever see the same pad."""
+    k = jax.random.fold_in(base, tag)
+    k = jax.random.fold_in(k, round_)
+    k = jax.random.fold_in(k, sender)
+    return jax.random.fold_in(k, receiver)
+
+
+def edge_pad(base, round_, sender, receiver, shape, wire=None,
+             tag: int = 0):
+    """One directed edge's pad, in the wire's ring dtype."""
+    k = edge_pad_key(base, round_, sender, receiver, tag)
+    return jax.random.bits(k, shape, RING_DTYPE[wire])
+
+
+def edge_pads(base, round_, senders, receivers, width: int, wire=None,
+              tag: int = 0):
+    """Vectorized pads for a [*, K] support: senders/receivers broadcast
+    to a common shape S, returns uint pads of shape S + (width,)."""
+    senders = jnp.asarray(senders, jnp.int32)
+    receivers = jnp.broadcast_to(jnp.asarray(receivers, jnp.int32),
+                                 senders.shape)
+    flat_s = senders.reshape(-1)
+    flat_r = receivers.reshape(-1)
+    pads = jax.vmap(lambda s, r: edge_pad(base, round_, s, r, (width,),
+                                          wire, tag))(flat_s, flat_r)
+    return pads.reshape(senders.shape + (width,))
+
+
+def ring_bits(payload, wire=None):
+    """Bitcast an encoded wire payload into its unsigned integer ring."""
+    if wire in (None, "fp32"):
+        return jax.lax.bitcast_convert_type(payload.astype(jnp.float32),
+                                            jnp.uint32)
+    if wire == "bf16":
+        return jax.lax.bitcast_convert_type(payload, jnp.uint16)
+    return payload.astype(jnp.uint8)          # int8: two's-complement wrap
+
+
+def ring_payload(bits, wire=None):
+    """Inverse of ``ring_bits`` — exact for every word."""
+    if wire in (None, "fp32"):
+        return jax.lax.bitcast_convert_type(bits, jnp.float32)
+    if wire == "bf16":
+        return jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+    return bits.astype(jnp.int8)
+
+
+def mask_payload(payload, pads, wire=None):
+    """payload → wire words: bitcast to the ring, add the pad mod 2^n."""
+    return ring_bits(payload, wire) + pads
+
+
+def unmask_payload(wire_bits, pads, wire=None):
+    """wire words → payload, bit for bit."""
+    return ring_payload(wire_bits - pads, wire)
+
+
+# ---------------------------------------------------------------------------
+# Group-sum construction (sender-side antisymmetric masks) + dropout
+# recovery — the Bonawitz/DeTrust-FL shape, used by the property tests.
+# ---------------------------------------------------------------------------
+# The engine's weighted gossip uses the receiver-side unmask above (the
+# receiver knows each pair seed, so per-peer weighting survives). The
+# UNWEIGHTED in-neighborhood sum admits the classic construction: sender i
+# ships ring(x_i) + Σ_{j∈G, j≠i} s_ij·M_ij with s_ij = +1 if i<j else −1
+# and M_ij = M_ji (symmetric pair pad). Every pad appears twice with
+# opposite signs in the group sum, so Σ wires ≡ Σ ring(x_i) mod 2^n —
+# EXACTLY. A sender that drops after its peers committed their wires
+# leaves its ± pads uncancelled; the survivors reconstruct them from the
+# pair seeds and subtract (`dropout_correction`), no server round-trip.
+
+def pair_pad(base, round_, i: int, j: int, shape, wire=None,
+             tag: int = 0):
+    """Symmetric pair pad: keyed on the UNORDERED pair, so both endpoints
+    derive the same M_ij (the ± signs provide the antisymmetry)."""
+    a, b = (i, j) if int(i) < int(j) else (j, i)
+    return edge_pad(base, round_, a, b, shape, wire, tag)
+
+
+def group_mask(base, round_, i: int, group, shape, wire=None,
+               tag: int = 0):
+    """Net pad sender i adds in the group-sum construction."""
+    net = jnp.zeros(shape, RING_DTYPE[wire])
+    for j in group:
+        if int(j) == int(i):
+            continue
+        p = pair_pad(base, round_, i, j, shape, wire, tag)
+        net = net + p if int(i) < int(j) else net - p
+    return net
+
+
+def group_wire(payload_row, base, round_, i: int, group, wire=None,
+               tag: int = 0):
+    """What sender i ships for an unweighted in-neighborhood sum."""
+    bits = ring_bits(payload_row, wire)
+    return bits + group_mask(base, round_, i, group, bits.shape, wire, tag)
+
+
+def dropout_correction(base, round_, dropped: int, survivors, shape,
+                       wire=None, tag: int = 0):
+    """Σ_{i∈survivors} s_i,d · M_i,d — the uncancelled pads a dropped
+    sender left in the survivors' wire sum. Subtract it and the group sum
+    over the survivors is exact again (reconstruct-and-subtract)."""
+    corr = jnp.zeros(shape, RING_DTYPE[wire])
+    for i in survivors:
+        if int(i) == int(dropped):
+            continue
+        p = pair_pad(base, round_, i, dropped, shape, wire, tag)
+        corr = corr + p if int(i) < int(dropped) else corr - p
+    return corr
+
+
+def secagg_mask_bytes(n_edges: int, n_params: int, wire=None,
+                      *, rows: int = 1) -> int:
+    """Pad bytes the PRG generates per round: one payload-sized pad per
+    directed wire edge (int8 adds one uint32 pad per row for the scale).
+    The WIRE bytes are unchanged — the OTP is in place, word for word —
+    which is what the bench_guard mask-accounting gate pins."""
+    per_edge = n_params * {None: 4, "fp32": 4, "bf16": 2, "int8": 1}[wire]
+    if wire == "int8":
+        per_edge += 4 * rows
+    return int(n_edges) * per_edge

@@ -119,6 +119,46 @@ def participation_cost(cfg: ModelConfig, enrolled: int, sample_k: int, *,
     }
 
 
+def privacy_cost(cfg: ModelConfig, w: int, rounds: int, *, wire=None,
+                 adjacency=None, secagg: bool = True,
+                 dp_sigma: float = 0.0,
+                 dp_delta: float = 1e-5) -> Dict[str, float]:
+    """Privacy column for a dry-run: what the secagg wire and the DP
+    noise stage cost per round, in the same algorithmic-contract terms as
+    ``gossip_cost``.
+
+    * ``pad_bytes`` — PRG pad material per round (one payload-sized pad
+      per directed edge; ``roofline.secagg_pad_bytes``). The WIRE bytes
+      are zero extra: the OTP masks in place in the wire format's
+      integer ring, so a masked round ships exactly the plaintext
+      round's bytes — that invariant is the bench_guard accounting gate.
+    * ``epsilon`` — the naive basic-composition Gaussian accountant over
+      ``rounds`` (``roofline.dp_epsilon``; inf when dp_sigma == 0).
+    """
+    import numpy as np
+
+    from repro.core.topology import make_topology
+    from repro.launch.roofline import dp_epsilon, secagg_pad_bytes
+
+    sds = model_mod.abstract_params(cfg)
+    leaves = jax.tree.leaves(sds)
+    n_params = sum(int(np.prod(s.shape)) for s in leaves)
+    if adjacency is None:
+        adjacency = make_topology("dense", w, w - 1)
+    pads = (secagg_pad_bytes(adjacency, n_params, wire, rows=len(leaves))
+            if secagg else {"directed_edges": 0, "pad_bytes_per_edge": 0.0,
+                            "pad_bytes": 0.0, "wire_overhead_bytes": 0.0})
+    return {
+        **pads,
+        "wire": wire or "fp32",
+        "secagg": bool(secagg),
+        "dp_sigma": float(dp_sigma),
+        "dp_delta": float(dp_delta),
+        "rounds": int(rounds),
+        "epsilon": dp_epsilon(dp_sigma, rounds, delta=dp_delta),
+    }
+
+
 def worker_shard_cost(cfg: ModelConfig, w: int, shards: int, *, wire=None,
                       adjacency=None) -> Dict[str, float]:
     """Cross-shard cost column for a worker-axis-sharded round program.

@@ -291,6 +291,35 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                   f"({p0['wire_reduction']:.0f}x wire cut; a user is "
                   f"observed every "
                   f"~{p0['rounds_between_participations']:.0f} rounds)")
+        # privacy column: the secagg wire's pad-material cost (the wire
+        # bytes themselves are UNCHANGED — the OTP masks in place in the
+        # wire format's integer ring) and the naive DP accountant over
+        # the scenario horizon (launch/costing.privacy_cost)
+        from repro.launch.costing import privacy_cost
+        pv = {fmt: privacy_cost(cfg, fl_pods, SCENARIO_HORIZON, wire=fmt,
+                                dp_sigma=1.0)
+              for fmt in (None, "bf16", "int8")}
+        pv0 = pv[None]
+        gossip_info["privacy"] = {
+            "directed_edges": pv0["directed_edges"],
+            "pad_gbytes_per_round": {
+                fmt or "fp32": c["pad_bytes"] / 1e9
+                for fmt, c in pv.items()},
+            "wire_overhead_bytes": pv0["wire_overhead_bytes"],
+            "dp_epsilon_at_sigma": {
+                f"{sig:g}": rf.dp_epsilon(sig, SCENARIO_HORIZON)
+                for sig in (0.5, 1.0, 2.0)},
+            "dp_delta": 1e-5,
+            "rounds": SCENARIO_HORIZON,
+        }
+        if verbose:
+            eps1 = gossip_info["privacy"]["dp_epsilon_at_sigma"]["1"]
+            print(f"  privacy: secagg pads {pv0['pad_bytes'] / 1e9:.2f} "
+                  f"GB/round fp32 over {pv0['directed_edges']} directed "
+                  f"edges (wire overhead 0 B — in-place OTP); "
+                  f"dp_sigma=1.0 -> eps={eps1:.1f} over "
+                  f"{SCENARIO_HORIZON} rounds (naive composition, "
+                  f"delta=1e-5)")
         if scenario:
             # scenario summary + cost delta: compile the named event
             # timeline over the pod workers and report how churn /

@@ -114,7 +114,21 @@ def run_scenario_sim(args) -> int:
                       aggregation=args.aggregation,
                       use_dts=args.aggregation == "defta",
                       time_machine=not robust,
-                      dts_signal=args.dts_signal)
+                      dts_signal=args.dts_signal,
+                      gossip_dtype="float32" if robust
+                      else args.gossip_wire,
+                      gossip_error_feedback=not args.no_gossip_ef,
+                      secagg="pairwise" if args.secagg and not robust
+                      else None,
+                      secagg_mode=args.secagg_mode,
+                      dp_sigma=args.dp_sigma,
+                      dp_update_clip=args.dp_update_clip)
+    if args.secagg and robust:
+        # make_transport would refuse anyway (robust rules inspect
+        # plaintext models); drop to the same purity downgrade as the
+        # wire so robust baselines stay runnable under a sweep script
+        print(f"aggregation={args.aggregation}: secagg disabled "
+              f"(robust rules need plaintext models)")
     if args.aggregation != "defta":
         print(f"aggregation={args.aggregation}: use_dts={cfg.use_dts} "
               f"time_machine={cfg.time_machine} (baseline purity)")
@@ -161,12 +175,13 @@ def run_scenario_sim(args) -> int:
     print(f"final vanilla acc {m:.3f} ± {s:.3f} "
           f"({stats.get('dispatches', '?')} dispatches, "
           f"{time.time() - t0:.1f}s, epochs={np.asarray(st.epoch).tolist()})")
-    if shards and not args.async_ticks:
+    if (shards or args.secagg) and not args.async_ticks:
         budget = -(-args.sim_epochs // max(args.sim_epochs // 4, 1))
         if stats.get("dispatches", 0) > budget:
             print(f"FAIL: {stats['dispatches']} dispatches > "
-                  f"ceil(epochs/eval_every) = {budget} — the sharded "
-                  f"round program broke the superstep fusion")
+                  f"ceil(epochs/eval_every) = {budget} — the "
+                  f"{'sharded ' if shards else 'secagg '}round program "
+                  f"broke the superstep fusion")
             return 1
     if args.assert_acc and m < args.assert_acc:
         print(f"FAIL: vanilla accuracy {m:.3f} < --assert-acc "
@@ -201,7 +216,13 @@ def run_cross_device_sim(args) -> int:
                       num_sampled=2, local_epochs=args.sim_local_epochs,
                       dts_signal=args.dts_signal,
                       dts_conf_decay=args.cd_conf_decay,
-                      max_staleness=args.max_staleness)
+                      max_staleness=args.max_staleness,
+                      gossip_dtype=args.gossip_wire,
+                      gossip_error_feedback=not args.no_gossip_ef,
+                      secagg="pairwise" if args.secagg else None,
+                      secagg_mode=args.secagg_mode,
+                      dp_sigma=args.dp_sigma,
+                      dp_update_clip=args.dp_update_clip)
     train = TrainConfig(learning_rate=0.05, batch_size=32)
     data = federated_dataset("vector", args.enrolled,
                              np.random.default_rng(cfg.seed),
@@ -371,6 +392,30 @@ def main():
                     help="dump a jax.profiler trace of the run to DIR — "
                          "every engine stage is wrapped in a named scope "
                          "so the trace viewer shows per-stage spans")
+    ap.add_argument("--secagg", action="store_true",
+                    help="pairwise secure-aggregation wire: payloads "
+                         "cross every gossip transport one-time-padded "
+                         "per directed edge in the wire format's integer "
+                         "ring; the receiver unmasks before the weighted "
+                         "sum, so aggregates are exact and int8/bf16+EF "
+                         "compose untouched (docs/ARCHITECTURE.md "
+                         "'Privacy wire'). Scenario runs exit 1 on "
+                         "dispatch-parity violation")
+    ap.add_argument("--secagg-mode", default="edge",
+                    choices=["edge", "masked_geom"],
+                    help="secagg trust fidelity: 'edge' keeps per-peer "
+                         "DTS (receiver-side unmask — simulation "
+                         "fidelity), 'masked_geom' restricts trust to "
+                         "the aggregate-only signal a strong group-sum "
+                         "deployment would leave (the bench's attacked-"
+                         "accuracy delta quantifies the cost)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="DP noise multiplier on the per-round local-"
+                         "update delta: whole-model L2 clip to "
+                         "--dp-update-clip, then N(0,(sigma*clip)^2) "
+                         "per coordinate (0 = off; stage traces away)")
+    ap.add_argument("--dp-update-clip", type=float, default=1.0,
+                    help="L2 clip norm for the --dp-sigma update delta")
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="drop a peer's contribution when its model is "
                          "more than this many rounds stale (0 = off)")
@@ -472,7 +517,11 @@ def main():
                 time_machine=args.pod_time_machine and not robust,
                 gossip_dtype="float32" if robust else args.gossip_wire,
                 gossip_error_feedback=not args.no_gossip_ef,
-                gossip_wire_round=args.gossip_wire_round)
+                gossip_wire_round=args.gossip_wire_round,
+                secagg="pairwise" if args.secagg and not robust else None,
+                secagg_mode=args.secagg_mode,
+                dp_sigma=args.dp_sigma,
+                dp_update_clip=args.dp_update_clip)
 
             # gossip-round horizon = how many gossip rounds the run holds;
             # the scenario's epoch axis is the gossip round index

@@ -1,3 +1,4 @@
+import json
 import os
 import sys
 
@@ -6,3 +7,53 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# Shared golden-parity fixtures (test_engine / test_telemetry / test_secagg)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def golden():
+    """The committed pre-refactor engine digests (golden_engine.json)."""
+    with open(os.path.join(os.path.dirname(__file__),
+                           "golden_engine.json")) as fh:
+        return json.load(fh)
+
+
+@pytest.fixture(scope="session")
+def assert_golden(golden):
+    """assert_golden(name, got): bit-exact digest comparison against the
+    committed golden, with a divergence message naming the entry."""
+    def _check(name, got):
+        want = golden[name]
+        assert got == want, (
+            f"{name}: engine diverged from the pre-refactor golden "
+            f"output.\nwant {want}\ngot  {got}")
+    return _check
+
+
+@pytest.fixture(scope="module")
+def env():
+    """The canonical small world the goldens were captured on
+    (capture_engine_goldens.setup: W=4, avg_peers=2, num_sampled=1)."""
+    from capture_engine_goldens import setup
+    return setup()
+
+
+@pytest.fixture(scope="session")
+def trees_bit_equal():
+    """trees_bit_equal(a, b): leaf-for-leaf np.array_equal over two
+    pytrees — the BITWISE state-parity check."""
+    import jax
+    import numpy as np
+
+    def _eq(a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb)
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(la, lb))
+    return _eq

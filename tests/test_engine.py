@@ -29,84 +29,72 @@ from repro.core.async_defta import run_async_defta
 from repro.core.defta import run_defta
 from repro.core.fedavg import evaluate_server, run_fedavg
 
-GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
-                                     "golden_engine.json")))
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-
-@pytest.fixture(scope="module")
-def env():
-    return setup()
-
-
-def _assert_golden(name, got):
-    want = GOLDEN[name]
-    assert got == want, (
-        f"{name}: unified engine diverged from the pre-refactor golden "
-        f"output.\nwant {want}\ngot  {got}")
+# golden / assert_golden / env / trees_bit_equal fixtures: tests/conftest.py
 
 
 # ---------------------------------------------------------------------------
 # Golden parity (bit-identical vs the pre-refactor engines)
 # ---------------------------------------------------------------------------
 
-def test_golden_defta_static(env):
+def test_golden_defta_static(env, assert_golden):
     data, task, cfg, train = env
     stats = {}
     st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
                             epochs=6, stats=stats)
-    _assert_golden("defta_static", defta_state_digest(st, stats))
+    assert_golden("defta_static", defta_state_digest(st, stats))
 
 
-def test_golden_defta_scenario(env):
+def test_golden_defta_scenario(env, assert_golden):
     data, task, cfg, train = env
     stats = {}
     st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train, data,
                             epochs=6, scenario="churn_signflip",
                             eval_every=3, test_x=data["test_x"],
                             test_y=data["test_y"], stats=stats)
-    _assert_golden("defta_scenario", defta_state_digest(st, stats))
+    assert_golden("defta_scenario", defta_state_digest(st, stats))
 
 
-def test_golden_defta_int8_ef(env):
+def test_golden_defta_int8_ef(env, assert_golden):
     data, task, cfg, train = env
     cfg_q = dataclasses.replace(cfg, gossip_dtype="int8")
     stats = {}
     st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg_q, train,
                             data, epochs=6, gossip_backend="auto",
                             stats=stats)
-    _assert_golden("defta_int8_ef", defta_state_digest(st, stats))
+    assert_golden("defta_int8_ef", defta_state_digest(st, stats))
 
 
-def test_golden_async_target(env):
+def test_golden_async_target(env, assert_golden):
     data, task, cfg, train = env
     stats = {}
     st, _, _, _ = run_async_defta(jax.random.PRNGKey(0), task, cfg, train,
                                   data, ticks=10, target_epochs=3,
                                   stats=stats)
-    _assert_golden("async_target", defta_state_digest(st, stats))
+    assert_golden("async_target", defta_state_digest(st, stats))
 
 
-def test_golden_async_scenario(env):
+def test_golden_async_scenario(env, assert_golden):
     data, task, cfg, train = env
     stats = {}
     st, _, _, _ = run_async_defta(jax.random.PRNGKey(0), task, cfg, train,
                                   data, ticks=8,
                                   scenario="churn_signflip", stats=stats)
-    _assert_golden("async_scenario", defta_state_digest(st, stats))
+    assert_golden("async_scenario", defta_state_digest(st, stats))
 
 
-def test_golden_fedavg_variants(env):
+def test_golden_fedavg_variants(env, assert_golden):
     data, task, cfg, train = env
     st = run_fedavg(jax.random.PRNGKey(0), task, cfg, train, data,
                     epochs=4)
-    _assert_golden("fedavg", {"server": tree_digest(st.server)})
+    assert_golden("fedavg", {"server": tree_digest(st.server)})
     st = run_fedavg(jax.random.PRNGKey(0), task, cfg, train, data,
                     epochs=4, num_malicious=1, server_opt="fedadam")
-    _assert_golden("fedavg_fedadam", {"server": tree_digest(st.server)})
+    assert_golden("fedavg_fedadam", {"server": tree_digest(st.server)})
     st = run_fedavg(jax.random.PRNGKey(0), task, cfg, train, data,
                     epochs=4, sample_workers=2)
-    _assert_golden("fedavg_sampled", {"server": tree_digest(st.server)})
+    assert_golden("fedavg_sampled", {"server": tree_digest(st.server)})
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,575 @@
+"""Privacy-wire property layer: pairwise secure aggregation + the DP
+update-noise stage, proven correct rather than demonstrated.
+
+The wire stage (``core/secagg.py``) one-time-pads every payload in the
+WIRE FORMAT'S OWN INTEGER RING (fp32→uint32, bf16→uint16, int8→uint8;
+int8's fp32 row scales→uint32), so mask cancellation is exact BY
+CONSTRUCTION — bitwise at the fp32 wire, bounded by (equal to) the
+unmasked quantization error at int8. This file pins that down:
+
+* ring roundtrip is bit-exact for every word, NaN/Inf/-0.0 included;
+* pair-seed symmetry (``pair_pad(i,j) == pair_pad(j,i)``, and the legacy
+  float ``mask_for`` primitive) vs DIRECTED edge pads (i→j never equals
+  j→i — the two-time-pad hazard);
+* the wire never equals the plaintext (uniform pads);
+* group-sum masks cancel EXACTLY over any in-neighborhood, and a dropped
+  sender's pads are reconstruct-and-subtracted back out;
+* the int8-masked roundtrip decodes the identical (q, scale) words, so
+  its dequantization error EQUALS the unmasked int8 error;
+* the receiver-side gather mix is bitwise the unmasked gather-sum;
+* golden-parity gate: ``secagg=None, dp_sigma=0`` stays BIT-IDENTICAL to
+  ``golden_engine.json`` across the engine front-ends, and the dp_noise
+  stage / extra round keys trace away when disabled (the PR 8
+  build-time-gating pattern);
+* dropout recovery: churn scenarios and cross-device mid-round dropout
+  under secagg reproduce the unmasked runs (survivor-renormalized rows,
+  vacancy pads, k_min fallback).
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from capture_engine_goldens import defta_state_digest, tree_digest
+
+from repro.config import DeFTAConfig, TrainConfig
+from repro.core import secagg as sa
+from repro.core.async_defta import run_async_defta
+from repro.core.cross_device import run_cross_device
+from repro.core.defta import run_defta
+from repro.core.engine import (build_defta_round, build_pod_round,
+                               make_transport, split_round_keys,
+                               stage_names, uses_update_dp)
+from repro.core.fedavg import run_fedavg
+from repro.core.gossip import (mix_pytree, quantize_rows_int8,
+                               sparse_support, sparse_weights)
+from repro.scenarios.cross_device import CrossDeviceSpec
+
+WIRES = (None, "bf16", "int8")
+
+
+def _payload(rng, wire, shape=(64,)):
+    x = rng.normal(size=shape).astype(np.float32)
+    if wire == "bf16":
+        return jnp.asarray(x).astype(jnp.bfloat16)
+    if wire == "int8":
+        return jnp.asarray(np.clip(np.round(x * 40), -127, 127),
+                           jnp.int8)
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# Ring primitives
+# ---------------------------------------------------------------------------
+
+class TestRingPrimitives:
+    def test_ring_roundtrip_bitwise_every_word(self):
+        """mask→unmask recovers every word bit for bit — including the
+        words float arithmetic would mangle (NaN, ±Inf, -0.0, denormal)."""
+        base = sa.secagg_base_key(0)
+        special = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan,
+                               1e-38, -1e-45], jnp.float32)
+        rng = np.random.default_rng(0)
+        for wire in (None, "fp32", "bf16", "int8"):
+            p = _payload(rng, None if wire == "fp32" else wire, (96,))
+            if wire in (None, "fp32"):
+                p = jnp.concatenate([p, special])
+            elif wire == "bf16":
+                p = jnp.concatenate([p, special.astype(jnp.bfloat16)])
+            pads = sa.edge_pad(base, 3, 1, 2, p.shape, wire)
+            rec = sa.unmask_payload(sa.mask_payload(p, pads, wire), pads,
+                                    wire)
+            np.testing.assert_array_equal(
+                np.asarray(sa.ring_bits(rec, wire)),
+                np.asarray(sa.ring_bits(p, wire)))
+
+    def test_pair_pad_symmetric_edge_pad_directed(self):
+        """pair_pad is keyed on the unordered pair (both endpoints derive
+        the same M_ij); edge_pad is directed (i→j ≠ j→i — reusing one pad
+        both ways in a round would be a two-time pad)."""
+        base = sa.domain_key(sa.secagg_base_key(7), sa.DOMAIN_EDGE)
+        for (i, j) in ((0, 1), (3, 9), (5, 2)):
+            for wire in WIRES:
+                pij = sa.pair_pad(base, 4, i, j, (32,), wire)
+                pji = sa.pair_pad(base, 4, j, i, (32,), wire)
+                np.testing.assert_array_equal(np.asarray(pij),
+                                              np.asarray(pji))
+                dij = sa.edge_pad(base, 4, i, j, (32,), wire)
+                dji = sa.edge_pad(base, 4, j, i, (32,), wire)
+                assert not np.array_equal(np.asarray(dij),
+                                          np.asarray(dji))
+
+    def test_legacy_mask_for_symmetry(self):
+        """The float-domain primitive the extension tests pinned: same
+        mask pytree for both endpoint orderings."""
+        tree = {"a": jnp.zeros((4, 3)), "b": jnp.zeros((5,))}
+        ma = sa.mask_for(tree, 2, 5, round_=1)
+        mb = sa.mask_for(tree, 5, 2, round_=1)
+        for x, y in zip(jax.tree.leaves(ma), jax.tree.leaves(mb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_pads_fresh_per_round_sender_receiver_tag(self):
+        base = sa.domain_key(sa.secagg_base_key(0), sa.DOMAIN_EDGE)
+        ref = sa.edge_pad(base, 1, 2, 3, (64,), None, tag=0)
+        for r, s, d, t in ((2, 2, 3, 0), (1, 4, 3, 0), (1, 2, 5, 0),
+                           (1, 2, 3, 1)):
+            other = sa.edge_pad(base, r, s, d, (64,), None, tag=t)
+            assert not np.array_equal(np.asarray(ref), np.asarray(other))
+
+    def test_wire_never_equals_plaintext(self):
+        """The pad is uniform on the ring: the wire word equals the
+        plaintext word only when the pad word is 0 (~2^-n per word)."""
+        rng = np.random.default_rng(3)
+        base = sa.domain_key(sa.secagg_base_key(3), sa.DOMAIN_EDGE)
+        for wire in WIRES:
+            p = _payload(rng, wire, (4096,))
+            bits = np.asarray(sa.ring_bits(p, wire))
+            wire_bits = np.asarray(sa.mask_payload(
+                p, sa.edge_pad(base, 0, 0, 1, p.shape, wire), wire))
+            frac_equal = float((wire_bits == bits).mean())
+            # uint8 ring: P(pad word == 0) = 1/256; give 4x headroom
+            limit = 4.0 / 256 if wire == "int8" else 0.01
+            assert frac_equal < limit, (wire, frac_equal)
+            assert not np.array_equal(wire_bits, bits)
+
+
+# ---------------------------------------------------------------------------
+# Group-sum cancellation + dropout recovery (the Bonawitz shape)
+# ---------------------------------------------------------------------------
+
+class TestGroupSum:
+    @pytest.mark.parametrize("wire", WIRES)
+    @pytest.mark.parametrize("seed", (0, 1, 2))
+    def test_exact_cancellation_over_in_neighborhood(self, wire, seed):
+        """Σ_i group_wire(x_i) ≡ Σ_i ring(x_i) mod 2^n, EXACTLY, for a
+        random in-neighborhood of a random topology."""
+        rng = np.random.default_rng(seed)
+        w = 9
+        group = sorted(rng.choice(w, size=rng.integers(2, w + 1),
+                                  replace=False).tolist())
+        base = sa.domain_key(sa.secagg_base_key(seed), sa.DOMAIN_EDGE)
+        xs = {i: _payload(rng, wire, (128,)) for i in group}
+        total = sum(np.asarray(sa.group_wire(xs[i], base, 5, i, group,
+                                             wire)).astype(np.uint64)
+                    for i in group) % (1 << sa.RING_BITS[wire])
+        want = sum(np.asarray(sa.ring_bits(xs[i], wire)).astype(np.uint64)
+                   for i in group) % (1 << sa.RING_BITS[wire])
+        np.testing.assert_array_equal(total, want)
+
+    @pytest.mark.parametrize("wire", WIRES)
+    def test_dropout_reconstruct_and_subtract(self, wire):
+        """A sender that drops after its peers committed leaves its ±pads
+        uncancelled; dropout_correction reconstructs them from the pair
+        seeds and subtracts — the survivor sum is exact again."""
+        rng = np.random.default_rng(4)
+        group = [0, 2, 3, 6, 7]
+        dropped = 3
+        survivors = [i for i in group if i != dropped]
+        base = sa.domain_key(sa.secagg_base_key(4), sa.DOMAIN_EDGE)
+        xs = {i: _payload(rng, wire, (128,)) for i in group}
+        mod = 1 << sa.RING_BITS[wire]
+        got = sum(np.asarray(sa.group_wire(xs[i], base, 2, i, group,
+                                           wire)).astype(np.uint64)
+                  for i in survivors)
+        corr = np.asarray(sa.dropout_correction(
+            base, 2, dropped, survivors, (128,), wire)).astype(np.uint64)
+        want = sum(np.asarray(sa.ring_bits(xs[i], wire)).astype(np.uint64)
+                   for i in survivors) % mod
+        np.testing.assert_array_equal((got - corr) % mod, want)
+
+
+# ---------------------------------------------------------------------------
+# The receiver-side weighted mix (what the engine actually runs)
+# ---------------------------------------------------------------------------
+
+def _random_world(seed, w=8, f=96):
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((w, w), bool)
+    for i in range(w):
+        peers = rng.choice([j for j in range(w) if j != i], size=3,
+                           replace=False)
+        adj[i, peers] = True
+    P = (adj | np.eye(w, dtype=bool)).astype(np.float32)
+    P /= P.sum(1, keepdims=True)
+    stacked = {"a": jnp.asarray(rng.normal(size=(w, f)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(w, f // 2)),
+                                jnp.float32)}
+    return jnp.asarray(P), adj, stacked
+
+
+class TestReceiverMix:
+    @pytest.mark.parametrize("seed", (0, 5))
+    def test_fp32_mix_bitwise_vs_unmasked_gather_sum(self, seed):
+        """The masked fp32 mix must equal the UNMASKED gather-form sum
+        bit for bit — the wire decodes exactly, so the only float ops are
+        the same weighted sum in the same order."""
+        P, adj, stacked = _random_world(seed)
+        base = sa.secagg_base_key(seed)
+        out = mix_pytree(P, stacked, adjacency=adj, secagg=base,
+                         secagg_round=3)
+        idx, valid = sparse_support(adj)
+        idx_j = jnp.asarray(idx)
+        val = jnp.take_along_axis(P, idx_j, 1) * jnp.asarray(valid)
+        for k, v in stacked.items():
+            flat = v.reshape(v.shape[0], -1)
+            ref = jnp.einsum("wk,wkf->wf", val,
+                             jnp.take(flat, idx_j, axis=0))
+            np.testing.assert_array_equal(
+                np.asarray(out[k]), np.asarray(ref.reshape(v.shape)))
+
+    def test_int8_masked_roundtrip_error_equals_unmasked_quant_error(self):
+        """The masked int8 wire decodes the IDENTICAL (q, scale) words,
+        so its dequantization error against the fp32 payload EQUALS the
+        unmasked int8 quantization error — masking adds nothing."""
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(6, 256)), jnp.float32)
+        q, scale = quantize_rows_int8(x)
+        base = sa.domain_key(sa.secagg_base_key(1), sa.DOMAIN_EDGE)
+        pq = sa.edge_pad(base, 0, 1, 2, q.shape, "int8")
+        ps = sa.edge_pad(base, 0, 1, 2, scale.shape, None, tag=1)
+        q_rec = sa.unmask_payload(sa.mask_payload(q, pq, "int8"), pq,
+                                  "int8")
+        s_rec = sa.unmask_payload(sa.mask_payload(scale, ps, None), ps,
+                                  None)
+        np.testing.assert_array_equal(np.asarray(q_rec), np.asarray(q))
+        np.testing.assert_array_equal(
+            np.asarray(sa.ring_bits(s_rec)), np.asarray(sa.ring_bits(scale)))
+        err_masked = np.abs(np.asarray(
+            q_rec.astype(jnp.float32) * s_rec[:, None] - x))
+        err_plain = np.abs(np.asarray(
+            q.astype(jnp.float32) * scale[:, None] - x))
+        np.testing.assert_array_equal(err_masked, err_plain)
+
+    def test_int8_ef_mix_matches_unmasked_residuals_included(self):
+        """int8 + EF21 under secagg: mixed output AND the error-feedback
+        residual both equal the unmasked quant path exactly (the decoded
+        wire is word-identical, so EF sees the same reconstruction)."""
+        P, adj, stacked = _random_world(2)
+        residual = jax.tree.map(jnp.zeros_like, stacked)
+        base = sa.secagg_base_key(2)
+        on, r_on = mix_pytree(P, stacked, adjacency=adj, wire="int8",
+                              residual=residual, secagg=base,
+                              secagg_round=1)
+        idx, valid = sparse_support(adj)
+        idx_j, val = jnp.asarray(idx), None
+        val = jnp.take_along_axis(P, idx_j, 1) * jnp.asarray(valid)
+        for k, v in stacked.items():
+            flat = (v + residual[k]).reshape(v.shape[0], -1)
+            q, s = quantize_rows_int8(flat)
+            w8 = val * jnp.take(s, idx_j, axis=0)
+            ref = jnp.einsum("wk,wkf->wf", w8,
+                             jnp.take(q, idx_j, axis=0).astype(jnp.float32))
+            np.testing.assert_array_equal(
+                np.asarray(on[k]), np.asarray(ref.reshape(v.shape)))
+            np.testing.assert_array_equal(
+                np.asarray(r_on[k]),
+                np.asarray((flat - q.astype(jnp.float32) * s[:, None])
+                           .reshape(v.shape)))
+
+    def test_secagg_requires_adjacency(self):
+        P, adj, stacked = _random_world(0)
+        with pytest.raises(ValueError):
+            mix_pytree(P, stacked, secagg=sa.secagg_base_key(0),
+                       secagg_round=0)
+
+
+# ---------------------------------------------------------------------------
+# Build-time gating: secagg=None / dp_sigma=0 trace NOTHING extra
+# ---------------------------------------------------------------------------
+
+class TestBuildGating:
+    def test_dp_noise_stage_gated(self, env):
+        data, task, cfg, train = env
+        w = cfg.num_workers
+        adj = np.eye(w, k=1, dtype=bool) | np.eye(w, k=-1, dtype=bool)
+        sizes = np.full(w, 64)
+        mal = np.zeros(w, bool)
+
+        off = stage_names(build_defta_round(task, cfg, train, adj, sizes,
+                                            mal))
+        assert "dp_noise" not in off
+        cfg_dp = dataclasses.replace(cfg, dp_sigma=0.5)
+        on = stage_names(build_defta_round(task, cfg_dp, train, adj,
+                                           sizes, mal))
+        i = on.index("local_train")
+        assert on[i + 1] == "dp_noise"
+        assert tuple(s for s in on if s != "dp_noise") == off
+        # dp_clip > 0 selects the in-training DP-SGD path, not the stage
+        cfg_sgd = dataclasses.replace(cfg, dp_sigma=0.5, dp_clip=1.0)
+        assert not uses_update_dp(cfg_sgd)
+        assert "dp_noise" not in stage_names(
+            build_defta_round(task, cfg_sgd, train, adj, sizes, mal))
+
+    def test_round_key_layout_frozen(self):
+        """The frozen 4-key split the goldens pin; k_wire / k_dp are
+        build-time gated (split(key, n) redraws EVERYTHING when n changes,
+        so an ungated extra split would shift every downstream draw)."""
+        key = jax.random.PRNGKey(0)
+        base = split_round_keys(key, False, False)
+        assert list(base) == ["key", "k_sample", "k_train", "k_noise",
+                              "k_wire", "k_dp"]
+        assert base["k_wire"] is None and base["k_dp"] is None
+        both = split_round_keys(key, True, True)
+        assert both["k_wire"] is not None and both["k_dp"] is not None
+        # deterministic: same (key, gates) → same draws
+        again = split_round_keys(key, True, True)
+        for name in ("key", "k_sample", "k_train", "k_noise", "k_wire",
+                     "k_dp"):
+            np.testing.assert_array_equal(np.asarray(both[name]),
+                                          np.asarray(again[name]))
+        # secagg itself never consumes the round stream: the pad root is a
+        # pure function of cfg.seed, off the engine's key entirely
+        import repro.core.secagg as sa2
+        np.testing.assert_array_equal(
+            np.asarray(sa2.secagg_base_key(7)),
+            np.asarray(sa2.secagg_base_key(7)))
+
+    def test_config_validation(self, env):
+        data, task, cfg, train = env
+        with pytest.raises(ValueError, match="secagg"):
+            make_transport(dataclasses.replace(cfg, secagg="nonesuch"))
+        with pytest.raises(ValueError, match="secagg_mode"):
+            make_transport(dataclasses.replace(cfg, secagg="pairwise",
+                                               secagg_mode="nonesuch"))
+        with pytest.raises(ValueError, match="plaintext"):
+            make_transport(dataclasses.replace(cfg, secagg="pairwise"),
+                           robust=True)
+        cfg_mg = dataclasses.replace(cfg, secagg="pairwise",
+                                     secagg_mode="masked_geom")
+        adj4 = ~np.eye(4, dtype=bool)
+        with pytest.raises(ValueError, match="masked_geom"):
+            build_pod_round(cfg_mg, 4, np.full(4, 64.0),
+                            transport=make_transport(cfg_mg), adj=adj4)
+
+
+# ---------------------------------------------------------------------------
+# Golden-parity gate: secagg=None, dp_sigma=0 is BIT-IDENTICAL to golden
+# across the engine front-ends (the PR 8 telemetry=None pattern)
+# ---------------------------------------------------------------------------
+
+class TestGoldenParity:
+    def _off(self, cfg):
+        return dataclasses.replace(cfg, secagg=None, secagg_mode="edge",
+                                   dp_sigma=0.0)
+
+    def test_defta_static(self, env, assert_golden):
+        data, task, cfg, train = env
+        stats = {}
+        st, _, _, _ = run_defta(jax.random.PRNGKey(0), task,
+                                self._off(cfg), train, data, epochs=6,
+                                stats=stats)
+        assert_golden("defta_static", defta_state_digest(st, stats))
+
+    def test_defta_scenario(self, env, assert_golden):
+        data, task, cfg, train = env
+        stats = {}
+        st, _, _, _ = run_defta(jax.random.PRNGKey(0), task,
+                                self._off(cfg), train, data, epochs=6,
+                                scenario="churn_signflip", eval_every=3,
+                                test_x=data["test_x"],
+                                test_y=data["test_y"], stats=stats)
+        assert_golden("defta_scenario", defta_state_digest(st, stats))
+
+    def test_async_scenario(self, env, assert_golden):
+        data, task, cfg, train = env
+        stats = {}
+        st, _, _, _ = run_async_defta(jax.random.PRNGKey(0), task,
+                                      self._off(cfg), train, data,
+                                      ticks=8, scenario="churn_signflip",
+                                      stats=stats)
+        assert_golden("async_scenario", defta_state_digest(st, stats))
+
+    def test_fedavg(self, env, assert_golden):
+        data, task, cfg, train = env
+        st = run_fedavg(jax.random.PRNGKey(0), task, self._off(cfg),
+                        train, data, epochs=4)
+        assert_golden("fedavg", {"server": tree_digest(st.server)})
+
+    def test_cross_device_bitwise(self, trees_bit_equal):
+        """No committed golden for the participation engine — the gate is
+        bitwise state parity between the default config and an explicit
+        secagg=None/dp_sigma=0 one (same traced program)."""
+        from repro.core.tasks import mlp_task
+        from repro.data.synthetic import federated_dataset
+        task = mlp_task(8, 4, hidden=16)
+        data = federated_dataset("vector", 10, np.random.default_rng(3),
+                                 n_per_worker=24, dim=8, num_classes=4)
+        train = TrainConfig(learning_rate=0.05, batch_size=8)
+        spec = CrossDeviceSpec(enrolled=10, sample_k=4, avg_peers=2,
+                               seed=3)
+        cfg = DeFTAConfig(num_workers=10, num_sampled=1, local_epochs=2)
+        st_a, _ = run_cross_device(jax.random.PRNGKey(0), task, cfg,
+                                   train, data, world=spec, epochs=3)
+        st_b, _ = run_cross_device(jax.random.PRNGKey(0), task,
+                                   self._off(cfg), train, data,
+                                   world=spec, epochs=3)
+        assert trees_bit_equal(st_a.params, st_b.params)
+        assert trees_bit_equal(st_a.conf, st_b.conf)
+
+
+# ---------------------------------------------------------------------------
+# Dropout recovery: churn + cross-device mid-round dropout under secagg
+# ---------------------------------------------------------------------------
+
+class TestDropoutRecovery:
+    def test_churn_scenario_digest_matches_unmasked(self, env):
+        """churn_signflip kills and revives workers mid-run: dead peers'
+        rows leave the survivors' renormalized in-neighborhoods, so their
+        (masked) payloads must vanish from the mix EXACTLY — the secagg
+        run's final state digest equals the unmasked run's."""
+        data, task, cfg, train = env
+        outs = {}
+        for name, c in (("off", cfg),
+                        ("on", dataclasses.replace(cfg,
+                                                   secagg="pairwise"))):
+            stats = {}
+            st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, c, train,
+                                    data, epochs=6,
+                                    scenario="churn_signflip",
+                                    eval_every=3, test_x=data["test_x"],
+                                    test_y=data["test_y"], stats=stats)
+            outs[name] = defta_state_digest(st, stats)
+        assert outs["on"] == outs["off"]
+
+    def test_churn_scenario_int8_secagg_deterministic(self, env):
+        """The int8+EF secagg scenario run is reproducible word for word
+        (pads are pure functions of (seed, round, edge))."""
+        data, task, cfg, train = env
+        c = dataclasses.replace(cfg, secagg="pairwise",
+                                gossip_dtype="int8")
+        digests = []
+        for _ in range(2):
+            stats = {}
+            st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, c, train,
+                                    data, epochs=6,
+                                    scenario="churn_signflip",
+                                    eval_every=3, test_x=data["test_x"],
+                                    test_y=data["test_y"], stats=stats)
+            digests.append(defta_state_digest(st, stats))
+        assert digests[0] == digests[1]
+
+    def test_cross_device_midround_dropout(self, trees_bit_equal):
+        """Mid-round dropout under secagg: the departed slot's masked
+        contribution is renormalized out by the same survive mask as the
+        plaintext path, so the masked world reproduces the unmasked one
+        bit for bit at the fp32 wire (vacancy pads land on zero-weight
+        edges and are where'd out before the accumulate)."""
+        from repro.core.tasks import mlp_task
+        from repro.data.synthetic import federated_dataset
+        task = mlp_task(8, 4, hidden=16)
+        data = federated_dataset("vector", 12, np.random.default_rng(0),
+                                 n_per_worker=24, dim=8, num_classes=4)
+        train = TrainConfig(learning_rate=0.05, batch_size=8)
+        spec = CrossDeviceSpec(enrolled=12, sample_k=4, avg_peers=2,
+                               availability=0.8, dropout=0.5,
+                               straggle=0.2, seed=1)
+        cfg = DeFTAConfig(num_workers=12, num_sampled=1, local_epochs=2)
+        st_off, _ = run_cross_device(jax.random.PRNGKey(0), task, cfg,
+                                     train, data, world=spec, epochs=4)
+        st_on, _ = run_cross_device(
+            jax.random.PRNGKey(0), task,
+            dataclasses.replace(cfg, secagg="pairwise"), train, data,
+            world=spec, epochs=4)
+        for a, b in zip(jax.tree.leaves(st_off.params),
+                        jax.tree.leaves(st_on.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree.leaves(st_on.params))
+
+    def test_cross_device_kmin_fallback_finite(self):
+        """Starved cohorts (heavy unavailability) hit the k_min identity
+        fallback; with secagg armed the vacancy slots' pads must not leak
+        NaN into the carried state."""
+        from repro.core.tasks import mlp_task
+        from repro.data.synthetic import federated_dataset
+        task = mlp_task(8, 4, hidden=16)
+        data = federated_dataset("vector", 8, np.random.default_rng(2),
+                                 n_per_worker=24, dim=8, num_classes=4)
+        train = TrainConfig(learning_rate=0.05, batch_size=8)
+        spec = CrossDeviceSpec(enrolled=8, sample_k=4, avg_peers=2,
+                               availability=0.3, dropout=0.4, seed=2)
+        cfg = DeFTAConfig(num_workers=8, num_sampled=1, local_epochs=2,
+                          secagg="pairwise", gossip_dtype="int8",
+                          dp_sigma=0.3)
+        st, _ = run_cross_device(jax.random.PRNGKey(0), task, cfg, train,
+                                 data, world=spec, epochs=4)
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree.leaves(st.params))
+
+
+# ---------------------------------------------------------------------------
+# The DP update-noise stage
+# ---------------------------------------------------------------------------
+
+class TestUpdateDP:
+    @staticmethod
+    def _stacked(task, w=3):
+        return jax.vmap(task.init)(
+            jax.random.split(jax.random.PRNGKey(0), w))
+
+    def test_clip_then_noise_shape(self, env):
+        """apply_update_dp clips each worker's WHOLE-MODEL delta to
+        dp_update_clip and adds N(0,(σ·clip)²) per coordinate; σ=0
+        returns the clipped delta exactly."""
+        from repro.core.engine import apply_update_dp
+        data, task, cfg, train = env
+        start = self._stacked(task)
+        big = jax.tree.map(lambda v: v + 10.0, start)
+        c = dataclasses.replace(cfg, dp_sigma=0.0, dp_update_clip=1.0)
+        out = apply_update_dp(c, jax.random.PRNGKey(1), start, big)
+        delta = jax.tree.map(lambda a, b: np.asarray(a) - np.asarray(b),
+                             out, start)
+        flat = np.concatenate(
+            [np.asarray(v).reshape(v.shape[0], -1)
+             for v in jax.tree.leaves(delta)], axis=1)
+        np.testing.assert_allclose(np.linalg.norm(flat, axis=1), 1.0,
+                                   rtol=1e-5)
+
+    def test_noise_perturbs_and_is_keyed(self, env):
+        from repro.core.engine import apply_update_dp
+        data, task, cfg, train = env
+        start = self._stacked(task)
+        trained = jax.tree.map(lambda v: v + 0.01, start)
+        c = dataclasses.replace(cfg, dp_sigma=1.0)
+        a = apply_update_dp(c, jax.random.PRNGKey(1), start, trained)
+        b = apply_update_dp(c, jax.random.PRNGKey(2), start, trained)
+        same = apply_update_dp(c, jax.random.PRNGKey(1), start, trained)
+        la, lb, ls = (jax.tree.leaves(t) for t in (a, b, same))
+        assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(la, lb))
+        assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(la, ls))
+
+    def test_dp_epsilon_accountant(self):
+        from repro.launch.roofline import dp_epsilon
+        assert dp_epsilon(0.0, 10) == float("inf")
+        e1 = dp_epsilon(1.0, 1)
+        assert e1 == pytest.approx(np.sqrt(2 * np.log(1.25 / 1e-5)))
+        assert dp_epsilon(1.0, 7) == pytest.approx(7 * e1)
+        assert dp_epsilon(2.0, 7) == pytest.approx(3.5 * e1)
+
+
+# ---------------------------------------------------------------------------
+# Mask-byte accounting (the bench_guard gate's two derivations)
+# ---------------------------------------------------------------------------
+
+class TestAccounting:
+    def test_mask_bytes_matches_roofline(self):
+        from repro.launch.roofline import secagg_pad_bytes
+        rng = np.random.default_rng(0)
+        adj = rng.random((12, 12)) < 0.3
+        np.fill_diagonal(adj, True)          # self-loops must not count
+        a = adj.copy()
+        np.fill_diagonal(a, False)
+        for wire in WIRES:
+            roof = secagg_pad_bytes(adj, 1000, wire, rows=3)
+            realized = sa.secagg_mask_bytes(int(a.sum()), 1000, wire,
+                                            rows=3)
+            assert float(realized) == roof["pad_bytes"]
+            assert roof["wire_overhead_bytes"] == 0.0

@@ -62,6 +62,32 @@ def test_sharded_run_matches_single_device():
     """)
 
 
+def test_sharded_secagg_wire_parity():
+    """The privacy wire rides the sharded ring (DOMAIN_SHARD pads on the
+    ppermute channels): pads cancel edge-exactly across shard boundaries,
+    so a secagg sharded run matches both the plaintext sharded run and
+    the single-device secagg run — on the fp32 and the int8+EF wire."""
+    run_py(PARITY_PRELUDE + """
+        import dataclasses
+        cfg, train, data, task = build(16)
+        key = jax.random.PRNGKey(0)
+        cfg_s = dataclasses.replace(cfg, secagg="pairwise")
+        st_plain, *_ = run_defta(key, task, cfg, train, data, epochs=3,
+                                 shards=4)
+        st_sec, *_ = run_defta(key, task, cfg_s, train, data, epochs=3,
+                               shards=4)
+        st_one, *_ = run_defta(key, task, cfg_s, train, data, epochs=3)
+        assert err(st_plain.params, st_sec.params) < 5e-4
+        assert err(st_one.params, st_sec.params) < 5e-4
+        cfg_q = dataclasses.replace(cfg_s, gossip_dtype="int8")
+        st_q, *_ = run_defta(key, task, cfg_q, train, data, epochs=3,
+                             shards=4)
+        st_q1, *_ = run_defta(key, task, cfg_q, train, data, epochs=3)
+        assert err(st_q.params, st_q1.params) < 5e-3
+        print("ok", err(st_plain.params, st_sec.params))
+    """)
+
+
 def test_sharded_run_padded_remainder():
     """W=100 on 8 shards: placement falls back to replicated (warned
     once), the transport pads internally — numerics still match."""

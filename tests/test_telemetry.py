@@ -35,20 +35,7 @@ from repro.scenarios.cross_device import CrossDeviceSpec
 from repro.telemetry import (JsonlSink, MetricSpec, RunLedger, Telemetry,
                              run_manifest)
 
-GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
-                                     "golden_engine.json")))
-
-
-@pytest.fixture(scope="module")
-def env():
-    return setup()
-
-
-def _trees_bit_equal(a, b):
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert len(la) == len(lb)
-    return all(np.array_equal(np.asarray(x), np.asarray(y))
-               for x, y in zip(la, lb))
+# golden / env / trees_bit_equal fixtures: tests/conftest.py
 
 
 # ---------------------------------------------------------------------------
@@ -56,49 +43,49 @@ def _trees_bit_equal(a, b):
 # ---------------------------------------------------------------------------
 
 class TestStateParity:
-    def test_defta_static_telemetry_on_matches_golden(self, env):
+    def test_defta_static_telemetry_on_matches_golden(self, env, golden):
         data, task, cfg, train = env
         stats, led = {}, RunLedger()
         st, _, _, _ = run_defta(jax.random.PRNGKey(0), task, cfg, train,
                                 data, epochs=6, stats=stats, ledger=led)
-        assert defta_state_digest(st, stats) == GOLDEN["defta_static"]
+        assert defta_state_digest(st, stats) == golden["defta_static"]
         # legacy stats view unchanged by the ledger unification
         assert stats == {"dispatches": 1, "epochs": 6}
         assert led.as_stats() == {"dispatches": 1, "epochs": 6}
 
-    def test_defta_scenario_state_bitwise_parity(self, env):
+    def test_defta_scenario_state_bitwise_parity(self, env, trees_bit_equal):
         data, task, cfg, train = env
         run = lambda ledger: run_defta(
             jax.random.PRNGKey(0), task, cfg, train, data, epochs=6,
             scenario="churn_signflip", ledger=ledger)[0]
         st_off, st_on = run(None), run(RunLedger())
-        assert _trees_bit_equal(st_off.params, st_on.params)
-        assert _trees_bit_equal(st_off.backup, st_on.backup)
+        assert trees_bit_equal(st_off.params, st_on.params)
+        assert trees_bit_equal(st_off.backup, st_on.backup)
         assert np.array_equal(np.asarray(st_off.conf),
                               np.asarray(st_on.conf))
         assert np.array_equal(np.asarray(st_off.epoch),
                               np.asarray(st_on.epoch))
 
-    def test_async_state_bitwise_parity(self, env):
+    def test_async_state_bitwise_parity(self, env, trees_bit_equal):
         data, task, cfg, train = env
         run = lambda ledger: run_async_defta(
             jax.random.PRNGKey(0), task, cfg, train, data, ticks=10,
             target_epochs=3, ledger=ledger)[0]
         st_off, st_on = run(None), run(RunLedger())
-        assert _trees_bit_equal(st_off.params, st_on.params)
+        assert trees_bit_equal(st_off.params, st_on.params)
         assert np.array_equal(np.asarray(st_off.epoch),
                               np.asarray(st_on.epoch))
 
-    def test_fedavg_state_bitwise_parity(self, env):
+    def test_fedavg_state_bitwise_parity(self, env, trees_bit_equal):
         data, task, cfg, train = env
         run = lambda ledger: run_fedavg(
             jax.random.PRNGKey(0), task, cfg, train, data, epochs=4,
             ledger=ledger)
         st_off, st_on = run(None), run(RunLedger())
         assert tree_digest(st_off.server) == tree_digest(st_on.server)
-        assert _trees_bit_equal(st_off.server, st_on.server)
+        assert trees_bit_equal(st_off.server, st_on.server)
 
-    def test_cross_device_state_bitwise_parity(self):
+    def test_cross_device_state_bitwise_parity(self, trees_bit_equal):
         task = mlp_task(8, 4, hidden=16)
         data = federated_dataset("vector", 12, np.random.default_rng(3),
                                  n_per_worker=24, dim=8, num_classes=4)
@@ -111,7 +98,7 @@ class TestStateParity:
             jax.random.PRNGKey(0), task, cfg, train, data, world=spec,
             epochs=6, ledger=ledger)[0]
         st_off, st_on = run(None), run(RunLedger())
-        assert _trees_bit_equal(st_off.params, st_on.params)
+        assert trees_bit_equal(st_off.params, st_on.params)
         assert np.array_equal(np.asarray(st_off.conf),
                               np.asarray(st_on.conf))
 
